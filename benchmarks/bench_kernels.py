@@ -1,0 +1,86 @@
+"""Kernel-level benchmarks.
+
+1. Multi-size paged attention: modeled DMA descriptors + effective HBM
+   bandwidth per page-size class (the TLB-reach analogue on TPU: larger pages
+   = fewer descriptors = closer to peak bandwidth).  The model uses the same
+   HWSpec constants as the MM cost model; the Pallas kernel's DMA granularity
+   is exactly one page.
+2. Wall-clock of the jnp reference paths on CPU (engine-relevant, CSV us).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import HWSpec
+from repro.models.attention import flash_attention
+from repro.models.decode import paged_decode_attention_gather
+
+
+def modeled_paged_read(order: int, *, seq_tokens: int = 32768,
+                       kv_heads: int = 8, head_dim: int = 128,
+                       block_tokens: int = 16) -> dict:
+    hw = HWSpec()
+    page_tokens = block_tokens * 4 ** order
+    page_bytes = page_tokens * kv_heads * head_dim * 2 * 2
+    n_pages = max(1, seq_tokens // page_tokens)
+    t_desc = n_pages * hw.descriptor_ns
+    t_stream = n_pages * page_bytes / hw.effective_bw(page_bytes) * 1e9
+    total_bytes = n_pages * page_bytes
+    eff_bw = total_bytes / ((t_desc + t_stream) / 1e9)
+    return {"order": order, "pages": n_pages, "page_kb": page_bytes / 1024,
+            "read_us": (t_desc + t_stream) / 1e3,
+            "eff_bw_gbs": eff_bw / 1e9,
+            "bw_frac": eff_bw / hw.hbm_bw}
+
+
+def main() -> list[str]:
+    lines = []
+    base = None
+    for order in range(4):
+        r = modeled_paged_read(order)
+        if base is None:
+            base = r["read_us"]
+        lines.append(
+            f"paged_read_order{order},{r['read_us']:.1f},"
+            f"pages={r['pages']};page_kb={r['page_kb']:.0f};"
+            f"eff_bw={r['eff_bw_gbs']:.0f}GB/s;frac={r['bw_frac']:.2f};"
+            f"speedup_vs_o0={base / r['read_us']:.2f}x")
+
+    # CPU wall time of the engine-facing jnp paths
+    rng = np.random.default_rng(0)
+    B, H, KVH, hd, bt, NB, MB = 4, 8, 4, 64, 16, 512, 64
+    q = jnp.asarray(rng.normal(size=(B, H, hd)).astype(np.float32))
+    pk = jnp.asarray(rng.normal(size=(NB, bt, KVH, hd)).astype(np.float32))
+    pv = jnp.asarray(rng.normal(size=(NB, bt, KVH, hd)).astype(np.float32))
+    tbl = jnp.asarray(rng.integers(0, NB, size=(B, MB)).astype(np.int32))
+    lens = jnp.full((B,), MB * bt, jnp.int32)
+    f = jax.jit(lambda *a: paged_decode_attention_gather(
+        *a, block_tokens=bt))
+    f(q, pk, pv, tbl, lens)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        f(q, pk, pv, tbl, lens)[0].block_until_ready()
+    us = (time.perf_counter() - t0) / 20 * 1e6
+    lines.append(f"paged_gather_jnp_cpu,{us:.0f},B={B};S={MB*bt};KVH={KVH}")
+
+    S = 512
+    q2 = jnp.asarray(rng.normal(size=(2, S, 8, 64)).astype(np.float32))
+    k2 = jnp.asarray(rng.normal(size=(2, S, 2, 64)).astype(np.float32))
+    g = jax.jit(lambda a, b, c: flash_attention(a, b, c, chunk=128))
+    g(q2, k2, k2).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        g(q2, k2, k2).block_until_ready()
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    lines.append(f"flash_jnp_cpu,{us:.0f},B=2;S={S};H=8;GQA=4x")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,104 @@
+"""Policy-VM microbenchmarks: interpreter vs XLA-JIT batch execution.
+
+The beyond-paper claim: batching fault decisions through the compiled VM
+amortizes policy cost when hundreds of sequences fault in one engine step.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ArrayMap, FaultContext, JitPolicy, MapRegistry,
+                        PolicyVM, Profile, ProfileRegion, ebpf_mm_program)
+
+
+def _ctx(addr: int) -> np.ndarray:
+    return FaultContext(
+        addr=addr, pid=1, vma_start=0, vma_end=4096, fault_max_order=3,
+        has_profile=1, profile_map_id=0, profile_nregions=2,
+        free_blocks=(100, 25, 6, 1), frag=(0, 100, 400, 900),
+        heat=(5, 5, 5, 5), zero_ns_per_block=700, compact_ns_per_block=1300,
+        descriptor_ns=800, block_bytes=65536).vector()
+
+
+def main() -> list[str]:
+    maps = MapRegistry()
+    m = ArrayMap(512)
+    Profile("app", [ProfileRegion(0, 64, (0, 9000, 90000, 900000)),
+                    ProfileRegion(64, 4096, (0, 0, 0, 0))]).load_into(m)
+    maps.register(m)
+    prog = ebpf_mm_program(0)
+    vm = PolicyVM(prog, maps)
+    jp = JitPolicy(prog, maps)
+
+    n = 512
+    ctxs = np.stack([_ctx(a) for a in np.random.default_rng(0)
+                     .integers(0, 4096, n)])
+
+    t0 = time.perf_counter()
+    for c in ctxs:
+        vm.run(c)
+    host_us = (time.perf_counter() - t0) / n * 1e6
+
+    jp.run_batch(ctxs)                      # compile
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        jp.run_batch(ctxs)
+    batch_us = (time.perf_counter() - t0) / (n * reps) * 1e6
+
+    # predicated (unroll + if-conversion) compiler on an 8-region search
+    # program (the full 64-region Fig-1 unroll compiles in minutes on this
+    # CPU host — a one-time policy-load cost; see EXPERIMENTS.md §Perf #5)
+    from repro.core import Asm, PredicatedPolicy
+    from repro.core.vm import HELPER_PROMOTION_COST
+    a = Asm()
+    a.ldctx("r1", 0)
+    a.movi("r8", -1).movi("r4", 0).movi("r3", 8)
+    a.label("loop")
+    a.mov("r9", "r4").muli("r9", 6)
+    a.ldmap("r5", 0, "r9")
+    a.jgt("r5", "r1", "nx")
+    a.mov("r10", "r9").addi("r10", 1)
+    a.ldmap("r5", 0, "r10")
+    a.jle("r5", "r1", "nx")
+    a.mov("r8", "r9")
+    a.ja("done")
+    a.label("nx")
+    a.addi("r4", 1)
+    a.jnzdec("r3", "loop")
+    a.label("done")
+    a.jlti("r8", 0, "fb")
+    a.movi("r1", 1)
+    a.call(HELPER_PROMOTION_COST)
+    a.exit()
+    a.label("fb")
+    a.movi("r0", -1)
+    a.exit()
+    mini = a.build("mini_fig1")
+    vm2 = PolicyVM(mini, maps)
+    t0 = time.perf_counter()
+    for c in ctxs[:128]:
+        vm2.run(c)
+    mini_host_us = (time.perf_counter() - t0) / 128 * 1e6
+    pp = PredicatedPolicy(mini, maps)
+    pp.run_batch(ctxs)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        pp.run_batch(ctxs)
+    pred_us = (time.perf_counter() - t0) / (n * reps) * 1e6
+
+    return [
+        f"vm_interpreter,{host_us:.2f},per_fault;program_len={len(prog)}",
+        f"vm_jit_batch,{batch_us:.3f},per_fault;batch={n};"
+        f"speedup={host_us / max(batch_us, 1e-9):.0f}x",
+        f"vm_predicated,{pred_us:.3f},per_fault;batch={n};8_region_loop;"
+        f"speedup_vs_interp={mini_host_us / max(pred_us, 1e-9):.0f}x",
+    ]
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

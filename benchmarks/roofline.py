@@ -1,0 +1,123 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute term    = FLOPs / (chips * 197e12)        [bf16 peak, v5e]
+    memory term     = HBM bytes / (chips * 819e9)
+    collective term = per-chip collective bytes / 50e9 [per-link ICI]
+
+FLOPs/bytes come from benchmarks.flops_model (analytic, exact for the model
+code — the CPU backend's cost_analysis misses while-loop trip counts; its raw
+numbers are reported alongside).  Collective bytes come from the compiled
+HLO, with scan-body collectives weighted by trip count (dryrun.py).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES, get_config
+from repro.core.cost import HWSpec
+
+from .flops_model import cell_bytes, cell_flops, model_flops_6nd
+
+HW = HWSpec()
+
+
+def load_records(dryrun_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(f"{dryrun_dir}/*.json")):
+        recs.append(json.loads(Path(f).read_text()))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["devices"]
+    fl = cell_flops(cfg, shape)
+    by = cell_bytes(cfg, shape)
+    mf = model_flops_6nd(cfg, shape)
+
+    t_compute = fl["hlo_equiv"] / (chips * HW.peak_flops_bf16)
+    t_memory = by["total"] / (chips * HW.hbm_bw)
+    coll_dev = rec["collectives"].get("weighted_total_bytes",
+                                      rec["collectives"]["total_bytes"])
+    t_coll = coll_dev / HW.ici_bw_per_link
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_step = max(terms.values())
+    # roofline fraction: useful-model-FLOPs time / bound step time
+    t_model = mf["model_flops"] / (chips * HW.peak_flops_bf16)
+    frac = t_model / t_step if t_step > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "attn_impl": rec.get("attn_impl", "gather"),
+        "chips": chips,
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf["model_flops"], "hlo_equiv_flops": fl["hlo_equiv"],
+        "useful_ratio": mf["model_flops"] / fl["hlo_equiv"],
+        "roofline_fraction": frac,
+        "hbm_bytes": by["total"],
+        "coll_bytes_per_dev": coll_dev,
+        "coll_raw_bytes_per_dev": rec["collectives"]["total_bytes"],
+        "cost_analysis_flops_per_dev": rec.get("cost_analysis", {}).get("flops"),
+        "arg_bytes_per_device": rec.get("arg_bytes_per_device"),
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def build_table(dryrun_dir: str = "results/dryrun", mesh: str = "single",
+                attn: str | None = None) -> list[dict]:
+    rows = []
+    for rec in load_records(dryrun_dir):
+        if rec.get("mesh") != mesh:
+            continue
+        if attn is not None and rec.get("attn_impl") != attn:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["attn_impl"]))
+    return rows
+
+
+def fmt_us(s: float) -> str:
+    return f"{s*1e6:10.1f}"
+
+
+def print_table(rows: list[dict]) -> None:
+    hdr = (f"{'arch':<22}{'shape':<13}{'attn':<14}"
+           f"{'compute_us':>11}{'memory_us':>11}{'coll_us':>11}"
+           f"  {'dominant':<11}{'frac':>6}{'useful':>7}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:<22}{r['shape']:<13}{r['attn_impl']:<14}"
+              f"{fmt_us(r['compute_s']):>11}{fmt_us(r['memory_s']):>11}"
+              f"{fmt_us(r['collective_s']):>11}"
+              f"  {r['dominant']:<11}{r['roofline_fraction']:>6.2f}"
+              f"{r['useful_ratio']:>7.2f}")
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    rows = build_table(args.dryrun_dir, args.mesh)
+    print_table(rows)
+    Path(args.out).write_text(json.dumps(rows, indent=1))
+    print(f"\nwrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

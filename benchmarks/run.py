@@ -1,0 +1,64 @@
+"""Benchmark harness — one section per paper table/figure + framework-level
+benches.  Prints ``name,us_per_call,derived`` CSV.
+
+Sections:
+  fig2_*            the paper's Figure 2 analogue (policy sweep: speedup,
+                    TLB-analogue descriptors, huge-page fraction) + the
+                    hook-overhead microbench ("zero overhead on non-hinted
+                    faults").
+  vm_*              eBPF-VM interpreter vs XLA-JIT batch execution.
+  paged_read_*      multi-size page DMA model (descriptor amortization /
+                    effective HBM bandwidth per page size — the TLB-reach
+                    analogue driving the benefit model).
+  *_cpu             wall-clock of the engine-facing jnp paths on this host.
+  roofline          summary of results/dryrun (if present): per-cell dominant
+                    terms (full table via `python -m benchmarks.roofline`).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import bench_kernels, bench_vm, fig2_policy_sweep
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("fig2", fig2_policy_sweep.main),
+        ("vm", bench_vm.main),
+        ("kernels", bench_kernels.main),
+    ]
+    failures = 0
+    for name, fn in sections:
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:   # noqa: BLE001
+            failures += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+    # roofline summary (if the dry-run artifacts exist)
+    try:
+        from .roofline import build_table
+        rows = build_table("results/dryrun", mesh="single")
+        if rows:
+            doms = {}
+            fracs = []
+            for r in rows:
+                doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+                fracs.append(r["roofline_fraction"])
+            dom_s = "/".join(f"{k}:{v}" for k, v in sorted(doms.items()))
+            print(f"roofline_cells,{len(rows)},dominant={dom_s};"
+                  f"median_frac={sorted(fracs)[len(fracs)//2]:.2f}")
+    except Exception as e:   # noqa: BLE001
+        print(f"roofline_summary,0,unavailable:{type(e).__name__}")
+
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

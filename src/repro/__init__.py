@@ -1,0 +1,23 @@
+"""ebpf-mm-jax: userspace-guided multi-size paged memory management for a
+JAX training/serving framework.
+
+Reproduction (and TPU-native extension) of:
+  "eBPF-mm: Userspace-guided memory management in Linux with eBPF"
+  K. Mores, S. Psomadakis, G. Goumas — NTUA, 2024.
+
+Subpackages:
+  core/        the paper's contribution: policy VM + verifier, profiles,
+               DAMON monitor, cost model, buddy pool, memory manager
+  kernels/     Pallas TPU kernels (paged attention, flash attention, block copy)
+  models/      the 10 assigned architectures as pure-JAX modules
+  configs/     one config per architecture + input-shape sets
+  serving/     continuous-batching engine with eBPF-mm paged KV cache
+  training/    train step, mixed precision, remat, microbatching
+  optim/       AdamW + schedules
+  data/        token pipeline
+  checkpoint/  sharded save/restore + elastic resharding
+  distributed/ sharding rules, gradient compression, fault tolerance
+  launch/      production mesh, multi-pod dry-run, train/serve CLIs
+"""
+
+__version__ = "0.1.0"

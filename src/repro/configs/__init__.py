@@ -1,0 +1,9 @@
+"""Architecture configs (one module per assigned arch) + shape sets."""
+
+from .base import (ARCH_IDS, SHAPES, AttnCfg, MambaCfg, MLACfg, ModelConfig,
+                   MoECfg, ShapeSpec, get_config, get_smoke_config,
+                   supports_shape)
+
+__all__ = ["ARCH_IDS", "SHAPES", "AttnCfg", "MambaCfg", "MLACfg",
+           "ModelConfig", "MoECfg", "ShapeSpec", "get_config",
+           "get_smoke_config", "supports_shape"]

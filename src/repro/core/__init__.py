@@ -1,0 +1,39 @@
+"""eBPF-mm core: userspace-guided multi-size paged memory management.
+
+The paper's contribution as a composable library:
+
+  * :mod:`isa` / :mod:`verifier` / :mod:`vm` / :mod:`jit` — the eBPF-analogue
+    policy VM: restricted bytecode, load-time verifier, host interpreter and
+    an XLA-vectorized batch executor.
+  * :mod:`maps` / :mod:`profiles` — eBPF maps and the userspace profile format.
+  * :mod:`damon` — access monitoring with adaptive regions (benefit signal).
+  * :mod:`cost` — calibrated promotion cost (zeroing + compaction) and the
+    TLB-reach-analogue benefit model for the paged-attention kernel.
+  * :mod:`buddy` / :mod:`mm` — the block-pool allocator and the memory
+    manager with the fault hook (the kernel side).
+  * :mod:`programs` — Figure-1 policy + THP/never baselines as bytecode.
+  * :mod:`khugepaged` — background promotion (async collapse).
+"""
+
+from .buddy import BuddyAllocator, BuddyError, BuddyStats, order_blocks
+from .context import (CTX, CTX_LEN, FIXED_POINT, NUM_ORDERS, POLICY_FALLBACK,
+                      FaultContext, FaultKind)
+from .cost import CostModel, HWSpec, make_cost_model
+from .damon import Damon, Region
+from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
+from .isa import Asm, Insn, Op, Program
+from .jit import JitPolicy, compile_program
+from .khugepaged import Khugepaged, KhugepagedConfig
+from .maps import ArrayMap, MapRegistry
+from .mm import (FaultResult, MemoryManager, MMError, MMOutOfMemory, MMStats,
+                 PageMapping, ProcessState)
+from .predicate import PredicatedPolicy, compile_predicated
+from .profiles import (MAX_PROFILE_REGIONS, REGION_STRIDE, Profile,
+                       ProfileRegion, profile_from_heat)
+from .programs import (ebpf_mm_program, never_program, reclaim_lru_program,
+                       thp_always_program)
+from .verifier import VerifierError, verify
+from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_PROMOTION_COST, HELPER_TRACE,
+                 PolicyVM, RunResult, VMFault)
+
+__all__ = [name for name in dir() if not name.startswith("_")]

@@ -1,0 +1,119 @@
+"""FaultContext — the flat "ctx" struct visible to policy programs.
+
+The Linux eBPF-mm hook hands the program a context describing the faulting
+address, the VMA, and real-time system state (buddy free lists, fragmentation,
+DAMON heat, profile hints).  We mirror that as a fixed int64 vector so both the
+host interpreter and the vectorized jnp JIT can consume it.
+
+All "time" quantities are modeled nanoseconds on the target TPU (v5e), all
+"heat" quantities are DAMON-style access counts per aggregation window, and
+fractional quantities use FIXED_POINT scaling.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import numpy as np
+
+NUM_ORDERS = 4          # page-size classes: 4^order base blocks
+FIXED_POINT = 1000      # scale for fractional ctx fields
+
+
+class CTX(enum.IntEnum):
+    """Offsets into the flat context vector."""
+    ADDR = 0                 # faulting logical block index (within VMA space)
+    PID = 1
+    VMA_START = 2            # VMA bounds, in logical blocks
+    VMA_END = 3
+    FAULT_MAX_ORDER = 4      # max order feasible at ADDR (alignment + VMA fit)
+    HAS_PROFILE = 5          # 1 if the faulting pid has a loaded profile
+    PROFILE_MAP_ID = 6       # map id holding this pid's profile regions
+    PROFILE_NREGIONS = 7
+    # Buddy allocator state (per order)
+    FREE_BLOCKS_O0 = 8
+    FREE_BLOCKS_O1 = 9
+    FREE_BLOCKS_O2 = 10
+    FREE_BLOCKS_O3 = 11
+    # Fragmentation index per order, FIXED_POINT-scaled (0 = none, 1000 = full)
+    FRAG_O0 = 12
+    FRAG_O1 = 13
+    FRAG_O2 = 14
+    FRAG_O3 = 15
+    # DAMON heat of the aligned region enclosing ADDR, per candidate order
+    HEAT_O0 = 16
+    HEAT_O1 = 17
+    HEAT_O2 = 18
+    HEAT_O3 = 19
+    # Cost-model constants (calibrated, modeled ns)
+    ZERO_NS_PER_BLOCK = 20
+    COMPACT_NS_PER_BLOCK = 21
+    DESCRIPTOR_NS = 22       # per page-table-entry / DMA-descriptor overhead
+    BLOCK_BYTES = 23
+    # Misc real-time state
+    KTIME_NS = 24
+    MEM_PRESSURE = 25        # FIXED_POINT-scaled pool utilization
+    FAULT_KIND = 26          # FaultKind enum value
+    SEQ_LEN = 27             # current logical length of the owning sequence
+    CTX_LEN = 28             # number of fields; keep last
+
+
+CTX_LEN = int(CTX.CTX_LEN)
+
+
+class FaultKind(enum.IntEnum):
+    FIRST_TOUCH = 0      # decode crossed into an unmapped logical block
+    PREFILL = 1          # bulk mapping at prefill/mmap time
+    PROMOTION_SCAN = 2   # khugepaged-style async scan considering a collapse
+
+
+@dataclass
+class FaultContext:
+    """Structured view; ``.vector()`` flattens for the VM."""
+    addr: int
+    pid: int
+    vma_start: int
+    vma_end: int
+    fault_max_order: int
+    has_profile: int
+    profile_map_id: int
+    profile_nregions: int
+    free_blocks: tuple[int, int, int, int]
+    frag: tuple[int, int, int, int]
+    heat: tuple[int, int, int, int]
+    zero_ns_per_block: int
+    compact_ns_per_block: int
+    descriptor_ns: int
+    block_bytes: int
+    ktime_ns: int = 0
+    mem_pressure: int = 0
+    fault_kind: int = int(FaultKind.FIRST_TOUCH)
+    seq_len: int = 0
+
+    def vector(self) -> np.ndarray:
+        v = np.zeros(CTX_LEN, dtype=np.int64)
+        v[CTX.ADDR] = self.addr
+        v[CTX.PID] = self.pid
+        v[CTX.VMA_START] = self.vma_start
+        v[CTX.VMA_END] = self.vma_end
+        v[CTX.FAULT_MAX_ORDER] = self.fault_max_order
+        v[CTX.HAS_PROFILE] = self.has_profile
+        v[CTX.PROFILE_MAP_ID] = self.profile_map_id
+        v[CTX.PROFILE_NREGIONS] = self.profile_nregions
+        v[CTX.FREE_BLOCKS_O0:CTX.FREE_BLOCKS_O0 + 4] = self.free_blocks
+        v[CTX.FRAG_O0:CTX.FRAG_O0 + 4] = self.frag
+        v[CTX.HEAT_O0:CTX.HEAT_O0 + 4] = self.heat
+        v[CTX.ZERO_NS_PER_BLOCK] = self.zero_ns_per_block
+        v[CTX.COMPACT_NS_PER_BLOCK] = self.compact_ns_per_block
+        v[CTX.DESCRIPTOR_NS] = self.descriptor_ns
+        v[CTX.BLOCK_BYTES] = self.block_bytes
+        v[CTX.KTIME_NS] = self.ktime_ns
+        v[CTX.MEM_PRESSURE] = self.mem_pressure
+        v[CTX.FAULT_KIND] = self.fault_kind
+        v[CTX.SEQ_LEN] = self.seq_len
+        return v
+
+
+# Return-value convention for fault-hook programs.
+POLICY_FALLBACK = -1     # defer to the kernel default policy

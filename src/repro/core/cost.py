@@ -1,0 +1,93 @@
+"""Promotion cost/benefit model + target-hardware constants.
+
+The paper: "we assume that the primary contributors to this cost are the time
+required to prepare a huge page (zeroing) and the time needed to locate an
+available one (compaction).  We empirically calculate a fixed cost for both."
+
+TPU adaptation: the pool lives in HBM and is framework-managed, so "zeroing"
+is an HBM-bandwidth-bound memset of the page, and "compaction" is block
+migration (read+write over HBM) directed by the buddy allocator.  The
+*benefit* side replaces TLB-miss reduction with DMA-descriptor / page-table
+indirection reduction inside the paged-attention kernel: a page of order k
+covers 4^k base blocks with ONE descriptor, and larger contiguous reads get
+closer to peak HBM bandwidth (small-transfer overhead amortizes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .context import NUM_ORDERS
+
+
+@dataclass(frozen=True)
+class HWSpec:
+    """TPU v5e-class target constants (also used by the roofline analysis)."""
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12          # per chip
+    hbm_bw: float = 819e9                    # bytes/s
+    ici_bw_per_link: float = 50e9            # bytes/s/link
+    # Per-DMA-descriptor fixed overhead for a paged KV read. Order-of-magnitude
+    # of a small async copy issue + bookkeeping. Empirically calibrated on the
+    # kernel microbench; exposed so profiles can be recalibrated per platform.
+    descriptor_ns: float = 800.0
+    # Effective bandwidth derate for small contiguous reads: a transfer of B
+    # bytes achieves hbm_bw * B / (B + small_read_crossover_bytes).
+    small_read_crossover_bytes: float = 64 * 1024.0
+    # Fixed per-page setup cost besides the memset (table update, sync).
+    page_setup_ns: float = 300.0
+
+    def effective_bw(self, transfer_bytes: float) -> float:
+        b = float(transfer_bytes)
+        return self.hbm_bw * b / (b + self.small_read_crossover_bytes)
+
+
+@dataclass
+class CostModel:
+    """Calibrated promotion cost + access benefit, all in modeled ns."""
+    hw: HWSpec
+    block_bytes: int                 # bytes of one base block (KV slab)
+    block_tokens: int = 16
+
+    # ---- cost side (paper: zeroing + compaction) -------------------------
+    def zero_ns_per_block(self) -> int:
+        memset = self.block_bytes / self.hw.hbm_bw * 1e9
+        return int(memset + self.hw.page_setup_ns / 4)  # setup amortized
+
+    def compact_ns_per_block(self) -> int:
+        # migration = read + write of one block over HBM
+        return int(2 * self.block_bytes / self.hw.hbm_bw * 1e9)
+
+    def promotion_cost_ns(self, order: int, free_blocks: int, frag_milli: int) -> int:
+        nblocks = 4 ** order
+        cost = self.zero_ns_per_block() * nblocks
+        if free_blocks <= 0:
+            cost += self.compact_ns_per_block() * nblocks * (1000 + frag_milli) // 1000
+        return int(cost)
+
+    # ---- benefit side (TLB-reach analogue) --------------------------------
+    def access_ns(self, order: int) -> float:
+        """Modeled ns to stream one order-k page through the attention kernel."""
+        page_bytes = self.block_bytes * (4 ** order)
+        return self.hw.descriptor_ns + page_bytes / self.hw.effective_bw(page_bytes) * 1e9
+
+    def access_benefit_ns(self, order: int, heat: float = 1.0) -> int:
+        """ns saved per aggregation window if the region is backed at
+        ``order`` instead of order 0, given ``heat`` accesses per window."""
+        if order == 0:
+            return 0
+        per_page_o0 = self.access_ns(0) * (4 ** order)   # 4^k descriptors
+        per_page_ok = self.access_ns(order)              # 1 descriptor
+        return int(max(0.0, heat * (per_page_o0 - per_page_ok)))
+
+    def descriptor_count(self, orders: list[int]) -> int:
+        """Page-table entries touched to read a mapping = TLB-miss analogue."""
+        return len(orders)
+
+
+def make_cost_model(hw: HWSpec, kv_heads: int, head_dim: int, *,
+                    block_tokens: int = 16, dtype_bytes: int = 2,
+                    layers_fused: int = 1) -> CostModel:
+    """Cost model for a KV pool slab: K+V for ``layers_fused`` layers."""
+    block_bytes = block_tokens * kv_heads * head_dim * 2 * dtype_bytes * layers_fused
+    return CostModel(hw=hw, block_bytes=block_bytes, block_tokens=block_tokens)

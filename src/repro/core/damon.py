@@ -1,0 +1,144 @@
+"""DAMON-analogue: data-access monitoring with controlled overhead.
+
+The paper profiles workloads with DAMON to find hot regions and, online,
+uses DAMON access frequency as the promotion-benefit proxy.  Our signal
+source is better than sampled page faults: the paged-attention Pallas kernel
+emits per-physical-block attention mass (softmax probability summed over the
+block) essentially for free, and decode accesses are counted by the engine.
+
+The region machinery is a faithful port of DAMON's design:
+  * the monitored "address space" is a process's logical block range;
+  * regions carry ``nr_accesses`` aggregated per sampling window;
+  * adaptive regions: random split (budgeted by ``max_nr_regions``) and
+    merge of adjacent regions whose access counts differ less than a
+    threshold — this is what keeps monitoring overhead controlled and
+    independent of address-space size.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .context import NUM_ORDERS
+
+
+@dataclass
+class Region:
+    start: int            # logical block, inclusive
+    end: int              # exclusive
+    nr_accesses: float = 0.0
+    age: int = 0          # aggregation windows since last split/merge change
+
+    def __len__(self) -> int:
+        return self.end - self.start
+
+
+class Damon:
+    """Per-process access monitor over logical blocks."""
+
+    def __init__(self, space_blocks: int, *, min_nr_regions: int = 10,
+                 max_nr_regions: int = 100, merge_threshold: float = 0.15,
+                 ema: float = 0.5, seed: int = 0) -> None:
+        self.space_blocks = max(1, space_blocks)
+        self.min_nr = min_nr_regions
+        self.max_nr = max_nr_regions
+        self.merge_threshold = merge_threshold
+        self.ema = ema
+        self._rng = random.Random(seed)
+        n0 = min(self.min_nr, self.space_blocks)
+        bounds = np.linspace(0, self.space_blocks, n0 + 1).astype(int)
+        self.regions: list[Region] = [
+            Region(int(a), int(b)) for a, b in zip(bounds, bounds[1:]) if b > a
+        ]
+        self.windows = 0
+
+    # ----------------------------------------------------------- aggregation
+    def record(self, heat_per_block: np.ndarray) -> None:
+        """Aggregate one window of per-block heat into the regions.
+
+        ``heat_per_block`` may be shorter than the space (tail = 0).
+        """
+        heat = np.asarray(heat_per_block, dtype=np.float64)
+        csum = np.concatenate([[0.0], np.cumsum(heat)])
+
+        def span_sum(a: int, b: int) -> float:
+            a = min(a, heat.size)
+            b = min(b, heat.size)
+            return float(csum[b] - csum[a]) if b > a else 0.0
+
+        for r in self.regions:
+            mean = span_sum(r.start, r.end) / max(1, len(r))
+            r.nr_accesses = self.ema * mean + (1 - self.ema) * r.nr_accesses
+            r.age += 1
+        self.windows += 1
+        self._merge_regions()
+        self._split_regions()
+
+    def grow(self, new_space_blocks: int) -> None:
+        """The monitored VMA grew (sequence got longer)."""
+        if new_space_blocks <= self.space_blocks:
+            return
+        self.regions.append(Region(self.space_blocks, new_space_blocks))
+        self.space_blocks = new_space_blocks
+
+    # --------------------------------------------------- adaptive regions
+    def _merge_regions(self) -> None:
+        if len(self.regions) <= self.min_nr:
+            return
+        merged: list[Region] = []
+        for r in sorted(self.regions, key=lambda x: x.start):
+            if merged:
+                prev = merged[-1]
+                denom = max(prev.nr_accesses, r.nr_accesses, 1e-9)
+                if (prev.end == r.start
+                        and abs(prev.nr_accesses - r.nr_accesses) / denom
+                        <= self.merge_threshold
+                        and len(merged) + (len(self.regions) - len(merged)) > self.min_nr):
+                    w1, w2 = len(prev), len(r)
+                    prev.nr_accesses = (prev.nr_accesses * w1 + r.nr_accesses * w2) / (w1 + w2)
+                    prev.end = r.end
+                    prev.age = 0
+                    continue
+            merged.append(r)
+        self.regions = merged
+
+    def _split_regions(self) -> None:
+        budget = self.max_nr - len(self.regions)
+        if budget <= 0:
+            return
+        out: list[Region] = []
+        for r in self.regions:
+            if budget > 0 and len(r) >= 2:
+                # DAMON splits at a random offset to discover sub-structure
+                cut = r.start + self._rng.randint(1, len(r) - 1)
+                out.append(Region(r.start, cut, r.nr_accesses, 0))
+                out.append(Region(cut, r.end, r.nr_accesses, 0))
+                budget -= 1
+            else:
+                out.append(r)
+        self.regions = out
+
+    # ------------------------------------------------------------- queries
+    def heat_at(self, addr: int, order: int) -> float:
+        """Mean access count over the aligned order-k page enclosing ``addr``
+        (area-weighted across overlapping monitor regions)."""
+        size = 4 ** order
+        a = (addr // size) * size
+        b = a + size
+        total, covered = 0.0, 0
+        for r in self.regions:
+            lo, hi = max(a, r.start), min(b, r.end)
+            if hi > lo:
+                total += r.nr_accesses * (hi - lo)
+                covered += hi - lo
+        return total / max(1, covered)
+
+    def heat_vector(self, addr: int) -> tuple[int, ...]:
+        return tuple(int(self.heat_at(addr, k)) for k in range(NUM_ORDERS))
+
+    def snapshot(self) -> list[tuple[int, int, float]]:
+        return [(r.start, r.end, r.nr_accesses)
+                for r in sorted(self.regions, key=lambda x: x.start)]

@@ -1,0 +1,72 @@
+"""Hook points in the framework memory manager.
+
+The paper introduces one new eBPF hook on the Linux page-fault path and
+sketches more (reclaim, tiering).  We implement the same surface: named hook
+points a verified program can be attached to.  If nothing is attached, the
+default code path runs with zero overhead — mirroring the paper's "zero
+overhead on non-hinted faults" property.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from .isa import Program
+from .maps import MapRegistry
+from .vm import PolicyVM
+
+HOOK_FAULT = "mm_fault"            # page-size decision on fault (the paper's hook)
+HOOK_RECLAIM = "mm_reclaim"        # victim selection under memory pressure
+HOOK_TIER = "mm_tier"              # page placement for tiering (future work in paper)
+
+KNOWN_HOOKS = (HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER)
+
+
+@dataclass
+class AttachedProgram:
+    program: Program
+    vm: PolicyVM
+    jit: object | None = None       # JitPolicy, lazily built for batch paths
+
+
+class HookRegistry:
+    def __init__(self) -> None:
+        self._hooks: dict[str, AttachedProgram | None] = {h: None for h in KNOWN_HOOKS}
+        self.invocations: dict[str, int] = {h: 0 for h in KNOWN_HOOKS}
+
+    def attach(self, hook: str, program: Program, maps: MapRegistry) -> None:
+        """Verify (load-time, like the kernel) and attach."""
+        if hook not in self._hooks:
+            raise KeyError(f"unknown hook {hook!r}; known: {KNOWN_HOOKS}")
+        vm = PolicyVM(program, maps)   # raises VerifierError on rejection
+        self._hooks[hook] = AttachedProgram(program=program, vm=vm)
+
+    def detach(self, hook: str) -> None:
+        if hook not in self._hooks:
+            raise KeyError(f"unknown hook {hook!r}")
+        self._hooks[hook] = None
+
+    def attached(self, hook: str) -> bool:
+        return self._hooks.get(hook) is not None
+
+    def run(self, hook: str, ctx_vec: np.ndarray) -> int | None:
+        """Run the attached program; None if nothing attached (default path)."""
+        ap = self._hooks.get(hook)
+        if ap is None:
+            return None
+        self.invocations[hook] += 1
+        return ap.vm.run(ctx_vec).ret
+
+    def run_batch(self, hook: str, ctx_mat: np.ndarray) -> np.ndarray | None:
+        """Vectorized decision for a batch of faults (jnp JIT path)."""
+        ap = self._hooks.get(hook)
+        if ap is None:
+            return None
+        if ap.jit is None:
+            from .jit import JitPolicy
+            ap.jit = JitPolicy(ap.program, ap.vm.maps)
+        self.invocations[hook] += ctx_mat.shape[0]
+        return ap.jit.run_batch(ctx_mat)

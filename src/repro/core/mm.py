@@ -1,0 +1,431 @@
+"""The framework memory manager — eBPF-mm's kernel side, adapted to a TPU pool.
+
+Owns the HBM block pool (buddy allocator), per-process page tables, the DAMON
+monitors, and the hook points.  The serving engine calls ``ensure_mapped`` /
+``ensure_range`` as sequences grow (the page-fault analogue); the decision of
+*which page size backs the fault* is delegated to the attached policy program
+exactly as in the paper, with the kernel-default path (THP-greedy or
+base-pages-only) when no program/profile is present.
+
+All costs are accounted in modeled target-TPU nanoseconds via the CostModel,
+so policies can be compared quantitatively on a CPU-only host; the physical
+copies (zeroing, migration, compaction) are emitted as explicit move lists
+that the device executes with the block_copy Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .buddy import BuddyAllocator, BuddyError, order_blocks
+from .context import (CTX, CTX_LEN, NUM_ORDERS, POLICY_FALLBACK, FaultContext,
+                      FaultKind)
+from .cost import CostModel
+from .damon import Damon
+from .hooks import HOOK_FAULT, HOOK_RECLAIM, HookRegistry
+from .maps import ArrayMap, MapRegistry
+from .profiles import MAX_PROFILE_REGIONS, Profile
+
+
+class MMError(Exception):
+    pass
+
+
+class MMOutOfMemory(MMError):
+    def __init__(self, msg: str, victim_pid: int | None = None) -> None:
+        super().__init__(msg)
+        self.victim_pid = victim_pid
+
+
+@dataclass
+class PageMapping:
+    logical_start: int
+    phys_start: int
+    order: int
+
+
+@dataclass
+class ProcessState:
+    pid: int
+    app: str | None
+    vma_end: int                      # logical blocks, VMA is [0, vma_end)
+    damon: Damon
+    page_table: dict[int, PageMapping] = field(default_factory=dict)
+    mapped: set = field(default_factory=set)   # logical block indices
+    accesses: int = 0
+
+    def mappings_sorted(self) -> list[PageMapping]:
+        return [self.page_table[k] for k in sorted(self.page_table)]
+
+
+@dataclass
+class MMStats:
+    faults: int = 0
+    hinted_faults: int = 0
+    fallback_faults: int = 0
+    pages_per_order: list[int] = field(default_factory=lambda: [0] * NUM_ORDERS)
+    blocks_zeroed: int = 0
+    compactions: int = 0
+    compaction_blocks_moved: int = 0
+    promotions: int = 0
+    promotion_blocks_copied: int = 0
+    evictions: int = 0
+    mgmt_ns: int = 0                  # modeled time spent on zero/compact/migrate
+    access_ns: int = 0                # modeled time streaming pages for attention
+    descriptors_touched: int = 0      # TLB-miss analogue
+
+    def snapshot(self) -> dict:
+        return {
+            "faults": self.faults,
+            "hinted_faults": self.hinted_faults,
+            "fallback_faults": self.fallback_faults,
+            "pages_per_order": list(self.pages_per_order),
+            "blocks_zeroed": self.blocks_zeroed,
+            "compactions": self.compactions,
+            "compaction_blocks_moved": self.compaction_blocks_moved,
+            "promotions": self.promotions,
+            "promotion_blocks_copied": self.promotion_blocks_copied,
+            "evictions": self.evictions,
+            "mgmt_ns": self.mgmt_ns,
+            "access_ns": self.access_ns,
+            "descriptors_touched": self.descriptors_touched,
+        }
+
+
+@dataclass
+class FaultResult:
+    order: int
+    phys_start: int
+    hinted: bool
+    compacted: bool
+    moves: list                       # [(src_start, dst_start, order)] for device
+
+
+class MemoryManager:
+    def __init__(self, num_blocks: int, cost: CostModel, *,
+                 default_mode: str = "thp", max_order: int = NUM_ORDERS - 1,
+                 damon_seed: int = 0) -> None:
+        if default_mode not in ("thp", "never"):
+            raise ValueError("default_mode must be 'thp' or 'never'")
+        self.buddy = BuddyAllocator(num_blocks, max_order=max_order)
+        self.cost = cost
+        self.default_mode = default_mode
+        self.max_order = max_order
+        self.hooks = HookRegistry()
+        self.maps = MapRegistry()
+        self.procs: dict[int, ProcessState] = {}
+        self.profiles: dict[str, tuple[Profile, int]] = {}   # app -> (profile, map_id)
+        self.stats = MMStats()
+        self.ktime_ns = 0
+        self._damon_seed = damon_seed
+        self._move_log: list[tuple[int, int, int]] = []   # pending device copies
+
+    # ------------------------------------------------------------- userspace
+    def load_profile(self, profile: Profile) -> int:
+        """Userspace loads an application profile into an eBPF map."""
+        cap = MAX_PROFILE_REGIONS * (2 + NUM_ORDERS)
+        m = ArrayMap(cap, name=f"profile:{profile.app}")
+        profile.load_into(m)
+        map_id = self.maps.register(m)
+        self.profiles[profile.app] = (profile, map_id)
+        return map_id
+
+    def attach_fault_program(self, program) -> None:
+        self.hooks.attach(HOOK_FAULT, program, self.maps)
+
+    def attach_reclaim_program(self, program) -> None:
+        self.hooks.attach(HOOK_RECLAIM, program, self.maps)
+
+    # ------------------------------------------------------------- processes
+    def create_process(self, pid: int, *, app: str | None = None,
+                       vma_blocks: int = 0) -> ProcessState:
+        if pid in self.procs:
+            raise MMError(f"pid {pid} already exists")
+        st = ProcessState(pid=pid, app=app, vma_end=vma_blocks,
+                          damon=Damon(max(1, vma_blocks), seed=self._damon_seed + pid))
+        self.procs[pid] = st
+        return st
+
+    def grow_vma(self, pid: int, new_end: int) -> None:
+        st = self.procs[pid]
+        if new_end > st.vma_end:
+            st.vma_end = new_end
+            st.damon.grow(new_end)
+
+    def free_process(self, pid: int) -> None:
+        st = self.procs.pop(pid)
+        for m in st.page_table.values():
+            self.buddy.free(m.phys_start)
+
+    # ---------------------------------------------------------------- faults
+    def fault_max_order(self, st: ProcessState, addr: int) -> int:
+        k = self.max_order
+        while k > 0:
+            size = order_blocks(k)
+            a = (addr // size) * size
+            if a + size <= st.vma_end and not any(
+                    b in st.mapped for b in range(a, a + size)):
+                return k
+            k -= 1
+        return 0
+
+    def _build_ctx(self, st: ProcessState, addr: int, kind: FaultKind) -> np.ndarray:
+        bstats = self.buddy.stats()
+        has_profile = int(st.app in self.profiles) if st.app else 0
+        map_id, nregions = 0, 0
+        if has_profile:
+            prof, map_id = self.profiles[st.app]
+            nregions = len(prof.regions)
+        fc = FaultContext(
+            addr=addr, pid=st.pid, vma_start=0, vma_end=st.vma_end,
+            fault_max_order=self.fault_max_order(st, addr),
+            has_profile=has_profile, profile_map_id=map_id,
+            profile_nregions=nregions,
+            free_blocks=bstats.free_per_order,
+            frag=bstats.frag_index_milli,
+            heat=st.damon.heat_vector(addr),
+            zero_ns_per_block=self.cost.zero_ns_per_block(),
+            compact_ns_per_block=self.cost.compact_ns_per_block(),
+            descriptor_ns=int(self.cost.hw.descriptor_ns),
+            block_bytes=self.cost.block_bytes,
+            ktime_ns=self.ktime_ns,
+            mem_pressure=bstats.utilization_milli,
+            fault_kind=int(kind),
+            seq_len=st.vma_end,
+        )
+        return fc.vector()
+
+    def _default_order(self, fmax: int) -> int:
+        return min(2, fmax) if self.default_mode == "thp" else 0
+
+    def ensure_mapped(self, pid: int, addr: int,
+                      kind: FaultKind = FaultKind.FIRST_TOUCH) -> FaultResult | None:
+        """The page-fault entry point. Returns None if already mapped."""
+        st = self.procs[pid]
+        if addr >= st.vma_end:
+            raise MMError(f"pid {pid}: fault at {addr} beyond VMA end {st.vma_end}")
+        if addr in st.mapped:
+            return None
+        if not self.hooks.attached(HOOK_FAULT):
+            # the paper's zero-overhead property: with no program attached the
+            # default path runs without building the eBPF context at all
+            fmax = self.fault_max_order(st, addr)
+            return self._install(st, addr, self._default_order(fmax), False)
+        ctx = self._build_ctx(st, addr, kind)
+        fmax = int(ctx[CTX.FAULT_MAX_ORDER])
+        decision = self.hooks.run(HOOK_FAULT, ctx)
+        hinted = decision is not None and decision != POLICY_FALLBACK
+        if not hinted:
+            order = self._default_order(fmax)
+            if decision == POLICY_FALLBACK:
+                self.stats.fallback_faults += 1
+        else:
+            order = max(0, min(int(decision), fmax))
+        return self._install(st, addr, order, hinted)
+
+    def ensure_range(self, pid: int, start: int, end: int) -> list[FaultResult]:
+        """Bulk fault (prefill/mmap population)."""
+        results = []
+        st = self.procs[pid]
+        addr = start
+        while addr < end:
+            r = self.ensure_mapped(pid, addr, FaultKind.PREFILL)
+            if r is None:
+                addr += 1
+            else:
+                size = order_blocks(r.order)
+                addr = (addr // size) * size + size
+                results.append(r)
+        return results
+
+    def _install(self, st: ProcessState, addr: int, order: int,
+                 hinted: bool) -> FaultResult:
+        size = order_blocks(order)
+        a = (addr // size) * size
+        compacted = False
+        moves: list[tuple[int, int, int]] = []
+        phys = None
+        while phys is None:
+            try:
+                phys = self.buddy.alloc(order)
+            except BuddyError:
+                plan = self.buddy.plan_compaction(order)
+                if plan is not None and not compacted:
+                    self._apply_compaction(plan)
+                    moves.extend(plan)
+                    compacted = True
+                    continue
+                if order > 0:           # degrade, like a failed THP allocation
+                    order = order - 1
+                    size = order_blocks(order)
+                    a = (addr // size) * size
+                    continue
+                victim = self._pick_reclaim_victim(exclude=st.pid)
+                raise MMOutOfMemory(
+                    f"pool exhausted on order-0 fault (pid {st.pid})",
+                    victim_pid=victim)
+        m = PageMapping(logical_start=a, phys_start=phys, order=order)
+        st.page_table[a] = m
+        st.mapped.update(range(a, a + size))
+        self.stats.faults += 1
+        if hinted:
+            self.stats.hinted_faults += 1
+        self.stats.pages_per_order[order] += 1
+        self.stats.blocks_zeroed += size
+        self.stats.mgmt_ns += self.cost.zero_ns_per_block() * size
+        return FaultResult(order=order, phys_start=phys, hinted=hinted,
+                           compacted=compacted, moves=moves)
+
+    def _apply_compaction(self, plan: list[tuple[int, int, int]]) -> None:
+        """Buddy already mutated its allocation map; fix page tables and
+        account the migration cost + device move list."""
+        self.stats.compactions += 1
+        remap = {src: dst for src, dst, _ in plan}
+        for st in self.procs.values():
+            for m in st.page_table.values():
+                if m.phys_start in remap:
+                    m.phys_start = remap[m.phys_start]
+        blocks = sum(order_blocks(o) for _, _, o in plan)
+        self.stats.compaction_blocks_moved += blocks
+        self.stats.mgmt_ns += self.cost.compact_ns_per_block() * blocks
+        self._move_log.extend(plan)
+
+    # ---------------------------------------------------------- khugepaged
+    def collapse(self, pid: int, addr: int, to_order: int) -> FaultResult | None:
+        """Promote the aligned window around ``addr`` to one order-k page
+        (async promotion — the khugepaged analogue).  Existing data is
+        migrated via the device copy list; holes are zero-filled."""
+        st = self.procs[pid]
+        size = order_blocks(to_order)
+        a = (addr // size) * size
+        if a + size > st.vma_end:
+            return None
+        old = [m for m in st.page_table.values()
+               if m.logical_start >= a and m.logical_start < a + size]
+        if any(m.order >= to_order for m in old):
+            return None   # already backed at >= target order
+        try:
+            phys = self.buddy.alloc(to_order)
+        except BuddyError:
+            plan = self.buddy.plan_compaction(to_order)
+            if plan is None:
+                return None
+            self._apply_compaction(plan)
+            try:
+                phys = self.buddy.alloc(to_order)
+            except BuddyError:
+                return None
+        moves = []
+        copied = 0
+        for m in old:
+            dst = phys + (m.logical_start - a)
+            moves.append((m.phys_start, dst, m.order))
+            copied += order_blocks(m.order)
+            self.buddy.free(m.phys_start)
+            del st.page_table[m.logical_start]
+        st.page_table[a] = PageMapping(a, phys, to_order)
+        st.mapped.update(range(a, a + size))
+        self.stats.promotions += 1
+        self.stats.promotion_blocks_copied += copied
+        self.stats.blocks_zeroed += size - copied
+        self.stats.mgmt_ns += (self.cost.compact_ns_per_block() * copied
+                               + self.cost.zero_ns_per_block() * (size - copied))
+        self._move_log.extend(moves)
+        return FaultResult(order=to_order, phys_start=phys, hinted=True,
+                           compacted=False, moves=moves)
+
+    # ------------------------------------------------------------- reclaim
+    def _pick_reclaim_victim(self, exclude: int) -> int | None:
+        cands = [st for pid, st in self.procs.items()
+                 if pid != exclude and st.page_table]
+        if not cands:
+            return None
+        cands = sorted(cands, key=lambda s: s.pid)[:4]
+        ctx = np.zeros(CTX_LEN, dtype=np.int64)
+        ctx[CTX.ADDR] = len(cands)
+        for i, st in enumerate(cands):
+            mean_heat = (sum(r.nr_accesses for r in st.damon.regions)
+                         / max(1, len(st.damon.regions)))
+            ctx[CTX.HEAT_O0 + i] = int(mean_heat)
+        choice = self.hooks.run(HOOK_RECLAIM, ctx)
+        if choice is None or choice == POLICY_FALLBACK:
+            # default: lowest pid (FIFO-ish)
+            return cands[0].pid
+        return cands[max(0, min(int(choice), len(cands) - 1))].pid
+
+    def evict_process(self, pid: int) -> None:
+        self.free_process(pid)
+        self.stats.evictions += 1
+
+    # -------------------------------------------------------------- access
+    def record_access(self, pid: int, heat_per_block: np.ndarray) -> None:
+        """Called once per engine step with the kernel-emitted heat stats.
+
+        Access cost is charged only for mappings that were actually READ this
+        step (nonzero attention mass over their span) — sliding-window and
+        sparse-attention models do not stream their cold blocks."""
+        st = self.procs[pid]
+        heat = np.asarray(heat_per_block, dtype=np.float64)
+        st.damon.record(heat)
+        st.accesses += 1
+        csum = np.concatenate([[0.0], np.cumsum(heat)])
+        for m in st.mappings_sorted():
+            lo = min(m.logical_start, heat.size)
+            hi = min(m.logical_start + order_blocks(m.order), heat.size)
+            if hi > lo and csum[hi] - csum[lo] > 0:
+                self.stats.descriptors_touched += 1
+                self.stats.access_ns += int(self.cost.access_ns(m.order))
+
+    def descriptors_for(self, pid: int) -> int:
+        return len(self.procs[pid].page_table)
+
+    # ---------------------------------------------------- device integration
+    def block_table(self, pid: int, max_blocks: int) -> np.ndarray:
+        """Flattened logical->physical base-block map (-1 = unmapped)."""
+        st = self.procs[pid]
+        t = np.full(max_blocks, -1, dtype=np.int32)
+        for m in st.page_table.values():
+            size = order_blocks(m.order)
+            hi = min(m.logical_start + size, max_blocks)
+            for i in range(m.logical_start, hi):
+                t[i] = m.phys_start + (i - m.logical_start)
+        return t
+
+    def page_lists_by_order(self, pids: list[int]) -> dict[int, np.ndarray]:
+        """Per-order page lists for the multi-size paged-attention kernel.
+
+        Returns {order: int32[[seq_slot, logical_page_idx, phys_page_start]]}.
+        seq_slot is the position of the pid in ``pids``.
+        """
+        out = {k: [] for k in range(self.max_order + 1)}
+        for slot, pid in enumerate(pids):
+            st = self.procs[pid]
+            for m in st.mappings_sorted():
+                out[m.order].append(
+                    (slot, m.logical_start // order_blocks(m.order), m.phys_start))
+        return {k: np.asarray(v, dtype=np.int32).reshape(-1, 3)
+                for k, v in out.items()}
+
+    def drain_moves(self) -> list[tuple[int, int, int]]:
+        """Pending (src, dst, order) physical copies for the device."""
+        mv, self._move_log = self._move_log, []
+        return mv
+
+    # ------------------------------------------------------------- misc
+    def tick(self, ns: int = 1_000_000) -> None:
+        self.ktime_ns += ns
+
+    def hugepage_block_fraction(self) -> float:
+        """Fraction of mapped blocks backed by order>0 pages (Fig 2 metric)."""
+        huge = base = 0
+        for st in self.procs.values():
+            for m in st.page_table.values():
+                n = order_blocks(m.order)
+                if m.order > 0:
+                    huge += n
+                else:
+                    base += n
+        total = huge + base
+        return huge / total if total else 0.0

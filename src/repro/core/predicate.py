@@ -1,0 +1,244 @@
+"""Predicated compiler: verified policy program -> straight-line masked jnp.
+
+EXPERIMENTS.md §Perf iteration #5 found the while+switch XLA build of the VM
+no faster than the host interpreter (lax.switch under vmap executes every
+branch each step).  The verifier's guarantees enable the classic fix:
+
+  1. bounded-loop UNROLLING — JNZDEC trip counts are verifier-proven exact
+     constants (const-tracked counter the body cannot write), so each loop
+     expands to exactly `trips` copies of its body with jump targets
+     remapped; the result has only FORWARD jumps;
+  2. IF-CONVERSION — forward-jump-only code executes as one straight line
+     with a per-lane active mask: conditional jumps move lanes into a
+     pending-mask at their target, register writes are `where(active, ...)`.
+
+The compiled function is fully vectorized over a fault batch: one XLA
+program of ~unrolled-length fused vector ops, no control flow at all —
+exactly the shape TPUs (and CPUs) like.  `PredicatedPolicy` is the drop-in
+batch executor the engine uses for prefill fault storms.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .context import CTX
+from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
+                  NUM_REGS, Insn, Op, Program)
+from .jit import _alu_jnp, _cmp_jnp
+from .maps import MapRegistry
+from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_PROMOTION_COST,
+                 HELPER_TRACE, _IMM2REG, _JIMM2REG)
+from .verifier import verify
+
+I64 = jnp.int64
+MAX_UNROLLED = 20_000
+
+
+class _Jump:
+    """Unrolled-form instruction wrapper with an ABSOLUTE target."""
+    __slots__ = ("insn", "target")
+
+    def __init__(self, insn: Insn, target: int | None):
+        self.insn = insn
+        self.target = target
+
+
+def _find_loop(insns: list[Insn]) -> tuple[int, int] | None:
+    for pc, insn in enumerate(insns):
+        if insn.op == Op.JNZDEC:
+            return pc + 1 + insn.imm, pc      # (target, jnzdec_pc)
+    return None
+
+
+def unroll(program: Program, maps: MapRegistry) -> list[_Jump]:
+    """Expand all bounded loops; return instructions with absolute targets."""
+    insns = list(program.insns)
+    while True:
+        facts = verify(Program(insns, program.name), num_maps=len(maps),
+                       map_lens=maps.lens(), helper_ids=HELPER_IDS)
+        loop = _find_loop(insns)
+        if loop is None:
+            break
+        t, jpc = loop
+        trips = facts["loop_trips"][jpc]
+        body = insns[t:jpc]
+        counter = insns[jpc].dst
+        # positions: prefix [0,t) | trips * (body + SUBI) | suffix
+        blen = len(body) + 1
+        new_pos: dict[int, int] = {}
+        for pc in range(t):
+            new_pos[pc] = pc
+        for pc in range(jpc + 1, len(insns)):
+            new_pos[pc] = t + trips * blen + (pc - jpc - 1)
+        end_pos = t + trips * blen
+
+        def map_target(old_tgt: int, copy: int) -> int:
+            if old_tgt < t:
+                return new_pos.get(old_tgt, old_tgt)
+            if t <= old_tgt < jpc:                 # inside body
+                return t + copy * blen + (old_tgt - t)
+            if old_tgt == jpc:                     # "continue": copy's SUBI
+                return t + copy * blen + len(body)
+            return new_pos[old_tgt]                # past the loop
+
+        out: list[Insn] = list(insns[:t])
+        for copy in range(trips):
+            for j, b in enumerate(body):
+                if b.op in (Op.JA,) or b.op in COND_JUMP_REG \
+                        or b.op in COND_JUMP_IMM:
+                    old_tgt = (t + j) + 1 + b.imm
+                    new_tgt = map_target(old_tgt, copy)
+                    here = t + copy * blen + j
+                    out.append(Insn(b.op, b.dst, b.src, new_tgt - here - 1,
+                                    b.src2))
+                else:
+                    out.append(b)
+            out.append(Insn(Op.SUBI, counter, 0, 1))      # faithful counter
+        # suffix with remapped targets
+        for pc in range(jpc + 1, len(insns)):
+            b = insns[pc]
+            if b.op in (Op.JA,) or b.op in COND_JUMP_REG \
+                    or b.op in COND_JUMP_IMM:
+                old_tgt = pc + 1 + b.imm
+                new_tgt = map_target(old_tgt, 0)
+                here = new_pos[pc]
+                out.append(Insn(b.op, b.dst, b.src, new_tgt - here - 1,
+                                b.src2))
+            else:
+                out.append(b)
+        # prefix jumps may cross into/over the loop: remap them too
+        fixed: list[Insn] = []
+        for pc in range(t):
+            b = out[pc]
+            if b.op in (Op.JA,) or b.op in COND_JUMP_REG \
+                    or b.op in COND_JUMP_IMM:
+                old_tgt = pc + 1 + b.imm
+                new_tgt = map_target(old_tgt, 0)
+                fixed.append(Insn(b.op, b.dst, b.src, new_tgt - pc - 1,
+                                  b.src2))
+            else:
+                fixed.append(b)
+        insns = fixed + out[t:]
+        if len(insns) > MAX_UNROLLED:
+            raise ValueError(f"unrolled program too long ({len(insns)})")
+    return [_Jump(i, (pc + 1 + i.imm) if (
+        i.op in (Op.JA,) or i.op in COND_JUMP_REG or i.op in COND_JUMP_IMM)
+        else None) for pc, i in enumerate(insns)]
+
+
+def compile_predicated(program: Program, maps: MapRegistry) -> Callable:
+    """Returns fn(ctx [B, CTX_LEN], map_arrays, map_lens) -> r0 [B]."""
+    code = unroll(program, maps)
+    n = len(code)
+
+    def run(ctx, map_arrays, map_lens):
+        B = ctx.shape[0]
+        regs = [jnp.zeros(B, I64) for _ in range(NUM_REGS)]
+        active = jnp.ones(B, bool)
+        done = jnp.zeros(B, bool)
+        r0_final = jnp.zeros(B, I64)
+        pending: dict[int, jax.Array] = {}
+
+        def write(regs, dst, val, active):
+            regs = list(regs)
+            regs[dst] = jnp.where(active, val, regs[dst])
+            return regs
+
+        for pc, j in enumerate(code):
+            if pc in pending:
+                active = active | pending.pop(pc)
+            insn = j.insn
+            op = insn.op
+            if op in ALU_REG_OPS:
+                val = _alu_jnp(op, regs[insn.dst], regs[insn.src])
+                regs = write(regs, insn.dst, val, active)
+            elif op in ALU_IMM_OPS:
+                imm = jnp.asarray(insn.imm, I64)
+                val = imm if op == Op.MOVI else _alu_jnp(
+                    _IMM2REG[op], regs[insn.dst], imm)
+                regs = write(regs, insn.dst, val, active)
+            elif op == Op.NEG:
+                regs = write(regs, insn.dst, -regs[insn.dst], active)
+            elif op == Op.LDCTX:
+                regs = write(regs, insn.dst, ctx[:, insn.imm], active)
+            elif op in (Op.LDMAP, Op.LDMAPX):
+                if op == Op.LDMAP:
+                    mids = jnp.full((B,), insn.src2, jnp.int32)
+                else:
+                    mids = jnp.clip(regs[insn.src2], 0,
+                                    len(map_arrays) - 1).astype(jnp.int32)
+                idx = regs[insn.src]
+                val = jnp.zeros(B, I64)
+                for k, arr in enumerate(map_arrays):
+                    ok = (idx >= 0) & (idx < map_lens[k]) & (mids == k)
+                    safe = jnp.clip(idx, 0, arr.shape[0] - 1)
+                    val = jnp.where(ok, arr[safe], val)
+                regs = write(regs, insn.dst, val, active)
+            elif op == Op.MAPSZ:
+                regs = write(regs, insn.dst,
+                             jnp.broadcast_to(map_lens[insn.imm], (B,)),
+                             active)
+            elif op == Op.JA:
+                pending[j.target] = pending.get(j.target,
+                                                jnp.zeros(B, bool)) | active
+                active = jnp.zeros(B, bool)
+            elif op in COND_JUMP_REG or op in COND_JUMP_IMM:
+                if op in COND_JUMP_REG:
+                    taken = _cmp_jnp(op, regs[insn.dst], regs[insn.src])
+                else:
+                    taken = _cmp_jnp(_JIMM2REG[op], regs[insn.dst],
+                                     jnp.asarray(insn.src2, I64))
+                taken = taken & active
+                pending[j.target] = pending.get(j.target,
+                                                jnp.zeros(B, bool)) | taken
+                active = active & ~taken
+            elif op == Op.CALL:
+                if insn.imm == HELPER_KTIME:
+                    r0 = ctx[:, CTX.KTIME_NS]
+                elif insn.imm == HELPER_PROMOTION_COST:
+                    order = jnp.clip(regs[1], 0, 3)
+                    nblocks = jnp.asarray(4, I64) ** order
+                    zero = ctx[:, CTX.ZERO_NS_PER_BLOCK] * nblocks
+                    oi = jnp.int32(CTX.FREE_BLOCKS_O0) + order.astype(jnp.int32)
+                    free = jnp.take_along_axis(ctx, oi[:, None], axis=1)[:, 0]
+                    fi = jnp.int32(CTX.FRAG_O0) + order.astype(jnp.int32)
+                    frag = jnp.take_along_axis(ctx, fi[:, None], axis=1)[:, 0]
+                    compact = (ctx[:, CTX.COMPACT_NS_PER_BLOCK] * nblocks
+                               * (1000 + frag) // 1000)
+                    r0 = zero + jnp.where(free > 0, 0, compact)
+                else:   # HELPER_TRACE and friends: host-only, no-op
+                    r0 = jnp.zeros(B, I64)
+                regs = write(regs, 0, r0, active)
+            elif op == Op.EXIT:
+                r0_final = jnp.where(active & ~done, regs[0], r0_final)
+                done = done | active
+                active = jnp.zeros(B, bool)
+            else:   # pragma: no cover
+                raise ValueError(f"unhandled opcode {op}")
+        return r0_final
+
+    return run
+
+
+class PredicatedPolicy:
+    """Batch fault-decision executor (drop-in for JitPolicy.run_batch)."""
+
+    def __init__(self, program: Program, maps: MapRegistry) -> None:
+        self.maps = maps
+        self._fn = jax.jit(compile_predicated(program, maps))
+
+    def run_batch(self, ctx_mat: np.ndarray) -> np.ndarray:
+        with jax.experimental.enable_x64():
+            arrays = tuple(jnp.asarray(self.maps[i].live_array())
+                           for i in range(len(self.maps)))
+            lens = jnp.asarray(self.maps.lens(), I64)
+            if not arrays:
+                arrays = (jnp.zeros(1, I64),)
+                lens = jnp.zeros(1, I64)
+            return np.asarray(self._fn(jnp.asarray(ctx_mat, I64), arrays,
+                                       lens))

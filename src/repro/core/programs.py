@@ -1,0 +1,161 @@
+"""Built-in policy programs, written in the eBPF-flavored ISA.
+
+``ebpf_mm_program()`` is the paper's Figure-1 program:
+
+    1. check the faulting process has a loaded profile,
+    2. search the profile for a region containing the faulting address
+       (bounded loop over the profile map — the eBPF-map search),
+    3. compute the promotion cost for each feasible size from real-time
+       system data (bpf_mm_promotion_cost helper: zeroing + compaction),
+    4. combine with the profiled benefit + live DAMON heat and choose the
+       most beneficial page size.
+
+``thp_always_program`` / ``never_program`` reproduce the kernel baselines
+(THP greedily maps PMD-size = order 2; never = base pages only) as loadable
+programs so the hook overhead itself can be benchmarked.
+"""
+
+from __future__ import annotations
+
+from .context import CTX, POLICY_FALLBACK
+from .isa import Asm, Program
+from .profiles import MAX_PROFILE_REGIONS, REGION_STRIDE
+from .vm import HELPER_PROMOTION_COST
+
+
+def ebpf_mm_program(profile_map_id: int | None = None,
+                    heat_weight_milli: int = 1000) -> Program:
+    """The paper's fault-hook program.
+
+    profile map layout per region (REGION_STRIDE int64s):
+        [start, end, benefit_o0, benefit_o1, benefit_o2, benefit_o3]
+
+    The profile map id is read from ctx (PROFILE_MAP_ID) via the indirect
+    LDMAPX load — one loaded program serves every application's profile
+    (map-in-map, like the userspace framework registering one map per app).
+    Passing ``profile_map_id`` pins a static map instead (single-app mode).
+
+    Register plan:
+        r1 addr / helper arg     r2 nregions / fault_max_order / map id
+        r3 loop bound counter    r4 region index
+        r5 scratch / net benefit r6 best net benefit / map id
+        r7 best order            r8 matched region base (-1 = none)
+        r9, r10 scratch
+    """
+    a = Asm()
+
+    def ld_profile(dst, idx_reg):
+        if profile_map_id is None:
+            a.ldmapx(dst, "r6", idx_reg)
+        else:
+            a.ldmap(dst, profile_map_id, idx_reg)
+
+    a.ldctx("r1", CTX.ADDR)
+    a.ldctx("r2", CTX.HAS_PROFILE)
+    a.jeqi("r2", 0, "fallback")
+    a.ldctx("r6", CTX.PROFILE_MAP_ID)
+    a.ldctx("r2", CTX.PROFILE_NREGIONS)
+    a.jeqi("r2", 0, "fallback")
+
+    # ---- profile region search (bounded loop) ----
+    a.movi("r8", -1)
+    a.movi("r4", 0)
+    a.movi("r3", MAX_PROFILE_REGIONS)
+    a.label("loop")
+    a.jge("r4", "r2", "next_iter")          # idx >= nregions: nothing left
+    a.mov("r9", "r4")
+    a.muli("r9", REGION_STRIDE)
+    ld_profile("r5", "r9")                  # region.start
+    a.jgt("r5", "r1", "next_iter")          # start > addr
+    a.mov("r10", "r9")
+    a.addi("r10", 1)
+    ld_profile("r5", "r10")                 # region.end
+    a.jle("r5", "r1", "next_iter")          # end <= addr
+    a.mov("r8", "r9")                        # match
+    a.ja("search_done")
+    a.label("next_iter")
+    a.addi("r4", 1)
+    a.jnzdec("r3", "loop")
+    a.label("search_done")
+    a.jlti("r8", 0, "fallback")             # unprofiled address -> default path
+
+    # ---- per-order cost/benefit, unrolled for orders 1..3 ----
+    # r6 keeps the profile map id alive for the indirect loads below.
+    a.ldctx("r2", CTX.FAULT_MAX_ORDER)
+    a.movi("r10", 0)                         # best net benefit
+    a.movi("r7", 0)                          # best order
+    for k in (1, 2, 3):
+        skip = f"skip_{k}"
+        a.jlti("r2", k, skip)                # infeasible at this fault
+        # profiled benefit
+        a.mov("r9", "r8")
+        a.addi("r9", 2 + k)
+        ld_profile("r5", "r9")
+        # + live DAMON heat bonus: heat_k * descriptor_ns * (4^k - 1)
+        a.ldctx("r9", CTX.HEAT_O0 + k)
+        a.muli("r9", heat_weight_milli)
+        a.divi("r9", 1000)
+        a.ldctx("r4", CTX.DESCRIPTOR_NS)
+        a.mul("r9", "r4")
+        a.muli("r9", (4 ** k) - 1)
+        a.add("r5", "r9")
+        # - promotion cost (zeroing + compaction, from real-time buddy state)
+        a.movi("r1", k)
+        a.call(HELPER_PROMOTION_COST)        # r0 = cost ns
+        a.sub("r5", "r0")
+        a.jle("r5", "r10", skip)
+        a.mov("r10", "r5")
+        a.movi("r7", k)
+        a.label(skip)
+    a.mov("r0", "r7")
+    a.exit()
+
+    a.label("fallback")
+    a.movi("r0", POLICY_FALLBACK)
+    a.exit()
+    return a.build("ebpf_mm")
+
+
+def thp_always_program() -> Program:
+    """Linux THP greedy baseline: PMD-size (order 2) whenever feasible."""
+    a = Asm()
+    a.ldctx("r0", CTX.FAULT_MAX_ORDER)
+    a.mini("r0", 2)
+    a.maxi("r0", 0)
+    a.exit()
+    return a.build("thp_always")
+
+
+def never_program() -> Program:
+    """Base pages only (THP=never)."""
+    a = Asm()
+    a.movi("r0", 0)
+    a.exit()
+    return a.build("thp_never")
+
+
+def reclaim_lru_program() -> Program:
+    """Default reclaim-hook program: pick the coldest candidate.
+
+    Reclaim ctx reuses the fault ctx layout: HEAT_O0..O3 carry the heat of up
+    to 4 victim candidates and ADDR carries the candidate count; returns the
+    index of the victim (lowest heat), or FALLBACK when no candidates.
+    """
+    a = Asm()
+    a.ldctx("r1", CTX.ADDR)                 # candidate count
+    a.jeqi("r1", 0, "none")
+    a.movi("r0", 0)                          # best idx
+    a.ldctx("r2", CTX.HEAT_O0)               # best heat
+    for i in (1, 2, 3):
+        a.jlei("r1", i, "done")              # fewer than i+1 candidates
+        a.ldctx("r3", CTX.HEAT_O0 + i)
+        a.jge("r3", "r2", f"skip_{i}")
+        a.mov("r2", "r3")
+        a.movi("r0", i)
+        a.label(f"skip_{i}")
+    a.label("done")
+    a.exit()
+    a.label("none")
+    a.movi("r0", POLICY_FALLBACK)
+    a.exit()
+    return a.build("reclaim_lru")

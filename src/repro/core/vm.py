@@ -1,0 +1,223 @@
+"""Host-side interpreter for verified policy programs.
+
+Page-fault handling in the framework happens on the host (the serving
+scheduler decides block allocation before dispatching a device step), so the
+common path runs here.  The batched/vectorized jnp path lives in
+:mod:`repro.core.jit`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
+                  NUM_REGS, Op, Program, _wrap64)
+from .maps import MapRegistry
+from .verifier import verify
+
+# ---------------------------------------------------------------------------
+# Helper (bpf_* analogue) registry
+# ---------------------------------------------------------------------------
+
+# helper signature: fn(regs: list[int], ctx: np.ndarray, state: HelperState) -> int
+HELPER_KTIME = 1
+HELPER_TRACE = 2
+HELPER_PROMOTION_COST = 3
+
+
+@dataclass
+class HelperState:
+    """Mutable state helpers may touch (trace ring buffer, clock)."""
+    ktime_ns: int = 0
+    trace: list = field(default_factory=list)
+    trace_cap: int = 1024
+
+
+def _helper_ktime(regs, ctx, state: HelperState) -> int:
+    return state.ktime_ns
+
+
+def _helper_trace(regs, ctx, state: HelperState) -> int:
+    if len(state.trace) < state.trace_cap:
+        state.trace.append(int(regs[1]))
+    return 0
+
+
+def _helper_promotion_cost(regs, ctx, state: HelperState) -> int:
+    """bpf_mm_promotion_cost(order=r1) — the paper's empirical cost estimate.
+
+    cost(order) = zeroing(order) + (compaction if no free page of that order).
+    Reads the calibrated constants and buddy state out of ctx.
+    """
+    from .context import CTX  # local import to avoid cycle at module load
+    order = max(0, min(3, int(regs[1])))
+    nblocks = 4 ** order
+    zero = int(ctx[CTX.ZERO_NS_PER_BLOCK]) * nblocks
+    free = int(ctx[CTX.FREE_BLOCKS_O0 + order])
+    if free > 0:
+        return zero
+    frag = int(ctx[CTX.FRAG_O0 + order])  # FIXED_POINT scaled (0..1000)
+    compact = (int(ctx[CTX.COMPACT_NS_PER_BLOCK]) * nblocks
+               * (1000 + frag) // 1000)
+    return zero + compact
+
+
+HELPERS: dict[int, Callable] = {
+    HELPER_KTIME: _helper_ktime,
+    HELPER_TRACE: _helper_trace,
+    HELPER_PROMOTION_COST: _helper_promotion_cost,
+}
+HELPER_IDS = frozenset(HELPERS.keys())
+
+
+class VMFault(Exception):
+    """Runtime fault — should be unreachable for verified programs."""
+
+
+@dataclass
+class RunResult:
+    ret: int
+    steps: int
+    trace: list
+
+
+class PolicyVM:
+    """Executes a verified Program against a ctx vector + map registry."""
+
+    def __init__(self, program: Program, maps: MapRegistry | None = None) -> None:
+        self.maps = maps if maps is not None else MapRegistry()
+        self.facts = verify(program, num_maps=len(self.maps),
+                            map_lens=self.maps.lens(), helper_ids=HELPER_IDS)
+        self.program = program
+        self.helper_state = HelperState()
+
+    def run(self, ctx: np.ndarray) -> RunResult:
+        insns = self.program.insns
+        regs = [0] * NUM_REGS
+        pc = 0
+        fuel = self.facts["max_steps"] + 8
+        steps = 0
+        n = len(insns)
+        while True:
+            if steps >= fuel:
+                raise VMFault("fuel exhausted — verifier bound violated (bug)")
+            if not (0 <= pc < n):
+                raise VMFault(f"pc out of bounds: {pc}")
+            insn = insns[pc]
+            op = insn.op
+            steps += 1
+
+            if op in ALU_REG_OPS:
+                a, b = regs[insn.dst], regs[insn.src]
+                regs[insn.dst] = _alu(op, a, b)
+                pc += 1
+            elif op in ALU_IMM_OPS:
+                if op == Op.MOVI:
+                    regs[insn.dst] = _wrap64(insn.imm)
+                else:
+                    regs[insn.dst] = _alu(_IMM2REG[op], regs[insn.dst], insn.imm)
+                pc += 1
+            elif op == Op.NEG:
+                regs[insn.dst] = _wrap64(-regs[insn.dst])
+                pc += 1
+            elif op == Op.LDCTX:
+                regs[insn.dst] = int(ctx[insn.imm])
+                pc += 1
+            elif op == Op.LDMAP:
+                regs[insn.dst] = self.maps[insn.src2].lookup(regs[insn.src])
+                pc += 1
+            elif op == Op.LDMAPX:
+                mid = max(0, min(regs[insn.src2], len(self.maps) - 1))
+                regs[insn.dst] = self.maps[mid].lookup(regs[insn.src])
+                pc += 1
+            elif op == Op.MAPSZ:
+                regs[insn.dst] = len(self.maps[insn.imm])
+                pc += 1
+            elif op == Op.JA:
+                pc += 1 + insn.imm
+            elif op in COND_JUMP_REG:
+                taken = _cmp(op, regs[insn.dst], regs[insn.src])
+                pc += 1 + (insn.imm if taken else 0)
+            elif op in COND_JUMP_IMM:
+                taken = _cmp(_JIMM2REG[op], regs[insn.dst], insn.src2)
+                pc += 1 + (insn.imm if taken else 0)
+            elif op == Op.JNZDEC:
+                regs[insn.dst] = _wrap64(regs[insn.dst] - 1)
+                pc += 1 + (insn.imm if regs[insn.dst] != 0 else 0)
+            elif op == Op.CALL:
+                regs[0] = _wrap64(int(HELPERS[insn.imm](regs, ctx, self.helper_state)))
+                pc += 1
+            elif op == Op.EXIT:
+                return RunResult(regs[0], steps, list(self.helper_state.trace))
+            else:
+                raise VMFault(f"unhandled opcode {op!r}")
+
+
+def _alu(op: Op, a: int, b: int) -> int:
+    if op == Op.MOV:
+        return b
+    if op == Op.ADD:
+        return _wrap64(a + b)
+    if op == Op.SUB:
+        return _wrap64(a - b)
+    if op == Op.MUL:
+        return _wrap64(a * b)
+    if op == Op.DIV:
+        if b == 0:
+            return 0
+        # eBPF divide is unsigned on the bit pattern; we use truncated signed
+        # division toward zero which matches C semantics for the s64 ALU.
+        q = abs(a) // abs(b)
+        return _wrap64(-q if (a < 0) != (b < 0) else q)
+    if op == Op.MOD:
+        if b == 0:
+            return a
+        r = abs(a) % abs(b)
+        return _wrap64(-r if a < 0 else r)
+    if op == Op.AND:
+        return _wrap64(a & b)
+    if op == Op.OR:
+        return _wrap64(a | b)
+    if op == Op.XOR:
+        return _wrap64(a ^ b)
+    if op == Op.LSH:
+        return _wrap64(a << (b & 63))
+    if op == Op.RSH:
+        return _wrap64((a & ((1 << 64) - 1)) >> (b & 63))
+    if op == Op.MIN:
+        return min(a, b)
+    if op == Op.MAX:
+        return max(a, b)
+    raise VMFault(f"bad ALU op {op!r}")
+
+
+def _cmp(op: Op, a: int, b: int) -> bool:
+    if op == Op.JEQ:
+        return a == b
+    if op == Op.JNE:
+        return a != b
+    if op == Op.JLT:
+        return a < b
+    if op == Op.JLE:
+        return a <= b
+    if op == Op.JGT:
+        return a > b
+    if op == Op.JGE:
+        return a >= b
+    if op == Op.JSET:
+        return (a & b) != 0
+    raise VMFault(f"bad cmp op {op!r}")
+
+
+_IMM2REG = {
+    Op.ADDI: Op.ADD, Op.SUBI: Op.SUB, Op.MULI: Op.MUL, Op.DIVI: Op.DIV,
+    Op.MODI: Op.MOD, Op.ANDI: Op.AND, Op.ORI: Op.OR, Op.XORI: Op.XOR,
+    Op.LSHI: Op.LSH, Op.RSHI: Op.RSH, Op.MINI: Op.MIN, Op.MAXI: Op.MAX,
+}
+_JIMM2REG = {
+    Op.JEQI: Op.JEQ, Op.JNEI: Op.JNE, Op.JLTI: Op.JLT, Op.JLEI: Op.JLE,
+    Op.JGTI: Op.JGT, Op.JGEI: Op.JGE, Op.JSETI: Op.JSET,
+}

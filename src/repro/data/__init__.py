@@ -1,0 +1,5 @@
+from .pipeline import (SyntheticLMDataset, batch_specs_for, make_batch_iter,
+                       synthetic_batch)
+
+__all__ = ["SyntheticLMDataset", "batch_specs_for", "make_batch_iter",
+           "synthetic_batch"]

@@ -1,0 +1,102 @@
+"""Data pipeline: deterministic synthetic LM token streams (Zipf-ish unigram
+mixture with local n-gram structure so losses actually decrease), packing,
+and per-arch batch assembly (frames/patches/pos3d for the modality stubs).
+
+At scale each data-parallel host reads only its shard (shard_index /
+num_shards), exactly like a real tokenized-corpus loader; the synthetic
+generator keeps the framework end-to-end runnable offline.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+
+@dataclass
+class SyntheticLMDataset:
+    vocab: int
+    seq_len: int
+    seed: int = 0
+    shard_index: int = 0
+    num_shards: int = 1
+    zipf_a: float = 1.2
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        # fixed bigram transition structure -> learnable signal
+        self._next = rng.integers(0, self.vocab, size=self.vocab)
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        p = 1.0 / np.power(ranks, self.zipf_a)
+        self._p = p / p.sum()
+
+    def sample(self, batch: int, step: int) -> np.ndarray:
+        """[batch, seq_len+1] int32 tokens (inputs+labels)."""
+        rng = np.random.default_rng(
+            (self.seed, step, self.shard_index))
+        S = self.seq_len + 1
+        toks = np.empty((batch, S), np.int32)
+        toks[:, 0] = rng.choice(self.vocab, size=batch, p=self._p)
+        noise = rng.random((batch, S))
+        rand = rng.choice(self.vocab, size=(batch, S), p=self._p)
+        for t in range(1, S):
+            follow = self._next[toks[:, t - 1]]
+            toks[:, t] = np.where(noise[:, t] < 0.75, follow, rand[:, t])
+        return toks
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq_len: int, step: int,
+                    *, seed: int = 0, shard_index: int = 0,
+                    num_shards: int = 1) -> dict:
+    ds = SyntheticLMDataset(cfg.vocab, seq_len, seed=seed,
+                            shard_index=shard_index, num_shards=num_shards)
+    out = {"tokens": jnp.asarray(ds.sample(batch, step))}
+    rng = np.random.default_rng((seed + 1, step))
+    if cfg.enc_dec:
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.enc_frames, cfg.d_model))
+            .astype(np.float32))
+    if cfg.vlm_patches:
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.vlm_patches, cfg.d_model))
+            .astype(np.float32))
+        # text follows the patch grid: t = position, h/w = patch grid coords
+        pos = np.tile(np.arange(seq_len, dtype=np.float32), (3, batch, 1))
+        side = max(1, int(np.sqrt(cfg.vlm_patches)))
+        grid = np.arange(cfg.vlm_patches)
+        pos[1, :, :cfg.vlm_patches] = grid // side
+        pos[2, :, :cfg.vlm_patches] = grid % side
+        pos[0, :, :cfg.vlm_patches] = 0
+        out["pos3d"] = jnp.asarray(pos)
+    return out
+
+
+def batch_specs_for(cfg: ModelConfig, batch: int, seq_len: int,
+                    *, train: bool = True) -> dict:
+    """ShapeDtypeStructs for one batch — used by the dry-run input_specs."""
+    S = seq_len + 1 if train else seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, S), jnp.int32)}
+    if cfg.enc_dec:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_frames, cfg.d_model), jnp.float32)
+    if cfg.vlm_patches:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vlm_patches, cfg.d_model), jnp.float32)
+        specs["pos3d"] = jax.ShapeDtypeStruct((3, batch, seq_len), jnp.float32)
+    return specs
+
+
+def make_batch_iter(cfg: ModelConfig, batch: int, seq_len: int, *,
+                    seed: int = 0, shard_index: int = 0,
+                    num_shards: int = 1) -> Iterator[dict]:
+    step = 0
+    while True:
+        yield synthetic_batch(cfg, batch, seq_len, step, seed=seed,
+                              shard_index=shard_index, num_shards=num_shards)
+        step += 1

@@ -1,0 +1,14 @@
+"""Distributed runtime: sharding rules, flash-decoding shard_map path,
+gradient compression, fault tolerance / elasticity."""
+
+from .compression import (compress_residual, compressed_psum_mean,
+                          dequantize_int8, quantize_int8)
+from .fault import (HeartbeatRegistry, RestartableLoop, SimulatedFailure,
+                    StepWatchdog, elastic_plan)
+from .flashdecode import (get_decode_mesh, paged_decode_attention_sharded,
+                          set_decode_mesh)
+from .sharding import (DEFAULT_RULES, batch_spec, shardings_for_tree,
+                       spec_for, specs_for_tree, zero1_spec,
+                       zero1_shardings_for_tree)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

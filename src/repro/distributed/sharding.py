@@ -1,0 +1,128 @@
+"""Sharding rule engine: logical parameter/activation axes -> mesh axes.
+
+Megatron-style TP on the "model" axis, DP over ("pod","data"); every rule is
+divisibility-checked against the actual dim size and falls back to
+replication when it does not divide (e.g. qwen2-vl's 28 heads on TP=16 —
+recorded in DESIGN.md).  ZeRO-1 additionally shards optimizer state over the
+data axis on the largest still-replicated dim.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# logical axis -> ordered mesh-axis candidates (first that divides wins)
+DEFAULT_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "ff": ("model",),
+    "expert": ("model",),
+    "q_heads": ("model",),
+    "kv_heads": ("model",),
+    "kv_lora": (),
+    "head_dim": (),
+    "embed": (),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    # activations
+    "batch": (("pod", "data"), "data"),
+    "seq": ("data",),
+    "pool_blocks": (("data", "model"),),
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _mesh_axes_present(mesh: Mesh, axis) -> bool:
+    names = mesh.axis_names
+    if isinstance(axis, tuple):
+        return all(a in names for a in axis)
+    return axis in names
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple, mesh: Mesh,
+             rules: dict | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        chosen = None
+        for cand in rules.get(name, ()) if name else ():
+            if not _mesh_axes_present(mesh, cand):
+                continue
+            flat = cand if isinstance(cand, tuple) else (cand,)
+            if any(a in used for a in flat):
+                continue
+            if dim % _axis_size(mesh, cand) == 0:
+                chosen = cand
+                used.update(flat)
+                break
+        parts.append(chosen)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shardings_for_tree(shapes_tree: Pytree, axes_tree: Pytree, mesh: Mesh,
+                       rules: dict | None = None) -> Pytree:
+    """shapes_tree: ShapeDtypeStructs (or arrays); axes_tree: logical axes."""
+    def one(sds, axes):
+        return NamedSharding(mesh, spec_for(tuple(sds.shape), axes, mesh, rules))
+    return jax.tree.map(one, shapes_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def specs_for_tree(shapes_tree: Pytree, axes_tree: Pytree, mesh: Mesh,
+                   rules: dict | None = None) -> Pytree:
+    def one(sds, axes):
+        return spec_for(tuple(sds.shape), axes, mesh, rules)
+    return jax.tree.map(one, shapes_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def zero1_spec(shape: tuple[int, ...], axes: tuple, mesh: Mesh,
+               rules: dict | None = None) -> P:
+    """Optimizer-state sharding: param spec + shard the largest replicated
+    dim over the data axis (ZeRO-1)."""
+    base = spec_for(shape, axes, mesh, rules)
+    parts = list(base) + [None] * (len(shape) - len(base))
+    if "data" not in mesh.axis_names:
+        return base
+    dsz = mesh.shape["data"]
+    best, best_dim = -1, None
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % dsz == 0 and dim > best:
+            best, best_dim = dim, i
+    if best_dim is not None:
+        parts[best_dim] = "data"
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def zero1_shardings_for_tree(shapes_tree, axes_tree, mesh, rules=None):
+    def one(sds, axes):
+        return NamedSharding(mesh, zero1_spec(tuple(sds.shape), axes, mesh, rules))
+    return jax.tree.map(one, shapes_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch-dim sharding: over pod+data when multi-pod."""
+    if "pod" in mesh.axis_names:
+        return P(("pod", "data"))
+    return P("data")

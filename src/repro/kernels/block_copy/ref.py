@@ -1,0 +1,15 @@
+"""Oracle for the block migration kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_copy_ref(pool, src, dst):
+    """pool: [NB, E]; src/dst: [NM] int32 (self-copies allowed as padding).
+    Moves are applied in order; MM compaction plans guarantee destinations
+    are free blocks, so order never matters for real plans."""
+    out = pool
+    for i in range(src.shape[0]):
+        out = out.at[dst[i]].set(out[src[i]])
+    return out

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the flash attention forward kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "soft_cap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, soft_cap=None,
+                    bq=256, bk=256, interpret=False):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               soft_cap=soft_cap, bq=bq, bk=bk,
+                               interpret=interpret)

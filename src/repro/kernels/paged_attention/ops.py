@@ -1,0 +1,39 @@
+"""jit'd wrapper: run the class kernel per size class and combine partials."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_class_partials
+from .ref import combine_partials_ref
+
+F32 = jnp.float32
+
+
+@functools.partial(jax.jit, static_argnames=("block_tokens", "window",
+                                             "orders", "interpret"))
+def paged_decode_attention(q, pool_k, pool_v, page_tables, logical_idxs,
+                           lengths, *, block_tokens: int,
+                           orders: tuple[int, ...],
+                           window: int | None = None,
+                           interpret: bool = False):
+    """Multi-size paged decode attention (Pallas).
+
+    page_tables / logical_idxs: tuples aligned with ``orders``; entry i is
+    the [B, MP_i] table for size class orders[i].
+    Returns (out [B,H,hd] in q.dtype, heats tuple of [B,MP_i] f32).
+    """
+    parts = []
+    heats = []
+    for o, tbl, logical in zip(orders, page_tables, logical_idxs):
+        acc, m, l, heat = paged_class_partials(
+            q, pool_k, pool_v, tbl, logical, lengths,
+            page_blocks=4 ** o, block_tokens=block_tokens, window=window,
+            interpret=interpret)
+        parts.append((acc, m, l))
+        heats.append(heat)
+    out = combine_partials_ref(parts)
+    return out.astype(q.dtype), tuple(heats)

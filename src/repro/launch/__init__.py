@@ -1,0 +1,9 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs.
+
+NOTE: launch.dryrun sets XLA_FLAGS at import — do not import it from test or
+engine code; it is a __main__-style entry point.
+"""
+
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

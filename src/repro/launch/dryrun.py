@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh single,multi --attn gather \
+        --out results/dryrun
+
+Per cell: .lower() -> .compile() must succeed; we record compile wall time,
+compiled.cost_analysis() (FLOPs / bytes, per partition), per-device collective
+operand bytes parsed from the post-SPMD HLO (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), and
+compiled.memory_analysis() when the backend provides it (plus an analytic
+per-device argument-bytes estimate that always works on CPU).
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+BUGS in the framework — the run exits nonzero listing them.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ARCH_IDS, SHAPES, get_config, supports_shape)
+from repro.distributed.flashdecode import set_decode_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import Cell, make_cell
+from repro.models.decode import decode_step, prefill_step
+from repro.training.train_step import make_train_step
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*[a-z0-9]+\[[0-9,]*\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_BODY_REF_RE = re.compile(r"body=%?([\w.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->")
+
+
+def collective_bytes(hlo_text: str, body_weight: float = 1.0) -> dict:
+    """Per-device operand bytes of every collective, by op kind.
+
+    XLA's HLO text prints each while-loop BODY once; real execution repeats
+    it trip-count times.  We find body computations via ``body=%name``
+    references on while ops and weight their collectives by ``body_weight``
+    (the scan trip count from the model config) — 'weighted' is the
+    per-step-accurate number the roofline uses.
+    """
+    bodies: set[str] = set()
+    for m in _BODY_REF_RE.finditer(hlo_text):
+        bodies.add(m.group(1))
+
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    weighted: dict[str, float] = {}
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip())
+        if hdr and "{" in line:
+            current_comp = hdr.group(1)
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:        # async pair: count the -start only
+            continue
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        paren = line[line.index("("):]
+        operands = _SHAPE_RE.findall(paren)
+        use = operands if operands else shapes[:1]
+        total = sum(_shape_bytes(d, s) for d, s in use)
+        w = body_weight if current_comp in bodies else 1.0
+        out[kind] = out.get(kind, 0) + total
+        weighted[kind] = weighted.get(kind, 0.0) + total * w
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": out, "count_by_kind": count,
+            "total_bytes": sum(out.values()),
+            "weighted_bytes_by_kind": weighted,
+            "weighted_total_bytes": sum(weighted.values()),
+            "body_weight": body_weight}
+
+
+def arg_bytes_per_device(cell: Cell, mesh) -> int:
+    """Analytic per-device input footprint (always available on CPU)."""
+    ndev = int(np.prod(list(mesh.shape.values())))
+    total = 0
+    for leaf, sh in zip(jax.tree.leaves(cell.args),
+                        jax.tree.leaves(cell.in_shardings,
+                                        is_leaf=lambda x: hasattr(x, "spec"))):
+        try:
+            ss = sh.shard_shape(tuple(leaf.shape))
+            total += int(np.prod(ss)) * leaf.dtype.itemsize
+        except Exception:
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // ndev
+    return total
+
+
+def build_fn(cfg, cell: Cell):
+    if cell.kind == "train":
+        step = make_train_step(cfg, num_micro=1, chunk=1024, remat=True)
+        return step
+    if cell.kind == "prefill":
+        extras = list(cell.meta["extras"].keys())
+
+        def prefill(params, cache, tokens, tbl, *rest):
+            kw = dict(zip(extras, rest))
+            return prefill_step(params, cfg, cache, tokens, tbl, cell.layout,
+                                chunk=1024, **kw)
+        return prefill
+
+    attn_impl = cell.meta["attn_impl"]
+    has_st = "sharded_tables" in cell.meta
+    has_pos3d = cell.meta.get("pos3d", False)
+
+    def serve(params, cache, tokens, lengths, tbl, *rest):
+        rest = list(rest)
+        st = sl = pos3d = None
+        if has_st:
+            st = rest.pop(0)
+            sl = rest.pop(0)
+        if has_pos3d:
+            pos3d = rest.pop(0)
+        return decode_step(params, cfg, cache, tokens, lengths, tbl,
+                           cell.layout, pos3d=pos3d, attn_impl=attn_impl,
+                           sharded_table=st, sharded_logical=sl)
+    return serve
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, attn_impl: str,
+             out_dir: Path, *, force: bool = False) -> dict:
+    tag = f"{arch}.{shape_name}.{mesh_name}.{attn_impl}"
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if rec.get("ok") or rec.get("skipped"):
+            print(f"[cached ] {tag}")
+            return rec
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok_shape, reason = supports_shape(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "attn_impl": attn_impl, "kind": shape.kind}
+    if not ok_shape:
+        rec.update(skipped=True, reason=reason, ok=False)
+        out_path.write_text(json.dumps(rec, indent=1))
+        print(f"[SKIP   ] {tag}: {reason}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    set_decode_mesh(mesh)
+    try:
+        t0 = time.monotonic()
+        cell = make_cell(cfg, shape, mesh, attn_impl=attn_impl)
+        fn = build_fn(cfg, cell)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=cell.in_shardings,
+                             out_shardings=cell.out_shardings)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.monotonic() - t0
+            compiled = lowered.compile()
+            t_compile = time.monotonic() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or k == "optimal_seconds")}
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_size_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            } if mem is not None else None
+        except Exception:
+            mem_rec = None
+        hlo = compiled.as_text()
+        from repro.models.transformer import build_layer_plans, build_segments
+        reps = [seg[2] for seg in build_segments(build_layer_plans(cfg))
+                if seg[0] == "scan"]
+        body_weight = float(np.mean(reps)) if reps else 1.0
+        coll = collective_bytes(hlo, body_weight=body_weight)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            cost_analysis=cost,
+            memory_analysis=mem_rec,
+            arg_bytes_per_device=arg_bytes_per_device(cell, mesh),
+            collectives=coll,
+            hlo_bytes=len(hlo),
+            meta=cell.meta,
+            devices=int(np.prod(list(mesh.shape.values()))),
+        )
+        print(f"[OK     ] {tag}: lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops={cost.get('flops', 0):.3g} "
+              f"coll={coll['total_bytes']/1e6:.1f}MB/dev "
+              f"args={rec['arg_bytes_per_device']/1e9:.2f}GB/dev")
+    except Exception as e:   # noqa: BLE001 — record and continue
+        rec.update(ok=False, skipped=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL   ] {tag}: {type(e).__name__}: {e}")
+    finally:
+        set_decode_mesh(None)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--attn", default="gather",
+                    help="gather | flashdecode | flashdecode_blocksharded")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                attn = args.attn
+                if SHAPES[shape].kind != "decode" and attn != "gather":
+                    attn = "gather"      # flashdecode applies to decode only
+                if attn.startswith("flashdecode") and \
+                        SHAPES[shape].global_batch == 1:
+                    attn = "flashdecode_blocksharded"
+                rec = run_cell(arch, shape, mesh_name, attn, out_dir,
+                               force=args.force)
+                if not rec.get("ok") and not rec.get("skipped"):
+                    failures.append(f"{arch}.{shape}.{mesh_name}")
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

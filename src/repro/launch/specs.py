@@ -1,0 +1,224 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every
+(architecture x input-shape x mesh) dry-run cell.  No device allocation.
+
+Cell kinds:
+  train   -> lowers train_step(params, opt_state, batch)
+  prefill -> lowers prefill_step(params, cache, tokens, block_table, ...)
+  decode  -> lowers serve_step = decode_step(params, cache, tokens, lengths,
+             block_table[, sharded tables when attn_impl=flashdecode*])
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..data.pipeline import batch_specs_for
+from ..distributed.sharding import (DEFAULT_RULES, shardings_for_tree,
+                                    spec_for, zero1_shardings_for_tree)
+from ..models.common import abstract, logical_axes
+from ..models.decode import PagedLayout, cache_spec
+from ..models.transformer import build_layer_plans, build_segments, model_spec
+from ..optim.adamw import AdamWState
+
+Pytree = Any
+BF16 = jnp.bfloat16
+
+BLOCK_TOKENS = 16
+
+
+@dataclass
+class Cell:
+    """Everything the dry-run needs to lower one (arch, shape, mesh) cell."""
+    kind: str
+    args: tuple                 # ShapeDtypeStructs, positional
+    in_shardings: tuple
+    out_shardings: Any
+    layout: PagedLayout | None = None
+    meta: dict | None = None
+
+
+def _data_axes(mesh: Mesh):
+    return tuple(n for n in mesh.axis_names if n not in ("model",))
+
+
+def _batch_sharding(mesh: Mesh, batch: int) -> P:
+    axes = _data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % total == 0:
+        return P(axes)
+    # fall back: shard over plain data if divisible, else replicate
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return P("data")
+    return P()
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    spec = model_spec(cfg)
+    return abstract(spec), shardings_for_tree(abstract(spec),
+                                              logical_axes(spec), mesh)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs: dict):
+    bspec = _batch_sharding(mesh, specs["tokens"].shape[0])
+    out = {}
+    for k, v in specs.items():
+        if k == "pos3d":
+            parts = [None] + list(bspec)
+            out[k] = NamedSharding(mesh, P(*parts))
+        else:
+            out[k] = NamedSharding(mesh, bspec)
+    return out
+
+
+def make_layout(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> PagedLayout:
+    chips = int(np.prod(list(mesh.shape.values())))
+    max_blocks = -(-shape.seq_len // BLOCK_TOKENS)
+    num_blocks = shape.global_batch * max_blocks
+    # round NB up to a multiple of the mesh size so the pool shards evenly
+    num_blocks = -(-num_blocks // chips) * chips
+    # keep per-sequence tables divisible by the model axis for flashdecode
+    m = mesh.shape["model"]
+    max_blocks = -(-max_blocks // m) * m
+    return PagedLayout(num_blocks=num_blocks, block_tokens=BLOCK_TOKENS,
+                       max_blocks=max_blocks)
+
+
+def cache_shardings(cfg: ModelConfig, layout: PagedLayout, mesh: Mesh,
+                    batch: int):
+    """Sharding tree matching cache_spec: pool block dim over the whole mesh,
+    per-sequence state over the batch sharding."""
+    cspec = cache_spec(cfg, layout, batch, BF16)
+    all_axes = tuple(mesh.axis_names)
+    bspec = _batch_sharding(mesh, batch)
+
+    def one(path, leaf):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        stacked = leaf.ndim >= 1 and key in (
+            "pool_k", "pool_v", "pool_ckv", "ssm", "conv", "xk", "xv")
+        # find the defining dim
+        if key in ("pool_k", "pool_v", "pool_ckv"):
+            nb_dim = 0 if leaf.shape[0] == layout.num_blocks else 1
+            parts = [None] * leaf.ndim
+            parts[nb_dim] = all_axes
+            return NamedSharding(mesh, P(*parts))
+        if key in ("ssm", "conv", "xk", "xv"):
+            b_dim = 0 if leaf.shape[0] == batch else 1
+            parts = [None] * leaf.ndim
+            if leaf.shape[b_dim] == batch and len(bspec) > 0:
+                parts[b_dim] = bspec[0]
+            return NamedSharding(mesh, P(*parts))
+        return NamedSharding(mesh, P())
+
+    return cspec, jax.tree_util.tree_map_with_path(one, cspec)
+
+
+def train_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    pspecs, pshard = param_shardings(cfg, mesh)
+    mu_shard = zero1_shardings_for_tree(
+        pspecs, logical_axes(model_spec(cfg)), mesh)
+    opt_specs = AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        pspecs),
+        nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        pspecs))
+    opt_shard = AdamWState(step=NamedSharding(mesh, P()), mu=mu_shard,
+                           nu=jax.tree.map(lambda s: s, mu_shard))
+    bspecs = batch_specs_for(cfg, shape.global_batch, shape.seq_len,
+                             train=True)
+    bshard = batch_shardings(cfg, mesh, bspecs)
+    metrics_shard = NamedSharding(mesh, P())
+    out_shardings = (pshard, opt_shard,
+                     {"loss": metrics_shard, "lr": metrics_shard,
+                      "grad_norm": metrics_shard,
+                      "update_norm": metrics_shard})
+    return Cell(kind="train",
+                args=(pspecs, opt_specs, bspecs),
+                in_shardings=(pshard, opt_shard, bshard),
+                out_shardings=out_shardings,
+                meta={"tokens_per_step": shape.global_batch * shape.seq_len})
+
+
+def prefill_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    layout = make_layout(cfg, shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    pspecs, pshard = param_shardings(cfg, mesh)
+    cspec, cshard = cache_shardings(cfg, layout, mesh, B)
+    bspecs = batch_specs_for(cfg, B, S, train=False)
+    bshard = batch_shardings(cfg, mesh, bspecs)
+    tbl = jax.ShapeDtypeStruct((B, layout.max_blocks), jnp.int32)
+    tbl_shard = NamedSharding(mesh, _batch_sharding(mesh, B))
+    args = [pspecs, cspec, bspecs["tokens"], tbl]
+    in_sh = [pshard, cshard, bshard["tokens"], tbl_shard]
+    meta_kw = {}
+    for extra in ("frames", "patches", "pos3d"):
+        if extra in bspecs:
+            meta_kw[extra] = True
+            args.append(bspecs[extra])
+            in_sh.append(bshard[extra])
+    rep = NamedSharding(mesh, P())
+    out_shardings = (rep, cshard)
+    return Cell(kind="prefill", args=tuple(args), in_shardings=tuple(in_sh),
+                out_shardings=out_shardings, layout=layout,
+                meta={"extras": meta_kw,
+                      "tokens_per_step": B * S})
+
+
+def decode_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                attn_impl: str = "gather") -> Cell:
+    layout = make_layout(cfg, shape, mesh)
+    B = shape.global_batch
+    pspecs, pshard = param_shardings(cfg, mesh)
+    cspec, cshard = cache_shardings(cfg, layout, mesh, B)
+    bsh = _batch_sharding(mesh, B)
+    toks = jax.ShapeDtypeStruct((B,), jnp.int32)
+    lens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tbl = jax.ShapeDtypeStruct((B, layout.max_blocks), jnp.int32)
+    args = [pspecs, cspec, toks, lens, tbl]
+    in_sh = [pshard, cshard, NamedSharding(mesh, bsh),
+             NamedSharding(mesh, bsh), NamedSharding(mesh, bsh)]
+    meta: dict = {"attn_impl": attn_impl, "tokens_per_step": B,
+                  "kv_tokens": B * shape.seq_len}
+    if attn_impl.startswith("flashdecode"):
+        names = tuple(mesh.axis_names)
+        M = mesh.shape["model"]
+        if attn_impl.endswith("blocksharded"):
+            NS = int(np.prod(list(mesh.shape.values())))
+            st_spec = P(None, names, None)
+        else:
+            NS = M
+            st_spec = P(_data_axes(mesh), "model", None)
+        MBl = layout.max_blocks // NS if layout.max_blocks % NS == 0 \
+            else -(-layout.max_blocks // NS)
+        st = jax.ShapeDtypeStruct((B, NS, MBl), jnp.int32)
+        args += [st, st]
+        in_sh += [NamedSharding(mesh, st_spec), NamedSharding(mesh, st_spec)]
+        meta["sharded_tables"] = (NS, MBl)
+    if cfg.vlm_patches:
+        args.append(jax.ShapeDtypeStruct((3, B, 1), jnp.float32))
+        in_sh.append(NamedSharding(mesh, P(None, *bsh)))
+        meta["pos3d"] = True
+    # logits stay vocab-sharded over "model" (the lm_head layout) — gathering
+    # the [B, V_pad] f32 logits was 75% of decode's collective bytes (§Perf)
+    b_part = bsh[0] if len(bsh) else None
+    logits_sh = NamedSharding(mesh, P(b_part, "model"))
+    heat_sh = NamedSharding(mesh, bsh)
+    out_shardings = (logits_sh, cshard, heat_sh)
+    return Cell(kind="decode", args=tuple(args), in_shardings=tuple(in_sh),
+                out_shardings=out_shardings, layout=layout, meta=meta)
+
+
+def make_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+              attn_impl: str = "gather") -> Cell:
+    if shape.kind == "train":
+        return train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_cell(cfg, shape, mesh)
+    return decode_cell(cfg, shape, mesh, attn_impl=attn_impl)

@@ -1,0 +1,58 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2_1p3b --smoke \
+        --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On a real TPU slice this process runs per host (jax.distributed.initialize()
+first); here it drives the same Trainer/fault-tolerant loop on the local
+devices.  ``--smoke`` selects the reduced config (full configs need the
+production mesh).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+import jax
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.base import get_config, get_smoke_config
+from repro.data.pipeline import make_batch_iter
+from repro.models.common import materialize
+from repro.models.transformer import model_spec
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
+    data = make_batch_iter(cfg, args.batch, args.seq)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    trainer = Trainer(
+        TrainerConfig(num_steps=args.steps, checkpoint_every=args.ckpt_every,
+                      base_lr=args.lr, num_micro=args.micro,
+                      chunk=min(512, args.seq)),
+        cfg, params, data, CheckpointStore(ckpt_dir))
+    out = trainer.run()
+    print(json.dumps(out["metrics"], indent=1))
+    first, last = out["metrics"][0], out["metrics"][-1]
+    print(f"loss {first['loss']:.3f} -> {last['loss']:.3f} over "
+          f"{out['final_step']} steps (ckpts in {ckpt_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Attention primitives: chunked (flash-style) attention in pure JAX, GQA,
+sliding windows, MLA (DeepSeek-V2), and dense-cache decode.
+
+The jnp chunked implementation is the XLA-compiled production path for
+training/prefill on TPU (bounded memory via lax.scan over KV chunks, f32
+accumulators); the Pallas kernels in repro.kernels provide the hand-tiled
+alternative and the paged decode path.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _chunk_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                window: int | None) -> jax.Array:
+    """[q, k] boolean mask; True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, chunk: int = 1024,
+                    soft_cap: float | None = None) -> jax.Array:
+    """Memory-bounded attention with a running-softmax scan over KV chunks.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KVH, D] with H % KVH == 0.
+    q_offset: absolute position of q[0] (for decode/cross-chunk prefill).
+    Returns [B, Sq, H, D].
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, KVH, _ = k.shape
+    Dv = v.shape[-1]
+    if H % KVH:
+        raise ValueError(f"H={H} not divisible by KVH={KVH}")
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+
+    nchunks = -(-Sk // chunk)
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, KVH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, KVH, Dv).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(B, Sq, KVH, G, D).astype(F32)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc_prev = carry
+        kci, vci, ci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kci.astype(F32)) * scale
+        if soft_cap is not None:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+        mask = _chunk_mask(q_pos, k_pos, causal=causal, window=window)
+        mask &= (k_pos < Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)                         # [B,KVH,G,Sq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        l_corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * l_corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vci.astype(F32))
+        acc_new = acc_prev * l_corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KVH, G, Sq), NEG_INF, F32)
+    l0 = jnp.zeros((B, KVH, G, Sq), F32)
+    a0 = jnp.zeros((B, KVH, G, Sq, Dv), F32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # [B,KVH,G,Sq,Dv]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention_dense(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                           lengths: jax.Array, *,
+                           soft_cap: float | None = None,
+                           window: int | None = None) -> jax.Array:
+    """Single-token decode vs a dense KV cache.
+
+    q: [B, H, D]; caches: [B, S, KVH, D]; lengths: [B] (valid prefix length,
+    including the current token's slot).  Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KVH, G, D).astype(F32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(F32)) * scale
+    if soft_cap is not None:
+        s = soft_cap * jnp.tanh(s / soft_cap)
+    pos = jnp.arange(S)[None, :]
+    valid = pos < lengths[:, None]
+    if window is not None:
+        valid &= pos > (lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(F32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_expand_attention(q_nope: jax.Array, q_rope: jax.Array,
+                         c_kv: jax.Array, k_rope: jax.Array,
+                         w_uk: jax.Array, w_uv: jax.Array, *,
+                         causal: bool = True, chunk: int = 1024) -> jax.Array:
+    """Training-path MLA: expand latents to per-head K/V then flash-attend.
+
+    q_nope: [B,S,H,Dn]; q_rope: [B,S,H,Dr]; c_kv: [B,S,L]; k_rope: [B,S,Dr]
+    w_uk: [H,L,Dn]; w_uv: [H,L,Dv].  Returns [B,S,H,Dv].
+    """
+    B, S, H, Dn = q_nope.shape
+    k_nope = jnp.einsum("bsl,hld->bshd", c_kv, w_uk)
+    v = jnp.einsum("bsl,hld->bshd", c_kv, w_uv)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, k_rope.shape[-1]))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return flash_attention(q, k, v, causal=causal, chunk=chunk)
+
+
+def mla_absorbed_decode(q_nope: jax.Array, q_rope: jax.Array,
+                        ckv_cache: jax.Array, krope_cache: jax.Array,
+                        lengths: jax.Array, w_uk: jax.Array, w_uv: jax.Array
+                        ) -> jax.Array:
+    """Decode-path MLA with weight absorption: attend directly over the
+    compressed latent cache (this is why MLA makes 500k-token decode cheap —
+    the per-token cache line is kv_lora + rope_dim, not heads*head_dim*2).
+
+    q_nope: [B,H,Dn]; q_rope: [B,H,Dr]; ckv_cache: [B,S,L];
+    krope_cache: [B,S,Dr]; returns [B,H,Dv].
+    """
+    B, H, Dn = q_nope.shape
+    L = ckv_cache.shape[-1]
+    scale = 1.0 / math.sqrt(Dn + q_rope.shape[-1])
+    # absorb W_uk into the query: q_eff[h] = q_nope[h] @ w_uk[h]^T  -> [B,H,L]
+    q_eff = jnp.einsum("bhd,hld->bhl", q_nope.astype(F32), w_uk.astype(F32))
+    s = (jnp.einsum("bhl,bsl->bhs", q_eff, ckv_cache.astype(F32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(F32), krope_cache.astype(F32)))
+    s = s * scale
+    valid = jnp.arange(ckv_cache.shape[1])[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", p, ckv_cache.astype(F32))   # [B,H,L]
+    out = jnp.einsum("bhl,hld->bhd", o_lat, w_uv.astype(F32))
+    return out.astype(q_nope.dtype)

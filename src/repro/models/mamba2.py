@@ -1,0 +1,172 @@
+"""Mamba-2 (SSD — state-space duality) layer: chunked training scan and the
+O(1)-state decode step.
+
+Follows Dao & Gu 2024 (arXiv:2405.21060): the selective SSM is computed as a
+block decomposition — quadratic attention-like term within chunks, linear
+state recurrence across chunks.  This keeps training compute matmul-dominated
+(MXU-friendly) while decode carries only a [H, P, N] state per sequence —
+which is why the paper's paged-KV technique is inapplicable to this family
+(no growing translated address space; see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MambaCfg
+from .common import F32, ParamSpec, rms_norm
+
+
+def mamba_spec(d_model: int, cfg: MambaCfg) -> dict:
+    di = cfg.expand * d_model
+    H = di // cfg.head_dim
+    N = cfg.d_state
+    conv_ch = di + 2 * N
+    return {
+        # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": ParamSpec((d_model, 2 * di + 2 * N + H), ("embed", "ff")),
+        "conv_w": ParamSpec((cfg.conv_dim, conv_ch), (None, "ff"), init="normal",
+                            scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), ("ff",), init="zeros"),
+        "A_log": ParamSpec((H,), ("q_heads",), init="zeros"),
+        "D": ParamSpec((H,), ("q_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("q_heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("ff",), init="ones"),
+        "out_proj": ParamSpec((di, d_model), ("ff", "embed")),
+    }
+
+
+def _split_proj(z_x_b_c_dt: jax.Array, di: int, N: int, H: int):
+    z = z_x_b_c_dt[..., :di]
+    x = z_x_b_c_dt[..., di:2 * di]
+    B = z_x_b_c_dt[..., 2 * di:2 * di + N]
+    C = z_x_b_c_dt[..., 2 * di + N:2 * di + 2 * N]
+    dt = z_x_b_c_dt[..., 2 * di + 2 * N:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. u: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int) -> jax.Array:
+    """SSD scan. x: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    Bm, Cm: [B,S,N].  Returns y: [B,S,H,P].
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, "seq len must be divisible by ssd chunk"
+
+    dA = dt * A                                   # [B,S,H] negative decays
+    # chunk-major layout for lax.scan: [nc, B, c, ...]
+    xc = x.reshape(Bsz, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3)
+    dAc = dA.reshape(Bsz, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(h, inp):
+        xg, dtg, dAg, Bg, Cg = inp
+        seg = jnp.cumsum(dAg, axis=1)                          # [B,c,H]
+        # intra-chunk: L[i,j] = exp(seg_i - seg_j) for i >= j (one chunk only,
+        # so the [B,c,c,H] buffer stays small)
+        rel = seg[:, :, None, :] - seg[:, None, :, :]          # [B,c,c,H]
+        L = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cg, Bg)            # [B,c,c]
+        M = scores[..., None] * L * dtg[:, None, :, :]         # [B,c,c,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xg)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp", Cg, jnp.exp(seg), h)
+        # update carried state
+        decay_to_end = jnp.exp(seg[:, -1:, :] - seg)           # [B,c,H]
+        S_chunk = jnp.einsum("bjn,bjh,bjhp->bhnp", Bg, dtg * decay_to_end, xg)
+        h_new = h * jnp.exp(seg[:, -1, :])[..., None, None] + S_chunk
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, N, P), x.dtype)
+    h_last, yc = jax.lax.scan(step, h0, (xc, dtc, dAc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_last
+
+
+def mamba_apply(params, x: jax.Array, cfg: MambaCfg,
+                return_state: bool = False):
+    """Full-sequence (training/prefill) path. x: [B,S,d] -> [B,S,d]
+    (optionally also the final decode state)."""
+    Bsz, S, d = x.shape
+    di = cfg.expand * d
+    H = di // cfg.head_dim
+    N = cfg.d_state
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, u, Bm, Cm, dt = _split_proj(proj, di, N, H)
+    ubc_raw = jnp.concatenate([u, Bm, Cm], axis=-1)
+    ubc = _causal_conv(ubc_raw, params["conv_w"].astype(x.dtype),
+                       params["conv_b"].astype(x.dtype))
+    u, Bm, Cm = ubc[..., :di], ubc[..., di:di + N], ubc[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"].astype(F32))
+    A = -jnp.exp(params["A_log"].astype(F32))
+    uh = u.reshape(Bsz, S, H, cfg.head_dim)
+    y, h_last = ssd_chunked(uh.astype(F32), dt, A, Bm.astype(F32),
+                            Cm.astype(F32), min(cfg.chunk, S))
+    y = y + uh.astype(F32) * params["D"].astype(F32)[None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    K = cfg.conv_dim
+    conv_state = ubc_raw[:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+        ubc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    state = {"ssm": h_last.astype(x.dtype), "conv": conv_state}
+    return out, state
+
+
+def mamba_decode_step(params, x: jax.Array, state: dict, cfg: MambaCfg
+                      ) -> tuple[jax.Array, dict]:
+    """Single-token decode. x: [B,d]; state = {"ssm": [B,H,N,P],
+    "conv": [B,K-1,conv_ch]}.  Returns ([B,d], new state)."""
+    Bsz, d = x.shape
+    di = cfg.expand * d
+    H = di // cfg.head_dim
+    N = cfg.d_state
+    K = cfg.conv_dim
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, u, Bm, Cm, dt = _split_proj(proj, di, N, H)
+    ubc = jnp.concatenate([u, Bm, Cm], axis=-1)                # [B, conv_ch]
+    conv_hist = jnp.concatenate([state["conv"], ubc[:, None, :]], axis=1)  # [B,K,ch]
+    w = params["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_hist, w) + params["conv_b"].astype(x.dtype))
+    u, Bm, Cm = conv_out[..., :di], conv_out[..., di:di + N], conv_out[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"].astype(F32))   # [B,H]
+    A = -jnp.exp(params["A_log"].astype(F32))
+    g = jnp.exp(dt * A)                                        # [B,H]
+    uh = u.reshape(Bsz, H, cfg.head_dim).astype(F32)
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm.astype(F32), uh)
+    h = state["ssm"].astype(F32) * g[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(F32), h)
+    y = y + uh * params["D"].astype(F32)[None, :, None]
+    y = y.reshape(Bsz, di).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    new_state = {"ssm": h.astype(state["ssm"].dtype), "conv": conv_hist[:, 1:, :]}
+    return out, new_state
+
+
+def mamba_state_init(batch: int, d_model: int, cfg: MambaCfg, dtype=jnp.float32
+                     ) -> dict:
+    di = cfg.expand * d_model
+    H = di // cfg.head_dim
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.d_state, cfg.head_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_dim - 1, di + 2 * cfg.d_state), dtype),
+    }

@@ -1,0 +1,61 @@
+"""AdamW with decoupled weight decay, global-norm clipping, f32 master
+weights over bf16 compute params (mixed-precision policy lives here)."""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # int32 scalar
+    mu: Pytree               # f32, like params
+    nu: Pytree               # f32, like params
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def adamw_update(params: Pytree, grads: Pytree, state: AdamWState, *,
+                 lr: jax.Array, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: float | None = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(F32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(F32), grads)
+
+    step = state.step + 1
+    t = step.astype(F32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm,
+               "update_norm": lr * jnp.ones((), F32)}
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), metrics

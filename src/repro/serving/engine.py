@@ -1,0 +1,355 @@
+"""Continuous-batching serving engine with an eBPF-mm-managed paged KV cache.
+
+The paper's workflow, end to end:
+
+  * every sequence is a "process" with a growing KV address space;
+  * each decode step that crosses a block boundary is a PAGE FAULT —
+    the MemoryManager runs the attached policy program (profile search +
+    cost/benefit) to pick the page size backing the new mapping;
+  * the paged-attention path emits per-block attention mass, which feeds the
+    per-process DAMON monitors (the benefit signal);
+  * the khugepaged analogue runs between engine steps, collapsing hot
+    regions into larger pages; migrations/compactions come back as explicit
+    block-copy move lists applied to the device pools;
+  * pool exhaustion triggers the reclaim hook -> preemption of the victim
+    sequence (requeued and recomputed later).
+
+Policies (``policy=``): "ebpf" (profile + Figure-1 program), "thp"
+(kernel-default greedy PMD-size), "never" (base pages), "thp-prog"/
+"never-prog" (same baselines expressed as loaded programs, for measuring
+hook overhead).  The Figure-2 benchmark sweeps these.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core import (HWSpec, Khugepaged, KhugepagedConfig, MemoryManager,
+                    MMOutOfMemory, Profile, ebpf_mm_program, make_cost_model,
+                    never_program, reclaim_lru_program, thp_always_program)
+from ..core.buddy import order_blocks
+from ..models.decode import PagedLayout, cache_init, decode_step, prefill_step
+from ..models.transformer import build_layer_plans
+from .sampler import Sampler
+
+Pytree = Any
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16       # reserved capacity (VMA is sized for this)
+    app: str | None = None
+    temperature: float = 0.0
+    stop_after: int | None = None  # EOS point; None = runs to max_new_tokens
+
+
+@dataclass
+class SeqState:
+    req: Request
+    pid: int
+    slot: int
+    generated: list = field(default_factory=list)
+    length: int = 0           # tokens currently in KV (prompt + generated)
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    prefills: int = 0
+    decode_tokens: int = 0
+    preemptions: int = 0
+    wall_host_s: float = 0.0
+    completed: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Pytree, layout: PagedLayout,
+                 *, max_batch: int = 4, policy: str = "ebpf",
+                 profile: Profile | None = None, hw: HWSpec | None = None,
+                 khugepaged: bool = True, seed: int = 0,
+                 cache_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.layout = layout
+        self.max_batch = max_batch
+        self.policy = policy
+        hw = hw or HWSpec()
+
+        n_attn = sum(1 for k in cfg.layer_kinds() if k == "a")
+        if cfg.mla is not None:
+            slab = cfg.mla.kv_lora + cfg.mla.qk_rope
+        else:
+            slab = cfg.kv_heads * cfg.head_dim * 2
+        cost = make_cost_model(hw, kv_heads=1, head_dim=1,
+                               block_tokens=layout.block_tokens)
+        cost.block_bytes = layout.block_tokens * slab * 2 * max(1, n_attn)
+
+        default_mode = {"never": "never", "never-prog": "never"}.get(policy, "thp")
+        self.mm = MemoryManager(layout.num_blocks, cost,
+                                default_mode=default_mode, damon_seed=seed)
+        self.mm.attach_reclaim_program(reclaim_lru_program())
+        if policy == "ebpf":
+            if profile is None:
+                raise ValueError("policy='ebpf' needs a profile (or list)")
+            profiles = profile if isinstance(profile, (list, tuple)) \
+                else [profile]
+            for prof in profiles:
+                self.mm.load_profile(prof)
+            # one program serves every app via the indirect profile-map load
+            self.mm.attach_fault_program(ebpf_mm_program())
+        elif policy == "thp-prog":
+            self.mm.attach_fault_program(thp_always_program())
+        elif policy == "never-prog":
+            self.mm.attach_fault_program(never_program())
+        elif policy not in ("thp", "never"):
+            raise ValueError(f"unknown policy {policy!r}")
+
+        self.khugepaged = (Khugepaged(self.mm, KhugepagedConfig())
+                           if (khugepaged and policy == "ebpf") else None)
+        self.cache = cache_init(cfg, layout, max_batch, cache_dtype)
+        self.sampler = Sampler(seed=seed)
+        self.stats = EngineStats()
+
+        self.waiting: list[Request] = []
+        self.active: dict[int, SeqState] = {}    # slot -> seq
+        self._next_pid = 1
+        self.finished: dict[int, list[int]] = {}
+        # per-app aggregate per-logical-block heat — the DAMON trace used by
+        # offline profiling (profile_from_heat)
+        self.heat_histograms: dict[str, np.ndarray] = {}
+
+        self._decode = jax.jit(
+            lambda p, c, t, l, bt, pos3d: decode_step(
+                p, cfg, c, t, l, bt, layout, pos3d=pos3d,
+                attn_impl="gather"))
+        self._prefill = jax.jit(
+            lambda p, c, t, bt, last, **kw: prefill_step(
+                p, cfg, c, t, bt, layout, chunk=256, last_index=last, **kw))
+
+    # ----------------------------------------------------------------- admin
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [s for s in range(self.max_batch) if s not in self.active]
+
+    def _blocks_needed(self, tokens: int) -> int:
+        return -(-tokens // self.layout.block_tokens)
+
+    # --------------------------------------------------------------- prefill
+    def _admit(self) -> None:
+        bt = self.layout.block_tokens
+        for slot in self._free_slots():
+            if not self.waiting:
+                break
+            req = self.waiting.pop(0)
+            pid = self._next_pid
+            self._next_pid += 1
+            total = len(req.prompt) + req.max_new_tokens
+            vma_blocks = min(self._blocks_needed(total) + 1,
+                             self.layout.max_blocks)
+            self.mm.create_process(pid, app=req.app, vma_blocks=vma_blocks)
+            nblocks = self._blocks_needed(len(req.prompt))
+            try:
+                self.mm.ensure_range(pid, 0, nblocks)
+            except MMOutOfMemory as oom:
+                self._preempt(oom.victim_pid)
+                try:
+                    self.mm.ensure_range(pid, 0, nblocks)
+                except MMOutOfMemory:
+                    self.mm.free_process(pid)
+                    self.waiting.insert(0, req)
+                    break
+            seq = SeqState(req=req, pid=pid, slot=slot,
+                           length=len(req.prompt))
+            self.active[slot] = seq
+            self._run_prefill(seq)
+            self.stats.prefills += 1
+
+    def _run_prefill(self, seq: SeqState) -> None:
+        bt = self.layout.block_tokens
+        prompt = np.asarray(seq.req.prompt, np.int32)
+        S_pad = self._blocks_needed(len(prompt)) * bt
+        toks = np.zeros((1, S_pad), np.int32)
+        toks[0, :len(prompt)] = prompt
+        table = self.mm.block_table(seq.pid, self.layout.max_blocks)[None]
+        kw = self._modality_kwargs(1, S_pad)
+        sub_cache = jax.tree.map(lambda c: c, self.cache)  # pools are shared
+        logits, new_cache = self._prefill(
+            self.params, self._slot_cache_view(seq.slot), jnp.asarray(toks),
+            jnp.asarray(table), jnp.asarray([len(prompt) - 1], jnp.int32),
+            **kw)
+        self._merge_slot_cache(seq.slot, new_cache)
+        self.mm.record_access(seq.pid,
+                              np.ones(self._blocks_needed(len(prompt))))
+        tok = self.sampler.sample(np.asarray(logits)[0],
+                                  self.cfg.vocab, seq.req.temperature)
+        seq.generated.append(int(tok))
+
+    # -------------------------------------------------- per-slot cache views
+    # Pools (block dim) are global — shared across slots.  Per-sequence state
+    # (mamba ssm/conv, whisper cross-attn) is slot-indexed.  The prefill runs
+    # with batch=1, so slice those leaves out and merge them back.
+    _POOL_KEYS = ("pool_k", "pool_v", "pool_ckv")
+
+    def _slot_cache_view(self, slot: int) -> Pytree:
+        def f(path, leaf):
+            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if key in self._POOL_KEYS:
+                return leaf
+            # batch-indexed leaf: [reps, B, ...] or [B, ...]
+            if leaf.ndim >= 2 and key in ("ssm", "conv", "xk", "xv"):
+                axis = 1 if leaf.shape[0] != self.max_batch else 0
+                return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis)
+            return leaf
+        return jax.tree_util.tree_map_with_path(f, self.cache)
+
+    def _merge_slot_cache(self, slot: int, new_cache: Pytree) -> None:
+        def f(path, old, new):
+            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if key in self._POOL_KEYS:
+                return new
+            if old.ndim >= 2 and key in ("ssm", "conv", "xk", "xv"):
+                axis = 1 if old.shape[0] != self.max_batch else 0
+                return jax.lax.dynamic_update_slice_in_dim(
+                    old, new.astype(old.dtype), slot, axis)
+            return new
+        self.cache = jax.tree_util.tree_map_with_path(f, self.cache, new_cache)
+
+    def _modality_kwargs(self, batch: int, seq_len: int) -> dict:
+        kw = {}
+        rng = np.random.default_rng(0)
+        if self.cfg.enc_dec:
+            kw["frames"] = jnp.asarray(rng.normal(
+                size=(batch, self.cfg.enc_frames, self.cfg.d_model))
+                .astype(np.float32))
+        if self.cfg.vlm_patches:
+            P = min(self.cfg.vlm_patches, seq_len)
+            kw["patches"] = jnp.asarray(rng.normal(
+                size=(batch, P, self.cfg.d_model)).astype(np.float32))
+            kw["pos3d"] = jnp.asarray(np.tile(
+                np.arange(seq_len, dtype=np.float32), (3, batch, 1)))
+        return kw
+
+    # ---------------------------------------------------------------- decode
+    def _preempt(self, victim_pid: int | None) -> None:
+        if victim_pid is None:
+            raise MMOutOfMemory("pool exhausted and nothing to evict")
+        for slot, seq in list(self.active.items()):
+            if seq.pid == victim_pid:
+                self.mm.evict_process(victim_pid)
+                del self.active[slot]
+                self.waiting.insert(0, seq.req)   # recompute-from-scratch
+                self.stats.preemptions += 1
+                return
+        self.mm.evict_process(victim_pid)
+
+    def step(self) -> bool:
+        """One engine iteration. Returns False when all work is done."""
+        t0 = time.monotonic()
+        self._admit()
+        if not self.active and not self.waiting:
+            return False
+        if self.active:
+            self._decode_once()
+        if self.khugepaged is not None:
+            self.khugepaged.tick()
+        self._apply_pending_moves()
+        self.mm.tick()
+        self.stats.steps += 1
+        self.stats.wall_host_s += time.monotonic() - t0
+        return bool(self.active or self.waiting)
+
+    def _decode_once(self) -> None:
+        B, MB = self.max_batch, self.layout.max_blocks
+        tokens = np.zeros(B, np.int32)
+        lengths = np.zeros(B, np.int32)
+        tables = np.full((B, MB), -1, np.int32)
+        for slot, seq in list(self.active.items()):
+            if slot not in self.active:       # preempted earlier this pass
+                continue
+            # page-fault path: the new token's slot may cross a block boundary
+            addr = seq.length // self.layout.block_tokens
+            try:
+                self.mm.ensure_mapped(seq.pid, addr)
+            except MMOutOfMemory as oom:
+                self._preempt(oom.victim_pid)
+                continue
+            tokens[slot] = seq.generated[-1]
+            lengths[slot] = seq.length
+            tables[slot] = self.mm.block_table(seq.pid, MB)
+        pos3d = None
+        if self.cfg.vlm_patches:
+            pos3d = jnp.asarray(
+                np.tile(lengths.astype(np.float32)[None, :, None], (3, 1, 1)))
+        logits, self.cache, heat = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(tables), pos3d)
+        logits_np = np.asarray(logits)
+        heat_np = np.asarray(heat)
+        for slot, seq in list(self.active.items()):
+            nb = self._blocks_needed(seq.length + 1)
+            self.mm.record_access(seq.pid, heat_np[slot, :nb])
+            app = seq.req.app or "_default"
+            if app not in self.heat_histograms:
+                self.heat_histograms[app] = np.zeros(self.layout.max_blocks,
+                                                     np.float64)
+            self.heat_histograms[app][:nb] += heat_np[slot, :nb]
+            tok = self.sampler.sample(logits_np[slot], self.cfg.vocab,
+                                      seq.req.temperature)
+            seq.generated.append(int(tok))
+            seq.length += 1
+            self.stats.decode_tokens += 1
+            limit = seq.req.max_new_tokens
+            if seq.req.stop_after is not None:
+                limit = min(limit, seq.req.stop_after)
+            if len(seq.generated) >= limit:
+                self.finished[seq.req.rid] = list(seq.generated)
+                self.mm.free_process(seq.pid)
+                del self.active[slot]
+                self.stats.completed += 1
+
+    def _apply_pending_moves(self) -> None:
+        moves = self.mm.drain_moves()
+        if not moves:
+            return
+        src = np.concatenate([np.arange(s, s + order_blocks(o))
+                              for s, _, o in moves]).astype(np.int32)
+        dst = np.concatenate([np.arange(d, d + order_blocks(o))
+                              for _, d, o in moves]).astype(np.int32)
+        src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
+
+        def move(path, leaf):
+            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if key not in self._POOL_KEYS:
+                return leaf
+            if leaf.ndim >= 2 and leaf.shape[0] != self.layout.num_blocks:
+                return leaf.at[:, dst_j].set(leaf[:, src_j])   # stacked [reps,NB,..]
+            return leaf.at[dst_j].set(leaf[src_j])
+        self.cache = jax.tree_util.tree_map_with_path(move, self.cache)
+
+    # ------------------------------------------------------------------ run
+    def run(self, max_steps: int = 10_000) -> dict:
+        steps = 0
+        while self.step():
+            steps += 1
+            if steps >= max_steps:
+                break
+        out = {"engine": self.stats.snapshot(), "mm": self.mm.stats.snapshot(),
+               "huge_fraction": self.mm.hugepage_block_fraction()}
+        if self.khugepaged is not None:
+            out["khugepaged"] = {"collapsed": self.khugepaged.collapsed,
+                                 "considered": self.khugepaged.considered}
+        return out

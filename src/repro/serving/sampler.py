@@ -1,0 +1,21 @@
+"""Token sampling (greedy / temperature) over the padded-vocab logits."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class Sampler:
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, logits: np.ndarray, vocab: int,
+               temperature: float = 0.0) -> int:
+        logits = np.asarray(logits, np.float64)[:vocab]   # mask vocab padding
+        if temperature <= 0.0:
+            return int(np.argmax(logits))
+        z = logits / temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(self.rng.choice(vocab, p=p))

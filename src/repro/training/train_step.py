@@ -1,0 +1,85 @@
+"""Training step: loss -> grads -> AdamW, with microbatch gradient
+accumulation (lax.scan), mixed precision (bf16 compute / f32 master+moments),
+and remat already applied inside the model's layer scans.
+
+``make_train_step`` builds the jit-able step; shardings are applied by the
+launcher (launch/train.py, launch/dryrun.py) via in_shardings/out_shardings
+from the distributed rule engine — this module stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.transformer import lm_loss
+from ..optim.adamw import AdamWState, adamw_update
+from ..optim.schedule import linear_warmup_cosine
+
+Pytree = Any
+F32 = jnp.float32
+
+
+def split_microbatches(batch: Pytree, num_micro: int) -> Pytree:
+    """[B, ...] -> [num_micro, B/num_micro, ...] for every leaf with a batch
+    dim (pos3d has it at axis 1)."""
+    def split(path_leaf):
+        return path_leaf
+
+    def one(k, v):
+        if k == "pos3d":
+            m = v.shape[1] // num_micro
+            return v.reshape(v.shape[0], num_micro, m, *v.shape[2:]) \
+                    .transpose(1, 0, *range(2, v.ndim + 1))
+        m = v.shape[0] // num_micro
+        return v.reshape(num_micro, m, *v.shape[1:])
+    return {k: one(k, v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, *, num_micro: int = 1,
+                    base_lr: float = 3e-4, warmup_steps: int = 100,
+                    total_steps: int = 10_000, weight_decay: float = 0.1,
+                    clip_norm: float = 1.0, chunk: int = 1024,
+                    remat: bool = True, compute_dtype=jnp.bfloat16):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, micro):
+        loss, parts = lm_loss(params, cfg, micro, compute_dtype=compute_dtype,
+                              chunk=chunk, remat=remat)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if num_micro > 1:
+            micros = split_microbatches(batch, num_micro)
+
+            def accum(carry, micro):
+                gsum, lsum = carry
+                (loss, _), grads = grad_fn(params, micro)
+                gsum = jax.tree.map(lambda a, g: a + g.astype(F32), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (g0, jnp.zeros((), F32)),
+                                           micros)
+            grads = jax.tree.map(lambda g: g / num_micro, gsum)
+            loss = lsum / num_micro
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        lr = linear_warmup_cosine(opt_state.step, base_lr=base_lr,
+                                  warmup_steps=warmup_steps,
+                                  total_steps=total_steps)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay,
+            clip_norm=clip_norm)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,95 @@
+"""Trainer: the fault-tolerant outer loop tying data, step, checkpoints,
+watchdog and restarts together.  Used by examples/train_lm.py and the
+integration tests (with simulated failures)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..checkpoint.store import CheckpointStore
+from ..distributed.fault import (RestartableLoop, SimulatedFailure,
+                                 StepWatchdog)
+from ..optim.adamw import adamw_init
+from .train_step import make_train_step
+
+Pytree = Any
+
+
+@dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    checkpoint_every: int = 20
+    log_every: int = 10
+    num_micro: int = 1
+    base_lr: float = 3e-4
+    warmup_steps: int = 10
+    chunk: int = 512
+    keep_checkpoints: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg, model_cfg, params: Pytree, data_iter,
+                 store: CheckpointStore, *, failure_hook: Callable | None = None):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        self.data_iter = data_iter
+        self.store = store
+        self.watchdog = StepWatchdog()
+        self.failure_hook = failure_hook
+        self.metrics_log: list[dict] = []
+
+        self.step_fn = jax.jit(make_train_step(
+            model_cfg, num_micro=cfg.num_micro, base_lr=cfg.base_lr,
+            warmup_steps=cfg.warmup_steps, total_steps=cfg.num_steps,
+            chunk=cfg.chunk))
+        self.state = {"params": params, "opt": adamw_init(params)}
+        self.start_step = 0
+        # resume if a checkpoint exists (crash-only design)
+        latest = store.latest_step()
+        if latest is not None:
+            self.state, meta = store.restore(latest)
+            self.start_step = meta["step"]
+
+    def _save(self, state, step):
+        self.store.save(state, step=step,
+                        keep=self.cfg.keep_checkpoints)
+
+    def _restore(self):
+        step = self.store.latest_step()
+        state, meta = self.store.restore(step)
+        return state, meta["step"]
+
+    def run(self) -> dict:
+        loop = RestartableLoop(self._save, self._restore)
+
+        def one_step(state, step):
+            if self.failure_hook is not None:
+                self.failure_hook(step)          # may raise SimulatedFailure
+            self.watchdog.start()
+            batch = next(self.data_iter)
+            params, opt, metrics = self.step_fn(state["params"], state["opt"],
+                                                batch)
+            jax.block_until_ready(metrics["loss"])
+            wd = self.watchdog.stop()
+            if step % self.cfg.log_every == 0 or step == self.cfg.num_steps - 1:
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "lr": float(metrics["lr"]),
+                       "sec": wd["duration"],
+                       "slow": wd["slow"]}
+                self.metrics_log.append(rec)
+            return {"params": params, "opt": opt}
+
+        self.state, final_step = loop.run(
+            self.state, self.start_step, self.cfg.num_steps, one_step,
+            checkpoint_every=self.cfg.checkpoint_every)
+        self._save(self.state, final_step)
+        return {"final_step": final_step,
+                "restarts": loop.restarts,
+                "metrics": self.metrics_log}

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: device count stays 1 here — only launch/dryrun.py
+forces 512 host devices, per the dry-run contract."""
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _np_seed():
+    np.random.seed(0)

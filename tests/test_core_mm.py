@@ -1,0 +1,223 @@
+"""Buddy allocator, DAMON, MemoryManager, khugepaged — invariants + behavior."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Damon, HWSpec, Khugepaged, MemoryManager,
+                        MMOutOfMemory, Profile, ProfileRegion,
+                        ebpf_mm_program, make_cost_model, never_program,
+                        thp_always_program)
+from repro.core.buddy import BuddyAllocator, BuddyError, order_blocks
+
+
+def mk_mm(num_blocks=1024, default="thp"):
+    cost = make_cost_model(HWSpec(), kv_heads=8, head_dim=128)
+    return MemoryManager(num_blocks, cost, default_mode=default)
+
+
+class TestBuddy:
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                              st.integers(0, 3)), min_size=1, max_size=120))
+    def test_random_ops_keep_invariants(self, ops):
+        b = BuddyAllocator(256)
+        live = []
+        for kind, order in ops:
+            if kind == "alloc":
+                try:
+                    s = b.alloc(order)
+                    assert s % order_blocks(order) == 0
+                    live.append(s)
+                except BuddyError:
+                    pass
+            elif live:
+                b.free(live.pop())
+            b.check_invariants()
+
+    def test_full_alloc_free_roundtrip(self):
+        b = BuddyAllocator(256)
+        starts = [b.alloc(0) for _ in range(256)]
+        assert sorted(starts) == list(range(256))
+        with pytest.raises(BuddyError):
+            b.alloc(0)
+        for s in starts:
+            b.free(s)
+        b.check_invariants()
+        # everything coalesced back to max-order pages
+        assert b.stats().free_per_order[3] == 256 // 64
+
+    def test_double_free_rejected(self):
+        b = BuddyAllocator(64)
+        s = b.alloc(1)
+        b.free(s)
+        with pytest.raises(BuddyError):
+            b.free(s)
+
+    def test_compaction_creates_high_order_page(self):
+        b = BuddyAllocator(64)
+        blocks = [b.alloc(0) for _ in range(64)]
+        # free all but one block per 16-block window -> no order-2 page free
+        for s in blocks:
+            if s % 16 != 0:
+                b.free(s)
+        assert b.stats().free_per_order[2] == 0
+        plan = b.plan_compaction(2)
+        assert plan, "compaction should find a plan"
+        b.check_invariants()
+        s = b.alloc(2)                      # must now succeed
+        assert s % 16 == 0
+
+    def test_frag_index_monotone(self):
+        b = BuddyAllocator(256)
+        st0 = b.stats()
+        assert st0.frag_index_milli[3] < 100
+        blocks = [b.alloc(0) for _ in range(128)]
+        for s in blocks[::2]:
+            b.free(s)
+        st1 = b.stats()
+        assert st1.frag_index_milli[3] > st0.frag_index_milli[3]
+
+
+class TestDamon:
+    def test_region_budget_respected(self):
+        d = Damon(4096, min_nr_regions=10, max_nr_regions=60)
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            d.record(rng.random(4096))
+            assert 1 <= len(d.regions) <= 60
+        # full coverage, no overlap
+        regs = sorted(d.regions, key=lambda r: r.start)
+        assert regs[0].start == 0 and regs[-1].end == 4096
+        for a, b in zip(regs, regs[1:]):
+            assert a.end == b.start
+
+    def test_hot_region_detected(self):
+        d = Damon(1024, seed=1)
+        heat = np.zeros(1024)
+        heat[100:160] = 50.0
+        for _ in range(12):
+            d.record(heat)
+        assert d.heat_at(128, 2) > 5 * max(d.heat_at(700, 2), 0.01)
+
+    def test_grow(self):
+        d = Damon(64)
+        d.grow(128)
+        assert d.space_blocks == 128
+        d.record(np.ones(128))
+        assert sorted(r.end for r in d.regions)[-1] == 128
+
+
+class TestMemoryManager:
+    def test_default_never_vs_thp(self):
+        for mode, want_order in (("never", 0), ("thp", 2)):
+            mm = mk_mm(default=mode)
+            mm.create_process(1, vma_blocks=256)
+            r = mm.ensure_mapped(1, 0)
+            assert r.order == want_order, mode
+
+    def test_profile_guided_sizes(self):
+        mm = mk_mm()
+        prof = Profile("app", [
+            ProfileRegion(0, 64, (0, 10_000, 200_000, 4_000_000)),
+            ProfileRegion(64, 256, (0, 0, 0, 0)),
+        ])
+        mid = mm.load_profile(prof)
+        mm.attach_fault_program(ebpf_mm_program(profile_map_id=mid))
+        mm.create_process(1, app="app", vma_blocks=256)
+        hot = mm.ensure_mapped(1, 0)
+        cold = mm.ensure_mapped(1, 200)
+        assert hot.order == 3 and hot.hinted
+        assert cold.order == 0 and cold.hinted
+
+    def test_unprofiled_pid_falls_back(self):
+        mm = mk_mm(default="never")
+        prof = Profile("app", [ProfileRegion(0, 8, (0, 1, 1, 1))])
+        mm.attach_fault_program(
+            ebpf_mm_program(profile_map_id=mm.load_profile(prof)))
+        mm.create_process(2, app=None, vma_blocks=64)   # no profile
+        r = mm.ensure_mapped(2, 0)
+        assert not r.hinted and r.order == 0
+        assert mm.stats.fallback_faults == 1
+
+    def test_block_table_consistency(self):
+        mm = mk_mm()
+        mm.create_process(1, vma_blocks=128)
+        mm.ensure_range(1, 0, 128)
+        t = mm.block_table(1, 128)
+        assert (t >= 0).all()
+        assert len(np.unique(t)) == 128      # no two logicals share a block
+
+    def test_fault_respects_vma_and_overlap(self):
+        mm = mk_mm(default="thp")
+        mm.create_process(1, vma_blocks=20)  # order 2 (16) fits only at 0
+        r0 = mm.ensure_mapped(1, 17)         # window [16,32) exceeds vma
+        assert r0.order < 2
+        with pytest.raises(Exception):
+            mm.ensure_mapped(1, 100)
+
+    def test_oom_reports_victim_and_eviction_frees(self):
+        mm = mk_mm(num_blocks=64, default="never")
+        mm.create_process(1, vma_blocks=64)
+        mm.ensure_range(1, 0, 64)
+        mm.create_process(2, vma_blocks=16)
+        with pytest.raises(MMOutOfMemory) as ei:
+            mm.ensure_mapped(2, 0)
+        assert ei.value.victim_pid == 1
+        mm.evict_process(1)
+        assert mm.ensure_mapped(2, 0) is not None
+
+    def test_collapse_migrates_and_frees(self):
+        mm = mk_mm(default="never")
+        mm.create_process(1, vma_blocks=64)
+        mm.ensure_range(1, 0, 16)
+        assert mm.descriptors_for(1) == 16
+        res = mm.collapse(1, 0, 2)
+        assert res is not None and res.order == 2
+        assert mm.descriptors_for(1) == 1
+        assert mm.stats.promotions == 1
+        assert len(mm.drain_moves()) >= 16
+        mm.buddy.check_invariants()
+
+    def test_compaction_updates_page_tables(self):
+        mm = mk_mm(num_blocks=64, default="never")
+        mm.create_process(1, vma_blocks=64)
+        mm.ensure_range(1, 0, 48)
+        # free every other mapping to fragment
+        st = mm.procs[1]
+        for lstart in list(st.page_table)[::2]:
+            m = st.page_table.pop(lstart)
+            st.mapped -= set(range(m.logical_start, m.logical_start + 1))
+            mm.buddy.free(m.phys_start)
+        before = {m.phys_start for m in st.page_table.values()}
+        r = mm._install(st, 60, 2, hinted=False)   # needs compaction
+        assert r.order == 2
+        mm.buddy.check_invariants()
+        t = mm.block_table(1, 64)
+        mapped = t[t >= 0]
+        assert len(np.unique(mapped)) == len(mapped)
+
+
+class TestKhugepaged:
+    def test_hot_region_collapsed(self):
+        mm = mk_mm(default="never")
+        mm.create_process(1, vma_blocks=256)
+        mm.ensure_range(1, 0, 64)
+        heat = np.zeros(256)
+        heat[:64] = 80.0
+        for _ in range(6):
+            mm.record_access(1, heat)
+        kh = Khugepaged(mm)
+        total = sum(kh.tick() for _ in range(8))
+        assert total >= 1
+        assert mm.stats.promotions == total
+        mm.buddy.check_invariants()
+
+    def test_cold_region_left_alone(self):
+        mm = mk_mm(default="never")
+        mm.create_process(1, vma_blocks=256)
+        mm.ensure_range(1, 0, 64)
+        for _ in range(6):
+            mm.record_access(1, np.zeros(256))
+        kh = Khugepaged(mm)
+        assert sum(kh.tick() for _ in range(4)) == 0

@@ -1,0 +1,273 @@
+"""Policy VM: ISA semantics, verifier guarantees, interpreter == XLA JIT."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CTX, CTX_LEN, Asm, ArrayMap, FaultContext, FaultKind,
+                        JitPolicy, MapRegistry, PolicyVM, Profile,
+                        ProfileRegion, VerifierError, ebpf_mm_program,
+                        never_program, thp_always_program)
+from repro.core.isa import MAX_LOOP_ITERS, Op
+from repro.core.vm import HELPER_PROMOTION_COST
+
+
+def make_ctx(**kw) -> np.ndarray:
+    fc = FaultContext(
+        addr=kw.get("addr", 10), pid=1, vma_start=0,
+        vma_end=kw.get("vma_end", 4096),
+        fault_max_order=kw.get("fmax", 3),
+        has_profile=kw.get("has_profile", 1), profile_map_id=0,
+        profile_nregions=kw.get("nregions", 0),
+        free_blocks=kw.get("free", (100, 25, 6, 1)),
+        frag=kw.get("frag", (0, 100, 400, 900)),
+        heat=kw.get("heat", (5, 5, 5, 5)),
+        zero_ns_per_block=kw.get("zero", 700),
+        compact_ns_per_block=kw.get("compact", 1300),
+        descriptor_ns=800, block_bytes=65536)
+    return fc.vector()
+
+
+class TestInterpreter:
+    def test_alu_semantics(self):
+        a = Asm()
+        a.movi("r1", 7).movi("r2", -3)
+        a.mul("r1", "r2")          # -21
+        a.movi("r3", 4)
+        a.div("r1", "r3")          # -5 (trunc toward zero)
+        a.movi("r4", 0)
+        a.div("r1", "r4")          # /0 -> 0
+        a.addi("r1", 41)
+        a.mov("r0", "r1")
+        a.exit()
+        vm = PolicyVM(a.build(), MapRegistry())
+        assert vm.run(make_ctx()).ret == 41
+
+    def test_mod_zero_keeps_lhs(self):
+        a = Asm()
+        a.movi("r1", 13).movi("r2", 0).mod("r1", "r2").mov("r0", "r1").exit()
+        assert PolicyVM(a.build(), MapRegistry()).run(make_ctx()).ret == 13
+
+    def test_wrapping_64bit(self):
+        a = Asm()
+        a.movi("r1", (1 << 62)).movi("r2", 4).mul("r1", "r2")
+        a.mov("r0", "r1").exit()
+        assert PolicyVM(a.build(), MapRegistry()).run(make_ctx()).ret == 0
+
+    def test_bounded_loop_sum(self):
+        a = Asm()
+        a.movi("r0", 0).movi("r1", 10)
+        a.label("loop")
+        a.addi("r0", 2)
+        a.jnzdec("r1", "loop")
+        a.exit()
+        assert PolicyVM(a.build(), MapRegistry()).run(make_ctx()).ret == 20
+
+    def test_map_lookup_oob_returns_zero(self):
+        maps = MapRegistry()
+        m = ArrayMap(8)
+        m.load([11, 22, 33])
+        maps.register(m)
+        a = Asm()
+        a.movi("r1", 99).ldmap("r0", 0, "r1").exit()
+        assert PolicyVM(a.build(), maps).run(make_ctx()).ret == 0
+        b = Asm()
+        b.movi("r1", 1).ldmap("r0", 0, "r1").exit()
+        assert PolicyVM(b.build(), maps).run(make_ctx()).ret == 22
+
+    def test_promotion_cost_helper(self):
+        a = Asm()
+        a.movi("r1", 2).call(HELPER_PROMOTION_COST).exit()
+        ctx = make_ctx(free=(10, 10, 5, 1), zero=700)
+        # free order-2 pages exist -> zeroing only: 700 * 16
+        assert PolicyVM(a.build(), MapRegistry()).run(ctx).ret == 700 * 16
+        ctx2 = make_ctx(free=(10, 10, 0, 1), zero=700, compact=1300,
+                        frag=(0, 0, 500, 0))
+        want = 700 * 16 + 1300 * 16 * 1500 // 1000
+        assert PolicyVM(a.build(), MapRegistry()).run(ctx2).ret == want
+
+
+class TestVerifier:
+    def test_rejects_uninit_read(self):
+        a = Asm()
+        a.mov("r0", "r5").exit()
+        with pytest.raises(VerifierError, match="uninitialized"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_oob_ctx(self):
+        a = Asm()
+        a.ldctx("r0", CTX_LEN + 3).exit()
+        with pytest.raises(VerifierError, match="ctx offset"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_unknown_map(self):
+        a = Asm()
+        a.movi("r1", 0).ldmap("r0", 5, "r1").exit()
+        with pytest.raises(VerifierError, match="map id"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_unbounded_loop(self):
+        a = Asm()
+        a.ldctx("r1", CTX.ADDR)      # counter not a tracked constant
+        a.movi("r0", 0)
+        a.label("loop")
+        a.addi("r0", 1)
+        a.jnzdec("r1", "loop")
+        a.exit()
+        with pytest.raises(VerifierError, match="constant"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_excessive_trip_count(self):
+        a = Asm()
+        a.movi("r1", MAX_LOOP_ITERS + 1).movi("r0", 0)
+        a.label("loop")
+        a.addi("r0", 1)
+        a.jnzdec("r1", "loop")
+        a.exit()
+        with pytest.raises(VerifierError, match="trip count"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_counter_clobber(self):
+        a = Asm()
+        a.movi("r1", 8).movi("r0", 0)
+        a.label("loop")
+        a.movi("r1", 8)              # body writes the loop counter
+        a.jnzdec("r1", "loop")
+        a.exit()
+        with pytest.raises(VerifierError, match="counter"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_missing_exit(self):
+        a = Asm()
+        a.movi("r0", 1)
+        with pytest.raises(VerifierError):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_unknown_helper(self):
+        a = Asm()
+        a.call(999).exit()
+        with pytest.raises(VerifierError, match="helper"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_rejects_div_by_zero_imm(self):
+        a = Asm()
+        a.movi("r0", 1).divi("r0", 0).exit()
+        with pytest.raises(VerifierError, match="division"):
+            PolicyVM(a.build(), MapRegistry())
+
+    def test_accepts_builtin_programs(self):
+        maps = MapRegistry()
+        m = ArrayMap(512)
+        maps.register(m)
+        for prog in (ebpf_mm_program(0), thp_always_program(),
+                     never_program()):
+            PolicyVM(prog, maps)     # must not raise
+
+
+ALU_IMM_OPS = [Op.MOVI, Op.ADDI, Op.SUBI, Op.MULI, Op.ANDI, Op.ORI, Op.XORI,
+               Op.LSHI, Op.RSHI, Op.MINI, Op.MAXI]
+
+
+@st.composite
+def straight_line_program(draw):
+    """Random verified straight-line ALU program over ctx loads."""
+    a = Asm()
+    a.movi("r0", draw(st.integers(-1000, 1000)))
+    for r in range(1, 6):
+        a.ldctx(f"r{r}", draw(st.integers(0, CTX_LEN - 1)))
+    n = draw(st.integers(1, 30))
+    for _ in range(n):
+        op = draw(st.sampled_from(ALU_IMM_OPS + ["reg"]))
+        dst = f"r{draw(st.integers(0, 5))}"
+        if op == "reg":
+            regop = draw(st.sampled_from(
+                ["add", "sub", "mul", "and_", "or_", "xor", "min_", "max_",
+                 "div", "mod"]))
+            getattr(a, regop)(dst, f"r{draw(st.integers(0, 5))}")
+        else:
+            imm = draw(st.integers(-(2**31), 2**31 - 1))
+            if op in (Op.LSHI, Op.RSHI):
+                imm = draw(st.integers(0, 63))
+            getattr(a, op.name.lower())(dst, imm)
+    a.exit()
+    return a.build("fuzz")
+
+
+class TestJitEquivalence:
+    @settings(max_examples=40, deadline=None)
+    @given(prog=straight_line_program(),
+           addr=st.integers(0, 2**31 - 1),
+           heat=st.tuples(*[st.integers(0, 10**6)] * 4))
+    def test_interpreter_matches_jit(self, prog, addr, heat):
+        maps = MapRegistry()
+        ctx = make_ctx(addr=addr, heat=heat)
+        host = PolicyVM(prog, maps).run(ctx).ret
+        dev = JitPolicy(prog, maps).run(ctx)
+        assert host == dev
+
+    @settings(max_examples=15, deadline=None)
+    @given(prog=straight_line_program(),
+           addr=st.integers(0, 2**31 - 1),
+           heat=st.tuples(*[st.integers(0, 10**6)] * 4))
+    def test_interpreter_matches_predicated(self, prog, addr, heat):
+        from repro.core.predicate import PredicatedPolicy
+        maps = MapRegistry()
+        ctx = make_ctx(addr=addr, heat=heat)
+        host = PolicyVM(prog, maps).run(ctx).ret
+        dev = PredicatedPolicy(prog, maps).run_batch(ctx[None])[0]
+        assert host == dev
+
+    def test_predicated_loop_program(self):
+        """Bounded-loop unrolling + if-conversion == interpreter, for a
+        region-search loop with early exit and a helper call."""
+        from repro.core.predicate import PredicatedPolicy
+        from repro.core.vm import HELPER_PROMOTION_COST
+        maps = MapRegistry()
+        m = ArrayMap(64)
+        m.load([0, 16, 0, 9000, 90000, 900000, 16, 4096, 0, 0, 0, 0])
+        maps.register(m)
+        a = Asm()
+        a.ldctx("r1", CTX.ADDR)
+        a.movi("r8", -1).movi("r4", 0).movi("r3", 8)
+        a.label("loop")
+        a.mov("r9", "r4").muli("r9", 6)
+        a.ldmap("r5", 0, "r9")
+        a.jgt("r5", "r1", "nx")
+        a.mov("r10", "r9").addi("r10", 1)
+        a.ldmap("r5", 0, "r10")
+        a.jle("r5", "r1", "nx")
+        a.mov("r8", "r9")
+        a.ja("done")
+        a.label("nx")
+        a.addi("r4", 1)
+        a.jnzdec("r3", "loop")
+        a.label("done")
+        a.jlti("r8", 0, "fb")
+        a.movi("r1", 1)
+        a.call(HELPER_PROMOTION_COST)
+        a.exit()
+        a.label("fb")
+        a.movi("r0", -1)
+        a.exit()
+        prog = a.build("mini")
+        vm = PolicyVM(prog, maps)
+        ctxs = np.stack([make_ctx(addr=x) for x in (0, 10, 16, 100, 4000)])
+        host = [vm.run(c).ret for c in ctxs]
+        dev = PredicatedPolicy(prog, maps).run_batch(ctxs)
+        assert host == list(dev)
+
+    def test_fig1_program_matches_jit_batch(self):
+        maps = MapRegistry()
+        m = ArrayMap(512)
+        prof = Profile("app", [ProfileRegion(0, 64, (0, 9000, 90000, 900000)),
+                               ProfileRegion(64, 512, (0, 0, 0, 0))])
+        prof.load_into(m)
+        maps.register(m)
+        prog = ebpf_mm_program(0)
+        vm = PolicyVM(prog, maps)
+        jp = JitPolicy(prog, maps)
+        ctxs = np.stack([make_ctx(addr=a, nregions=2)
+                         for a in (0, 5, 63, 64, 100, 400)])
+        host = [vm.run(c).ret for c in ctxs]
+        dev = jp.run_batch(ctxs)
+        assert host == list(dev)

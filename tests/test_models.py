@@ -1,0 +1,178 @@
+"""Per-arch smoke tests (reduced configs): one train + serve step on CPU,
+shape/NaN asserts; decode-vs-forward consistency; layer math references."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config, SHAPES, \
+    supports_shape
+from repro.models import (PagedLayout, cache_init, decode_step, lm_loss,
+                          materialize, model_forward, model_spec, prefill_step)
+from repro.models.common import pad_vocab
+
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 32
+LAYOUT = PagedLayout(num_blocks=64, block_tokens=4, max_blocks=16)
+
+
+def make_batch(cfg, b=B, s=S):
+    batch = {"tokens": jax.random.randint(RNG, (b, s + 1), 0, cfg.vocab)}
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(RNG, (b, cfg.enc_frames, cfg.d_model))
+    if cfg.vlm_patches:
+        batch["patches"] = jax.random.normal(RNG, (b, cfg.vlm_patches, cfg.d_model))
+        batch["pos3d"] = jnp.tile(
+            jnp.arange(s, dtype=jnp.float32)[None, None], (3, b, 1))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = get_smoke_config(arch)
+        params = materialize(RNG, model_spec(cfg))
+        batch = make_batch(cfg)
+        loss, parts = jax.jit(
+            lambda p, b: lm_loss(p, cfg, b, chunk=16))(params, batch)
+        assert jnp.isfinite(loss)
+        grads = jax.grad(
+            lambda p: lm_loss(p, cfg, make_batch(cfg), chunk=16)[0])(params)
+        gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gn) and gn > 0
+
+    def test_forward_shapes(self, arch):
+        cfg = get_smoke_config(arch)
+        params = materialize(RNG, model_spec(cfg))
+        batch = make_batch(cfg)
+        logits, aux = model_forward(
+            params, cfg, batch["tokens"][:, :-1],
+            frames=batch.get("frames"), patches=batch.get("patches"),
+            pos3d=batch.get("pos3d"), chunk=16)
+        assert logits.shape == (B, S, pad_vocab(cfg.vocab))
+        assert jnp.isfinite(logits).all()
+
+    def test_serve_roundtrip(self, arch):
+        cfg = get_smoke_config(arch)
+        params = materialize(RNG, model_spec(cfg))
+        cache = cache_init(cfg, LAYOUT, B)
+        tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab)
+        tbl = np.full((B, LAYOUT.max_blocks), -1, np.int32)
+        for b in range(B):
+            tbl[b, :S // 4 + 2] = np.arange(S // 4 + 2) + b * 12
+        tbl = jnp.asarray(tbl)
+        kw = {}
+        if cfg.enc_dec:
+            kw["frames"] = jax.random.normal(RNG, (B, cfg.enc_frames, cfg.d_model))
+        if cfg.vlm_patches:
+            kw["patches"] = jax.random.normal(RNG, (B, cfg.vlm_patches, cfg.d_model))
+            kw["pos3d"] = jnp.tile(
+                jnp.arange(S, dtype=jnp.float32)[None, None], (3, B, 1))
+        logits, cache = prefill_step(params, cfg, cache, tokens, tbl, LAYOUT,
+                                     chunk=16, **kw)
+        assert jnp.isfinite(logits).all()
+        lengths = jnp.full((B,), S, jnp.int32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos3d = (jnp.tile(lengths.astype(jnp.float32)[None, :, None],
+                          (3, 1, 1)) if cfg.vlm_patches else None)
+        logits2, cache, heat = decode_step(params, cfg, cache, tok, lengths,
+                                           tbl, LAYOUT, pos3d=pos3d)
+        assert jnp.isfinite(logits2).all()
+        assert heat.shape == (B, LAYOUT.max_blocks)
+        assert float(heat.sum()) >= 0
+
+
+class TestDecodeForwardConsistency:
+    """Greedy decode through the paged path must match teacher-forced
+    forward logits (same positions, f32 numerics tolerance)."""
+
+    @pytest.mark.parametrize("arch", ["deepseek_7b", "gemma3_27b",
+                                      "mamba2_1p3b", "deepseek_v2_lite_16b"])
+    def test_prefill_then_decode_matches_forward(self, arch):
+        cfg = get_smoke_config(arch)
+        params = materialize(RNG, model_spec(cfg))
+        s0 = 16
+        tokens = jax.random.randint(jax.random.PRNGKey(3), (1, s0 + 1),
+                                    0, cfg.vocab)
+        # teacher-forced forward logits at position s0-1 given tokens[:s0]
+        full_logits, _ = model_forward(params, cfg, tokens[:, :s0], chunk=8,
+                                       compute_dtype=jnp.float32, remat=False)
+        cache = cache_init(cfg, LAYOUT, 1, dtype=jnp.float32)
+        tbl = jnp.asarray(np.arange(LAYOUT.max_blocks, dtype=np.int32)[None])
+        pre_logits, cache = prefill_step(params, cfg, cache, tokens[:, :s0],
+                                         tbl, LAYOUT, chunk=8,
+                                         compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(pre_logits),
+                                   np.asarray(full_logits[:, -1]),
+                                   rtol=2e-3, atol=2e-3)
+        # decode one token and compare with forward over s0+1 tokens
+        full2, _ = model_forward(params, cfg, tokens[:, :s0 + 1], chunk=8,
+                                 compute_dtype=jnp.float32, remat=False)
+        dec_logits, cache, _ = decode_step(
+            params, cfg, cache, tokens[:, s0], jnp.asarray([s0], jnp.int32),
+            tbl, LAYOUT, compute_dtype=jnp.float32)
+        if cfg.moe is not None:
+            # MoE routing is DISCONTINUOUS: the decode path computes attention
+            # with gather (vs chunked flash in forward), and ~1e-6 numeric
+            # differences can flip a near-tied top-k expert, shifting logits
+            # by O(0.1). The serving-relevant invariant is greedy-token
+            # agreement; dense archs below get the tight logits check.
+            assert int(jnp.argmax(dec_logits)) == int(jnp.argmax(full2[:, -1]))
+        else:
+            np.testing.assert_allclose(np.asarray(dec_logits),
+                                       np.asarray(full2[:, -1]),
+                                       rtol=2e-3, atol=2e-3)
+
+
+class TestConfigsMatchAssignment:
+    """Pin the exact published numbers from the assignment table."""
+
+    def test_values(self):
+        want = {
+            "nemotron_4_15b": (32, 6144, 48, 8, 24576, 256000),
+            "deepseek_7b": (30, 4096, 32, 32, 11008, 102400),
+            "phi3_mini_3p8b": (32, 3072, 32, 32, 8192, 32064),
+            "gemma3_27b": (62, 5376, 32, 16, 21504, 262144),
+            "qwen2_vl_7b": (28, 3584, 28, 4, 18944, 152064),
+            "jamba_v0_1_52b": (32, 4096, 32, 8, 14336, 65536),
+            "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+            "mamba2_1p3b": (48, 2048, 32, 32, 0, 50280),
+        }
+        for arch, (L, d, H, kv, ff, V) in want.items():
+            cfg = get_config(arch)
+            assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads,
+                    cfg.d_ff, cfg.vocab) == (L, d, H, kv, ff, V), arch
+
+    def test_moe_configs(self):
+        moe16 = get_config("deepseek_moe_16b")
+        assert (moe16.moe.num_experts, moe16.moe.top_k,
+                moe16.moe.d_ff_expert, moe16.moe.num_shared) == (64, 6, 1408, 2)
+        lite = get_config("deepseek_v2_lite_16b")
+        assert lite.mla.kv_lora == 512
+        assert (lite.moe.num_experts, lite.moe.top_k) == (64, 6)
+        jamba = get_config("jamba_v0_1_52b")
+        assert (jamba.moe.num_experts, jamba.moe.top_k) == (16, 2)
+        assert jamba.hybrid_pattern.count("a") == 1
+        assert len(jamba.hybrid_pattern) == 8
+        m2 = get_config("mamba2_1p3b")
+        assert m2.mamba.d_state == 128
+
+    def test_shape_skip_rules(self):
+        long = SHAPES["long_500k"]
+        ok, _ = supports_shape(get_config("mamba2_1p3b"), long)
+        assert ok
+        ok, _ = supports_shape(get_config("jamba_v0_1_52b"), long)
+        assert ok
+        ok, _ = supports_shape(get_config("gemma3_27b"), long)
+        assert ok
+        for arch in ("nemotron_4_15b", "deepseek_7b", "phi3_mini_3p8b",
+                     "deepseek_v2_lite_16b", "qwen2_vl_7b", "whisper_medium"):
+            ok, reason = supports_shape(get_config(arch), long)
+            assert not ok and reason, arch
+
+    def test_gemma_pattern(self):
+        cfg = get_config("gemma3_27b")
+        kinds = cfg.attn_kinds()
+        assert kinds[:6] == ("l", "l", "l", "l", "l", "g")
+        assert sum(1 for k in kinds if k == "g") == 10  # 62 layers, 5:1

@@ -1,0 +1,138 @@
+"""End-to-end system behaviour: serving engine across policies (the paper's
+workflow), trainer with crash-restart, and the policy-comparison properties
+behind Figure 2."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs.base import get_smoke_config
+from repro.core import Profile, ProfileRegion
+from repro.data.pipeline import make_batch_iter
+from repro.distributed.fault import SimulatedFailure
+from repro.models import PagedLayout, materialize, model_spec
+from repro.serving import Request, ServingEngine
+from repro.training.trainer import Trainer, TrainerConfig
+
+RNG = jax.random.PRNGKey(0)
+
+
+def hot_prefix_profile(max_blocks):
+    return Profile("chat", [
+        ProfileRegion(0, max(4, max_blocks // 4),
+                      (0, 150_000, 600_000, 2_500_000)),
+        ProfileRegion(max(4, max_blocks // 4), max_blocks, (0, 0, 0, 0)),
+    ])
+
+
+class TestServingPolicies:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = get_smoke_config("deepseek_7b")
+        params = materialize(RNG, model_spec(cfg))
+        layout = PagedLayout(num_blocks=256, block_tokens=4, max_blocks=32)
+        return cfg, params, layout
+
+    def _run(self, setup, policy, n_req=4):
+        cfg, params, layout = setup
+        prof = hot_prefix_profile(layout.max_blocks) if policy == "ebpf" else None
+        eng = ServingEngine(cfg, params, layout, max_batch=2, policy=policy,
+                            profile=prof)
+        rng = np.random.default_rng(0)
+        for r in range(n_req):
+            eng.submit(Request(rid=r,
+                               prompt=rng.integers(1, cfg.vocab, 24).tolist(),
+                               max_new_tokens=10, app="chat"))
+        out = eng.run(max_steps=300)
+        assert out["engine"]["completed"] == n_req
+        return out
+
+    def test_all_policies_complete(self, setup):
+        for policy in ("never", "thp", "ebpf", "thp-prog", "never-prog"):
+            out = self._run(setup, policy)
+            assert out["engine"]["decode_tokens"] > 0
+
+    def test_fig2_ordering(self, setup):
+        """The paper's headline: eBPF-mm ~ THP performance (modeled time,
+        TLB-analogue) while allocating fewer huge pages than THP."""
+        never = self._run(setup, "never")
+        thp = self._run(setup, "thp")
+        ebpf = self._run(setup, "ebpf")
+        # translation-overhead analogue: never >> thp, ebpf
+        assert never["mm"]["descriptors_touched"] > \
+            1.5 * thp["mm"]["descriptors_touched"]
+        assert ebpf["mm"]["access_ns"] <= 1.2 * thp["mm"]["access_ns"]
+        # eBPF must not allocate MORE huge blocks than greedy THP
+        huge_ebpf = sum(n * 4 ** o for o, n in
+                        enumerate(ebpf["mm"]["pages_per_order"]) if o > 0)
+        huge_thp = sum(n * 4 ** o for o, n in
+                       enumerate(thp["mm"]["pages_per_order"]) if o > 0)
+        assert huge_ebpf <= huge_thp
+
+    def test_same_tokens_across_policies(self, setup):
+        """Memory policy must not change model outputs (greedy tokens)."""
+        outs = {}
+        for policy in ("never", "thp", "ebpf"):
+            cfg, params, layout = setup
+            prof = hot_prefix_profile(layout.max_blocks) if policy == "ebpf" else None
+            eng = ServingEngine(cfg, params, layout, max_batch=2,
+                                policy=policy, profile=prof)
+            eng.submit(Request(rid=0, prompt=list(range(1, 25)),
+                               max_new_tokens=8, app="chat"))
+            eng.run(max_steps=100)
+            outs[policy] = eng.finished[0]
+        assert outs["never"] == outs["thp"] == outs["ebpf"]
+
+    def test_preemption_under_pressure(self, setup):
+        cfg, params, _ = setup
+        tiny = PagedLayout(num_blocks=24, block_tokens=4, max_blocks=16)
+        eng = ServingEngine(cfg, params, tiny, max_batch=3, policy="never")
+        rng = np.random.default_rng(1)
+        for r in range(3):
+            eng.submit(Request(rid=r,
+                               prompt=rng.integers(1, cfg.vocab, 30).tolist(),
+                               max_new_tokens=16))
+        out = eng.run(max_steps=400)
+        assert out["engine"]["completed"] == 3
+        assert out["engine"]["preemptions"] >= 1
+
+
+class TestTrainerFaultTolerance:
+    def test_loss_decreases_and_restarts(self, tmp_path):
+        cfg = get_smoke_config("deepseek_7b")
+        params = materialize(RNG, model_spec(cfg))
+        data = make_batch_iter(cfg, batch=8, seq_len=32)
+        crash = {"armed": True}
+
+        def failure_hook(step):
+            if step == 12 and crash["armed"]:
+                crash["armed"] = False
+                raise SimulatedFailure()
+
+        trainer = Trainer(
+            TrainerConfig(num_steps=30, checkpoint_every=10, log_every=5,
+                          base_lr=1e-3, chunk=16),
+            cfg, params, data, CheckpointStore(tmp_path),
+            failure_hook=failure_hook)
+        out = trainer.run()
+        assert out["restarts"] == 1
+        assert out["final_step"] == 30
+        losses = [m["loss"] for m in out["metrics"]]
+        assert losses[-1] < losses[0] - 0.2, losses
+
+    def test_resume_from_checkpoint(self, tmp_path):
+        cfg = get_smoke_config("mamba2_1p3b")
+        params = materialize(RNG, model_spec(cfg))
+        data = make_batch_iter(cfg, batch=4, seq_len=16)
+        store = CheckpointStore(tmp_path)
+        t1 = Trainer(TrainerConfig(num_steps=10, checkpoint_every=5,
+                                   chunk=8), cfg, params, data, store)
+        t1.run()
+        # new trainer on the same dir resumes at step 10
+        t2 = Trainer(TrainerConfig(num_steps=15, checkpoint_every=5,
+                                   chunk=8), cfg, params, data, store)
+        assert t2.start_step == 10
+        out = t2.run()
+        assert out["final_step"] == 15
