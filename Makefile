@@ -1,0 +1,19 @@
+# Developer entry points.  PYTHONPATH=src is the only environment the repo
+# needs; everything runs on a CPU-only host (kernels interpret via Pallas).
+
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test bench-smoke bench
+
+# tier-1 verify: the gate every PR must keep green
+test:
+	$(PY) -m pytest -x -q
+
+# tier-1 tests + the tiered-memory capacity sweep in smoke mode
+bench-smoke: test
+	$(PY) -m benchmarks.capacity_sweep --smoke
+
+# full benchmark harness (fig2 policy sweep, capacity sweep, VM, kernels)
+bench:
+	$(PY) -m benchmarks.run

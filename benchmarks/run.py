@@ -6,6 +6,9 @@ Sections:
                     TLB-analogue descriptors, huge-page fraction) + the
                     hook-overhead microbench ("zero overhead on non-hinted
                     faults").
+  capacity_*        tiered-memory capacity sweep: concurrently-resident
+                    sequences vs HBM size, ebpf-tier vs preempt-only
+                    (demote-before-preempt over the host-DRAM tier).
   vm_*              eBPF-VM interpreter vs XLA-JIT batch execution.
   paged_read_*      multi-size page DMA model (descriptor amortization /
                     effective HBM bandwidth per page size — the TLB-reach
@@ -22,11 +25,12 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_kernels, bench_vm, fig2_policy_sweep
+    from . import bench_kernels, bench_vm, capacity_sweep, fig2_policy_sweep
 
     print("name,us_per_call,derived")
     sections = [
         ("fig2", fig2_policy_sweep.main),
+        ("capacity", lambda: capacity_sweep.main(smoke=True)),
         ("vm", bench_vm.main),
         ("kernels", bench_kernels.main),
     ]

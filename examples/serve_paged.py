@@ -1,8 +1,13 @@
 """End-to-end serving driver: continuous batching over a real (smoke-size)
 model with the eBPF-mm paged KV cache — batched requests, page faults on
-block crossings, DAMON heat from attention mass, preemption under pressure.
+block crossings, DAMON heat from attention mass, and (with --host-blocks)
+the tiered-memory subsystem: under pressure cold KV blocks are demoted to a
+host-DRAM tier over PCIe instead of preempting whole sequences, and promoted
+back when they re-heat.  Without a host tier, preemption under pressure.
 
 Run:  PYTHONPATH=src python examples/serve_paged.py [--arch gemma3_27b]
+      PYTHONPATH=src python examples/serve_paged.py \
+          --hbm-blocks 48 --host-blocks 256 --tier ebpf-tier   # tiered
 """
 
 import argparse
@@ -21,12 +26,22 @@ ap.add_argument("--arch", default="gemma3_27b")
 ap.add_argument("--policy", default="ebpf",
                 choices=["ebpf", "thp", "never"])
 ap.add_argument("--requests", type=int, default=8)
+ap.add_argument("--hbm-blocks", type=int, default=512,
+                help="modeled HBM pool size in blocks")
+ap.add_argument("--host-blocks", type=int, default=0,
+                help="host-DRAM tier size in blocks (0 = no tiering)")
+ap.add_argument("--tier", default="ebpf-tier",
+                choices=["ebpf-tier", "lru-tier", "never-tier", "default"],
+                help="mm_tier hook policy (used when --host-blocks > 0)")
 args = ap.parse_args()
 
 cfg = get_smoke_config(args.arch)
-print(f"serving {cfg.name} ({args.policy} policy)")
+tier_note = (f", {args.tier} over {args.host_blocks} host blocks"
+             if args.host_blocks else "")
+print(f"serving {cfg.name} ({args.policy} policy{tier_note})")
 params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
-layout = PagedLayout(num_blocks=512, block_tokens=4, max_blocks=32)
+layout = PagedLayout(num_blocks=args.hbm_blocks, block_tokens=4,
+                     max_blocks=32)
 
 profile = Profile("chat", [
     ProfileRegion(0, 8, (0, 150_000, 600_000, 2_500_000)),   # hot prefix
@@ -34,7 +49,8 @@ profile = Profile("chat", [
 ]) if args.policy == "ebpf" else None
 
 engine = ServingEngine(cfg, params, layout, max_batch=4, policy=args.policy,
-                       profile=profile)
+                       profile=profile, host_blocks=args.host_blocks,
+                       tier_policy=args.tier)
 rng = np.random.default_rng(0)
 for r in range(args.requests):
     plen = int(rng.integers(16, 48))

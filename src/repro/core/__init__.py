@@ -13,11 +13,13 @@ The paper's contribution as a composable library:
     manager with the fault hook (the kernel side).
   * :mod:`programs` — Figure-1 policy + THP/never baselines as bytecode.
   * :mod:`khugepaged` — background promotion (async collapse).
+  * :mod:`tiering` — HBM <-> host-DRAM tiered placement behind ``HOOK_TIER``
+    (second buddy pool, PCIe-costed migration engine, demote/promote scans).
 """
 
 from .buddy import BuddyAllocator, BuddyError, BuddyStats, order_blocks
 from .context import (CTX, CTX_LEN, FIXED_POINT, NUM_ORDERS, POLICY_FALLBACK,
-                      FaultContext, FaultKind)
+                      TIER_DEMOTE, TIER_KEEP, FaultContext, FaultKind)
 from .cost import CostModel, HWSpec, make_cost_model
 from .damon import Damon, Region
 from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
@@ -31,9 +33,12 @@ from .predicate import PredicatedPolicy, compile_predicated
 from .profiles import (MAX_PROFILE_REGIONS, REGION_STRIDE, Profile,
                        ProfileRegion, profile_from_heat)
 from .programs import (ebpf_mm_program, never_program, reclaim_lru_program,
-                       thp_always_program)
+                       thp_always_program, tier_damon_program,
+                       tier_lru_program, tier_never_program)
+from .tiering import (TIER_HBM, TIER_HOST, TierConfig, TieredMemoryManager)
 from .verifier import VerifierError, verify
-from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_PROMOTION_COST, HELPER_TRACE,
-                 PolicyVM, RunResult, VMFault)
+from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,
+                 HELPER_PROMOTION_COST, HELPER_TRACE, PolicyVM, RunResult,
+                 VMFault)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

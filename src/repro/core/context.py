@@ -56,7 +56,19 @@ class CTX(enum.IntEnum):
     MEM_PRESSURE = 25        # FIXED_POINT-scaled pool utilization
     FAULT_KIND = 26          # FaultKind enum value
     SEQ_LEN = 27             # current logical length of the owning sequence
-    CTX_LEN = 28             # number of fields; keep last
+    # Tiered-memory state (host-DRAM second pool behind the mm_tier hook)
+    TIER_FREE_BLOCKS = 28    # free base blocks in the host-DRAM tier
+    TIER_TOTAL_BLOCKS = 29   # capacity of the host-DRAM tier
+    TIER_PRESSURE = 30       # FIXED_POINT-scaled host-tier utilization
+    PCIE_NS_PER_BLOCK = 31   # modeled ns to move one base block across PCIe
+    # Candidate page under a tier decision (mm_tier hook only)
+    PAGE_TIER = 32           # current tier of the candidate page (0=HBM, 1=host)
+    PAGE_ORDER = 33          # order of the candidate page
+    PAGE_AGE = 34            # engine ticks since the page last changed tiers
+    PAGE_HEAT = 35           # DAMON heat of the page's own span, FIXED_POINT-scaled
+    MIGRATE_SETUP_NS = 36    # fixed per-migration DMA setup cost
+    MIGRATE_NS_PER_BLOCK = 37  # PCIe + HBM-side cost per migrated base block
+    CTX_LEN = 38             # number of fields; keep last
 
 
 CTX_LEN = int(CTX.CTX_LEN)
@@ -90,6 +102,16 @@ class FaultContext:
     mem_pressure: int = 0
     fault_kind: int = int(FaultKind.FIRST_TOUCH)
     seq_len: int = 0
+    tier_free_blocks: int = 0
+    tier_total_blocks: int = 0
+    tier_pressure: int = 0
+    pcie_ns_per_block: int = 0
+    page_tier: int = 0
+    page_order: int = 0
+    page_age: int = 0
+    page_heat: int = 0
+    migrate_setup_ns: int = 0
+    migrate_ns_per_block: int = 0
 
     def vector(self) -> np.ndarray:
         v = np.zeros(CTX_LEN, dtype=np.int64)
@@ -112,8 +134,25 @@ class FaultContext:
         v[CTX.MEM_PRESSURE] = self.mem_pressure
         v[CTX.FAULT_KIND] = self.fault_kind
         v[CTX.SEQ_LEN] = self.seq_len
+        v[CTX.TIER_FREE_BLOCKS] = self.tier_free_blocks
+        v[CTX.TIER_TOTAL_BLOCKS] = self.tier_total_blocks
+        v[CTX.TIER_PRESSURE] = self.tier_pressure
+        v[CTX.PCIE_NS_PER_BLOCK] = self.pcie_ns_per_block
+        v[CTX.PAGE_TIER] = self.page_tier
+        v[CTX.PAGE_ORDER] = self.page_order
+        v[CTX.PAGE_AGE] = self.page_age
+        v[CTX.PAGE_HEAT] = self.page_heat
+        v[CTX.MIGRATE_SETUP_NS] = self.migrate_setup_ns
+        v[CTX.MIGRATE_NS_PER_BLOCK] = self.migrate_ns_per_block
         return v
 
 
 # Return-value convention for fault-hook programs.
 POLICY_FALLBACK = -1     # defer to the kernel default policy
+
+# Return-value convention for tier-hook (mm_tier) programs: where should the
+# candidate page live?  KEEP = HBM (promote if currently in the host tier),
+# DEMOTE = host DRAM (demote if currently in HBM).  FALLBACK defers to the
+# kernel-default tiering policy.
+TIER_KEEP = 0
+TIER_DEMOTE = 1

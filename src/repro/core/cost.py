@@ -27,6 +27,11 @@ class HWSpec:
     peak_flops_bf16: float = 197e12          # per chip
     hbm_bw: float = 819e9                    # bytes/s
     ici_bw_per_link: float = 50e9            # bytes/s/link
+    # Host<->device interconnect (PCIe Gen4 x16 class): the bandwidth the
+    # host-DRAM KV tier is demoted to / promoted from.
+    pcie_bw: float = 32e9                    # bytes/s
+    # Fixed per-migration setup cost (DMA programming, sync) per tier crossing.
+    pcie_setup_ns: float = 2_000.0
     # Per-DMA-descriptor fixed overhead for a paged KV read. Order-of-magnitude
     # of a small async copy issue + bookkeeping. Empirically calibrated on the
     # kernel microbench; exposed so profiles can be recalibrated per platform.
@@ -57,6 +62,30 @@ class CostModel:
     def compact_ns_per_block(self) -> int:
         # migration = read + write of one block over HBM
         return int(2 * self.block_bytes / self.hw.hbm_bw * 1e9)
+
+    # ---- tiering side (HBM <-> host DRAM over PCIe) -----------------------
+    def pcie_ns_per_block(self) -> int:
+        """Modeled ns to move one base block across the host interconnect."""
+        return int(self.block_bytes / self.hw.pcie_bw * 1e9)
+
+    def migrate_ns_per_block(self) -> int:
+        """Per-block cost of a tier crossing: PCIe transfer + the HBM-side
+        read-or-write.  Exposed to tier programs via ctx so the
+        bpf_mm_migrate_cost helper charges exactly what the engine accounts."""
+        hbm_side = self.block_bytes / self.hw.hbm_bw * 1e9
+        return int(self.pcie_ns_per_block() + hbm_side)
+
+    def migrate_ns(self, order: int) -> int:
+        """One tier crossing of an order-k page: per-block transfer cost plus
+        the fixed DMA setup cost."""
+        return int(self.hw.pcie_setup_ns
+                   + (4 ** order) * self.migrate_ns_per_block())
+
+    def tier_access_ns(self, order: int) -> float:
+        """Modeled ns to stream one order-k page that is resident in the host
+        tier through the attention kernel (PCIe-bound, not HBM-bound)."""
+        page_bytes = self.block_bytes * (4 ** order)
+        return self.hw.descriptor_ns + page_bytes / self.hw.pcie_bw * 1e9
 
     def promotion_cost_ns(self, order: int, free_blocks: int, frag_milli: int) -> int:
         nblocks = 4 ** order

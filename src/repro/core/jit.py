@@ -5,6 +5,9 @@ scheduler frequently has to resolve *hundreds* of faults per engine step
 (every sequence that crossed a block boundary).  Because verified programs
 are bounded, we can compile the bytecode to XLA once and ``vmap`` it over the
 whole fault batch — a beyond-paper optimization recorded in EXPERIMENTS.md.
+The tiered-memory migration engine (:mod:`repro.core.tiering`) runs its
+demote/promote scans through the same batch path: one compiled mm_tier
+program vets every candidate page in a single vectorized call.
 
 Compilation strategy: the program becomes an instruction-pointer machine
   state = (pc, regs[11], fuel)
@@ -30,8 +33,8 @@ from .context import CTX
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Insn, Op, Program)
 from .maps import MapRegistry
-from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_PROMOTION_COST,
-                 HELPER_TRACE, _IMM2REG, _JIMM2REG)
+from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,
+                 HELPER_PROMOTION_COST, HELPER_TRACE, _IMM2REG, _JIMM2REG)
 from .verifier import verify
 
 I64 = jnp.int64
@@ -179,6 +182,11 @@ def compile_program(program: Program, maps: MapRegistry):
                     compact = (ctx[CTX.COMPACT_NS_PER_BLOCK] * nblocks
                                * (1000 + frag) // 1000)
                     r0 = zero + jnp.where(free > 0, 0, compact)
+                elif insn.imm == HELPER_MIGRATE_COST:
+                    order = jnp.clip(regs[1], 0, 3)
+                    nblocks = jnp.asarray(4, I64) ** order
+                    r0 = (ctx[CTX.MIGRATE_SETUP_NS]
+                          + ctx[CTX.MIGRATE_NS_PER_BLOCK] * nblocks)
                 elif insn.imm == HELPER_TRACE:
                     r0 = jnp.asarray(0, I64)  # trace is a host-only facility
                 else:  # pragma: no cover - verifier rejects unknown helpers

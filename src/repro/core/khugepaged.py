@@ -61,7 +61,8 @@ class Khugepaged:
         done = 0
         # candidate windows: aligned order-k ranges fully mapped at lower orders
         windows = sorted({(m.logical_start // size) * size
-                          for m in st.page_table.values() if m.order < k})
+                          for m in st.page_table.values()
+                          if m.order < k and m.tier == 0})
         bstats = mm.buddy.stats()
         for a in windows:
             if done >= budget:

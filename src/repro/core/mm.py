@@ -24,7 +24,7 @@ from .context import (CTX, CTX_LEN, NUM_ORDERS, POLICY_FALLBACK, FaultContext,
                       FaultKind)
 from .cost import CostModel
 from .damon import Damon
-from .hooks import HOOK_FAULT, HOOK_RECLAIM, HookRegistry
+from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
 from .maps import ArrayMap, MapRegistry
 from .profiles import MAX_PROFILE_REGIONS, Profile
 
@@ -42,8 +42,9 @@ class MMOutOfMemory(MMError):
 @dataclass
 class PageMapping:
     logical_start: int
-    phys_start: int
+    phys_start: int               # block index within the owning tier's pool
     order: int
+    tier: int = 0                 # 0 = HBM, 1 = host DRAM (see core.tiering)
 
 
 @dataclass
@@ -75,6 +76,12 @@ class MMStats:
     mgmt_ns: int = 0                  # modeled time spent on zero/compact/migrate
     access_ns: int = 0                # modeled time streaming pages for attention
     descriptors_touched: int = 0      # TLB-miss analogue
+    # Tiered-memory counters (HBM <-> host DRAM; see core.tiering)
+    demotions: int = 0                # pages moved HBM -> host tier
+    demotion_blocks: int = 0
+    tier_promotions: int = 0          # pages moved host tier -> HBM
+    tier_promotion_blocks: int = 0
+    tier_reads: int = 0               # attention reads served from the host tier
 
     def snapshot(self) -> dict:
         return {
@@ -91,6 +98,11 @@ class MMStats:
             "mgmt_ns": self.mgmt_ns,
             "access_ns": self.access_ns,
             "descriptors_touched": self.descriptors_touched,
+            "demotions": self.demotions,
+            "demotion_blocks": self.demotion_blocks,
+            "tier_promotions": self.tier_promotions,
+            "tier_promotion_blocks": self.tier_promotion_blocks,
+            "tier_reads": self.tier_reads,
         }
 
 
@@ -138,6 +150,9 @@ class MemoryManager:
     def attach_reclaim_program(self, program) -> None:
         self.hooks.attach(HOOK_RECLAIM, program, self.maps)
 
+    def attach_tier_program(self, program) -> None:
+        self.hooks.attach(HOOK_TIER, program, self.maps)
+
     # ------------------------------------------------------------- processes
     def create_process(self, pid: int, *, app: str | None = None,
                        vma_blocks: int = 0) -> ProcessState:
@@ -157,7 +172,15 @@ class MemoryManager:
     def free_process(self, pid: int) -> None:
         st = self.procs.pop(pid)
         for m in st.page_table.values():
-            self.buddy.free(m.phys_start)
+            self._free_phys(m)
+
+    def _free_phys(self, m: PageMapping) -> None:
+        """Release a mapping's physical page into its tier's allocator."""
+        self.buddy.free(m.phys_start)
+
+    def _device_index(self, m: PageMapping) -> int:
+        """Base-block index of ``m`` in the device-visible (combined) pool."""
+        return m.phys_start
 
     # ---------------------------------------------------------------- faults
     def fault_max_order(self, st: ProcessState, addr: int) -> int:
@@ -278,19 +301,24 @@ class MemoryManager:
         return FaultResult(order=order, phys_start=phys, hinted=hinted,
                            compacted=compacted, moves=moves)
 
-    def _apply_compaction(self, plan: list[tuple[int, int, int]]) -> None:
+    def _apply_compaction(self, plan: list[tuple[int, int, int]], *,
+                          tier: int = 0, device_offset: int = 0) -> None:
         """Buddy already mutated its allocation map; fix page tables and
-        account the migration cost + device move list."""
+        account the migration cost + device move list.  ``tier`` selects
+        which tier's mappings the plan refers to (each tier's pool has its
+        own phys numbering) and ``device_offset`` shifts the emitted moves
+        into combined device coordinates."""
         self.stats.compactions += 1
         remap = {src: dst for src, dst, _ in plan}
         for st in self.procs.values():
             for m in st.page_table.values():
-                if m.phys_start in remap:
+                if m.tier == tier and m.phys_start in remap:
                     m.phys_start = remap[m.phys_start]
         blocks = sum(order_blocks(o) for _, _, o in plan)
         self.stats.compaction_blocks_moved += blocks
         self.stats.mgmt_ns += self.cost.compact_ns_per_block() * blocks
-        self._move_log.extend(plan)
+        self._move_log.extend((device_offset + s, device_offset + d, o)
+                              for s, d, o in plan)
 
     # ---------------------------------------------------------- khugepaged
     def collapse(self, pid: int, addr: int, to_order: int) -> FaultResult | None:
@@ -306,6 +334,8 @@ class MemoryManager:
                if m.logical_start >= a and m.logical_start < a + size]
         if any(m.order >= to_order for m in old):
             return None   # already backed at >= target order
+        if any(m.tier != 0 for m in old):
+            return None   # demoted pages must be promoted before collapsing
         try:
             phys = self.buddy.alloc(to_order)
         except BuddyError:
@@ -376,7 +406,12 @@ class MemoryManager:
             hi = min(m.logical_start + order_blocks(m.order), heat.size)
             if hi > lo and csum[hi] - csum[lo] > 0:
                 self.stats.descriptors_touched += 1
-                self.stats.access_ns += int(self.cost.access_ns(m.order))
+                if m.tier == 0:
+                    self.stats.access_ns += int(self.cost.access_ns(m.order))
+                else:
+                    # host-tier resident page: the read crosses PCIe
+                    self.stats.tier_reads += 1
+                    self.stats.access_ns += int(self.cost.tier_access_ns(m.order))
 
     def descriptors_for(self, pid: int) -> int:
         return len(self.procs[pid].page_table)
@@ -389,8 +424,9 @@ class MemoryManager:
         for m in st.page_table.values():
             size = order_blocks(m.order)
             hi = min(m.logical_start + size, max_blocks)
+            base = self._device_index(m)
             for i in range(m.logical_start, hi):
-                t[i] = m.phys_start + (i - m.logical_start)
+                t[i] = base + (i - m.logical_start)
         return t
 
     def page_lists_by_order(self, pids: list[int]) -> dict[int, np.ndarray]:
@@ -404,7 +440,8 @@ class MemoryManager:
             st = self.procs[pid]
             for m in st.mappings_sorted():
                 out[m.order].append(
-                    (slot, m.logical_start // order_blocks(m.order), m.phys_start))
+                    (slot, m.logical_start // order_blocks(m.order),
+                     self._device_index(m)))
         return {k: np.asarray(v, dtype=np.int32).reshape(-1, 3)
                 for k, v in out.items()}
 

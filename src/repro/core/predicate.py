@@ -31,8 +31,8 @@ from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Insn, Op, Program)
 from .jit import _alu_jnp, _cmp_jnp
 from .maps import MapRegistry
-from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_PROMOTION_COST,
-                 HELPER_TRACE, _IMM2REG, _JIMM2REG)
+from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,
+                 HELPER_PROMOTION_COST, HELPER_TRACE, _IMM2REG, _JIMM2REG)
 from .verifier import verify
 
 I64 = jnp.int64
@@ -211,6 +211,11 @@ def compile_predicated(program: Program, maps: MapRegistry) -> Callable:
                     compact = (ctx[:, CTX.COMPACT_NS_PER_BLOCK] * nblocks
                                * (1000 + frag) // 1000)
                     r0 = zero + jnp.where(free > 0, 0, compact)
+                elif insn.imm == HELPER_MIGRATE_COST:
+                    order = jnp.clip(regs[1], 0, 3)
+                    nblocks = jnp.asarray(4, I64) ** order
+                    r0 = (ctx[:, CTX.MIGRATE_SETUP_NS]
+                          + ctx[:, CTX.MIGRATE_NS_PER_BLOCK] * nblocks)
                 else:   # HELPER_TRACE and friends: host-only, no-op
                     r0 = jnp.zeros(B, I64)
                 regs = write(regs, 0, r0, active)

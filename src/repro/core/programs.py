@@ -13,14 +13,19 @@
 ``thp_always_program`` / ``never_program`` reproduce the kernel baselines
 (THP greedily maps PMD-size = order 2; never = base pages only) as loadable
 programs so the hook overhead itself can be benchmarked.
+
+``tier_damon_program`` / ``tier_lru_program`` / ``tier_never_program`` are
+mm_tier-hook policies for the tiered-memory subsystem (:mod:`repro.core.
+tiering`): DAMON-heat admission control, an LRU-demote baseline, and a
+never-tier baseline that forces the preemption fallback.
 """
 
 from __future__ import annotations
 
-from .context import CTX, POLICY_FALLBACK
+from .context import CTX, POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP
 from .isa import Asm, Program
 from .profiles import MAX_PROFILE_REGIONS, REGION_STRIDE
-from .vm import HELPER_PROMOTION_COST
+from .vm import HELPER_MIGRATE_COST, HELPER_PROMOTION_COST
 
 
 def ebpf_mm_program(profile_map_id: int | None = None,
@@ -132,6 +137,98 @@ def never_program() -> Program:
     a.movi("r0", 0)
     a.exit()
     return a.build("thp_never")
+
+
+def tier_damon_program(cold_heat_milli: int = 100, promote_horizon: int = 4,
+                       pressure_milli: int = 700) -> Program:
+    """DAMON-heat admission control for the mm_tier hook (TierBPF-style).
+
+    For an HBM candidate: under soft pressure, approve demotion only when the
+    page's own DAMON heat (FIXED_POINT-scaled accesses/window) is below
+    ``cold_heat_milli`` — hot pages are vetoed, which is exactly the
+    admission control that keeps proactive migration from thrashing.  Under
+    HARD pressure (pool effectively full) the veto is waived: reclaim offers
+    pages coldest-first and the alternative is whole-sequence preemption.
+    For a host-tier candidate: promote only when there is HBM headroom AND
+    the modeled PCIe penalty it pays per aggregation window, amortized over
+    ``promote_horizon`` windows, exceeds the one-off migration cost
+    (bpf_mm_migrate_cost helper).
+    """
+    a = Asm()
+    a.ldctx("r1", CTX.PAGE_TIER)
+    a.jeqi("r1", 1, "host_resident")
+    # ---- HBM page: demote-admission control ----
+    a.ldctx("r4", CTX.TIER_FREE_BLOCKS)
+    a.jeqi("r4", 0, "keep")                  # host tier full -> nothing to gain
+    a.ldctx("r3", CTX.MEM_PRESSURE)
+    a.jlti("r3", pressure_milli, "keep")     # no real pressure -> keep in HBM
+    # hard pressure (pool effectively full): reclaim is demoting coldest-first
+    # and the alternative is whole-sequence preemption — admit unconditionally
+    a.jgei("r3", 990, "demote")
+    a.ldctx("r2", CTX.PAGE_HEAT)
+    a.jgei("r2", cold_heat_milli, "keep")    # hot -> veto proactive demotion
+    a.label("demote")
+    a.movi("r0", TIER_DEMOTE)
+    a.exit()
+    a.label("keep")
+    a.movi("r0", TIER_KEEP)
+    a.exit()
+    # ---- host-tier page: promote when the PCIe tax beats the move cost ----
+    a.label("host_resident")
+    a.ldctx("r6", CTX.MEM_PRESSURE)
+    a.jgei("r6", 900, "stay")                # no HBM headroom -> avoid churn
+    a.ldctx("r2", CTX.PAGE_HEAT)
+    a.jeqi("r2", 0, "stay")                  # untouched -> stay demoted
+    a.ldctx("r1", CTX.PAGE_ORDER)
+    a.call(HELPER_MIGRATE_COST)              # r0 = cost of moving this page
+    a.mov("r4", "r0")
+    # per-window PCIe tax ~= heat * pcie_ns_per_block * 4^order (heat is
+    # FIXED_POINT-scaled, so divide it back out at the end)
+    a.ldctx("r3", CTX.PCIE_NS_PER_BLOCK)
+    a.mul("r3", "r2")
+    a.muli("r3", promote_horizon)
+    a.ldctx("r5", CTX.PAGE_ORDER)
+    a.muli("r5", 2)
+    a.lsh("r3", "r5")                        # * 4^order == << 2*order
+    a.divi("r3", 1000)
+    a.jgt("r3", "r4", "promote")
+    a.label("stay")
+    a.movi("r0", TIER_DEMOTE)
+    a.exit()
+    a.label("promote")
+    a.movi("r0", TIER_KEEP)
+    a.exit()
+    return a.build("tier_damon")
+
+
+def tier_lru_program(min_age_ticks: int = 1) -> Program:
+    """LRU-demote baseline: demote any page that has not changed tiers for
+    ``min_age_ticks`` engine ticks, regardless of heat; never proactively
+    promote (demoted pages pay the PCIe tax until reclaim churn brings them
+    back) — the classic kernel-default weakness eBPF tiering fixes."""
+    a = Asm()
+    a.ldctx("r1", CTX.PAGE_TIER)
+    a.jeqi("r1", 1, "host_resident")
+    a.ldctx("r2", CTX.PAGE_AGE)
+    a.jgei("r2", min_age_ticks, "demote")
+    a.movi("r0", TIER_KEEP)
+    a.exit()
+    a.label("demote")
+    a.movi("r0", TIER_DEMOTE)
+    a.exit()
+    a.label("host_resident")
+    a.movi("r0", TIER_DEMOTE)                # stay in the host tier
+    a.exit()
+    return a.build("tier_lru")
+
+
+def tier_never_program() -> Program:
+    """Never-tier baseline: veto every demotion, so reclaim must fall back to
+    whole-process preemption — the seed's behavior, as a loadable program."""
+    a = Asm()
+    a.movi("r0", TIER_KEEP)
+    a.exit()
+    return a.build("tier_never")
 
 
 def reclaim_lru_program() -> Program:

@@ -1,0 +1,306 @@
+"""Tiered memory: eBPF-guided HBM <-> host-DRAM page placement.
+
+The paper names page placement across memory tiers as the natural next hook
+after the fault-path page-size hook and stubs it as ``HOOK_TIER``.  This
+module implements that subsystem: a second block pool modeling host DRAM with
+its own buddy allocator, a :class:`TieredMemoryManager` over
+:class:`~repro.core.mm.MemoryManager` whose :class:`PageMapping`\\ s carry a
+tier id, and a migration engine that emits explicit move lists the device
+executes with the block_copy kernel — with PCIe-bandwidth costs accounted in
+the :class:`~repro.core.cost.CostModel`.
+
+Device addressing: the engine materializes ONE combined pool of
+``num_blocks + host_blocks`` base blocks.  Indices ``[0, num_blocks)`` are
+HBM; ``[num_blocks, num_blocks + host_blocks)`` model pinned host DRAM the
+device can DMA from (at PCIe bandwidth — charged by the cost model, while the
+copies themselves stay exact).  Tier crossings are therefore ordinary
+``(src, dst, order)`` moves in combined coordinates and reuse the existing
+``drain_moves`` / block_copy path unchanged.
+
+Policy: every migration decision is delegated to the verified program
+attached to ``HOOK_TIER`` (TierBPF-style admission control).  The program
+sees a :class:`~repro.core.context.FaultContext` describing the candidate
+page (tier, order, DAMON heat, age) plus both pools' real-time state, and
+returns ``TIER_KEEP`` (live in HBM) or ``TIER_DEMOTE`` (live in host DRAM).
+With nothing attached, a kernel-default policy runs without building the ctx
+at all — the paper's zero-overhead property, extended to the new hook.
+Decisions over many candidates run through the vectorized JIT batch path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .buddy import BuddyAllocator, BuddyError, order_blocks
+from .context import (FIXED_POINT, POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP,
+                      FaultContext)
+from .cost import CostModel
+from .hooks import HOOK_TIER
+from .mm import MemoryManager, PageMapping, ProcessState
+
+TIER_HBM = 0
+TIER_HOST = 1
+
+
+@dataclass
+class TierConfig:
+    """Migration-engine knobs (throttles, like khugepaged's)."""
+    promote_blocks_per_tick: int = 16    # promotion-scan budget per engine tick
+    demote_chunk_blocks: int = 16        # min HBM blocks to free per reclaim event
+    batch_threshold: int = 4             # >= this many candidates -> JIT batch path
+
+
+class TieredMemoryManager(MemoryManager):
+    """MemoryManager with a second, host-DRAM block pool behind HOOK_TIER.
+
+    HBM pages live in ``self.buddy`` (tier 0), host-DRAM pages in
+    ``self.host_buddy`` (tier 1).  ``phys_start`` of a mapping is always an
+    index within its own tier's pool; :meth:`_device_index` folds both into
+    the combined device pool the engine materializes.
+    """
+
+    def __init__(self, num_blocks: int, cost: CostModel, *,
+                 host_blocks: int, tier_cfg: TierConfig | None = None,
+                 **kw) -> None:
+        super().__init__(num_blocks, cost, **kw)
+        if host_blocks <= 0:
+            raise ValueError("host_blocks must be positive (use MemoryManager "
+                             "for an untiered pool)")
+        self.host_blocks = host_blocks
+        self.host_buddy = BuddyAllocator(host_blocks, max_order=self.max_order)
+        self.tier_cfg = tier_cfg or TierConfig()
+        # (pid, logical_start) -> ktime_ns of the last tier change / install
+        self._tier_stamp: dict[tuple[int, int], int] = {}
+
+    # --------------------------------------------------------------- geometry
+    @property
+    def device_pool_blocks(self) -> int:
+        """Size of the combined device pool (HBM + host-DRAM mirror)."""
+        return self.buddy.num_blocks + self.host_blocks
+
+    def _device_index(self, m: PageMapping) -> int:
+        if m.tier == TIER_HOST:
+            return self.buddy.num_blocks + m.phys_start
+        return m.phys_start
+
+    def _free_phys(self, m: PageMapping) -> None:
+        if m.tier == TIER_HOST:
+            self.host_buddy.free(m.phys_start)
+        else:
+            self.buddy.free(m.phys_start)
+
+    def free_process(self, pid: int) -> None:
+        super().free_process(pid)
+        self._tier_stamp = {k: v for k, v in self._tier_stamp.items()
+                            if k[0] != pid}
+
+    def _install(self, st, addr, order, hinted):
+        r = super()._install(st, addr, order, hinted)
+        a = (addr // order_blocks(r.order)) * order_blocks(r.order)
+        self._tier_stamp[(st.pid, a)] = self.ktime_ns
+        return r
+
+    def collapse(self, pid: int, addr: int, to_order: int):
+        r = super().collapse(pid, addr, to_order)
+        if r is not None:
+            a = (addr // order_blocks(r.order)) * order_blocks(r.order)
+            self._tier_stamp[(pid, a)] = self.ktime_ns
+        return r
+
+    # ------------------------------------------------------------ tier policy
+    def _page_age_ticks(self, pid: int, logical_start: int) -> int:
+        born = self._tier_stamp.get((pid, logical_start), 0)
+        return max(0, (self.ktime_ns - born) // 1_000_000)
+
+    def _tier_ctx(self, st: ProcessState, m: PageMapping) -> np.ndarray:
+        bstats = self.buddy.stats()
+        hstats = self.host_buddy.stats()
+        fc = FaultContext(
+            addr=m.logical_start, pid=st.pid, vma_start=0, vma_end=st.vma_end,
+            fault_max_order=m.order, has_profile=0, profile_map_id=0,
+            profile_nregions=0,
+            free_blocks=bstats.free_per_order,
+            frag=bstats.frag_index_milli,
+            heat=st.damon.heat_vector(m.logical_start),
+            zero_ns_per_block=self.cost.zero_ns_per_block(),
+            compact_ns_per_block=self.cost.compact_ns_per_block(),
+            descriptor_ns=int(self.cost.hw.descriptor_ns),
+            block_bytes=self.cost.block_bytes,
+            ktime_ns=self.ktime_ns,
+            mem_pressure=bstats.utilization_milli,
+            seq_len=st.vma_end,
+            tier_free_blocks=hstats.free_blocks,
+            tier_total_blocks=hstats.total_blocks,
+            tier_pressure=hstats.utilization_milli,
+            pcie_ns_per_block=self.cost.pcie_ns_per_block(),
+            page_tier=m.tier,
+            page_order=m.order,
+            page_age=self._page_age_ticks(st.pid, m.logical_start),
+            page_heat=int(st.damon.heat_at(m.logical_start, m.order)
+                          * FIXED_POINT),
+            migrate_setup_ns=int(self.cost.hw.pcie_setup_ns),
+            migrate_ns_per_block=self.cost.migrate_ns_per_block(),
+        )
+        return fc.vector()
+
+    def _default_tier_decision(self, st: ProcessState, m: PageMapping) -> int:
+        """Kernel-default tiering with no program attached: approve demotion
+        of whatever reclaim nominated (candidates arrive coldest-first), and
+        promote host pages that have been touched since demotion."""
+        if m.tier == TIER_HBM:
+            return TIER_DEMOTE
+        return (TIER_KEEP if st.damon.heat_at(m.logical_start, m.order) > 0
+                else TIER_DEMOTE)
+
+    def tier_decisions(self, cands: list[tuple[ProcessState, PageMapping]]
+                       ) -> list[int]:
+        """Run HOOK_TIER over candidate pages; vectorized when the batch is
+        large enough to amortize the XLA dispatch."""
+        if not cands:
+            return []
+        if not self.hooks.attached(HOOK_TIER):
+            # zero-overhead default path: no ctx build, no VM run
+            return [self._default_tier_decision(st, m) for st, m in cands]
+        if len(cands) >= self.tier_cfg.batch_threshold:
+            mat = np.stack([self._tier_ctx(st, m) for st, m in cands])
+            raw = self.hooks.run_batch(HOOK_TIER, mat)
+            decisions = [int(d) for d in raw]
+        else:
+            decisions = [int(self.hooks.run(HOOK_TIER, self._tier_ctx(st, m)))
+                         for st, m in cands]
+        return [self._default_tier_decision(st, m) if d == POLICY_FALLBACK else d
+                for (st, m), d in zip(cands, decisions)]
+
+    # -------------------------------------------------------------- migration
+    def demote_page(self, pid: int, logical_start: int) -> bool:
+        """Move one mapping HBM -> host tier. Returns False if the host pool
+        cannot back it (OOM in both tiers for this page)."""
+        st = self.procs[pid]
+        m = st.page_table[logical_start]
+        if m.tier != TIER_HBM:
+            return False
+        try:
+            hp = self.host_buddy.alloc(m.order)
+        except BuddyError:
+            plan = self.host_buddy.plan_compaction(m.order)
+            if plan is None:
+                return False
+            self._apply_host_compaction(plan)
+            try:
+                hp = self.host_buddy.alloc(m.order)
+            except BuddyError:
+                return False
+        n = order_blocks(m.order)
+        self._move_log.append((m.phys_start, self.buddy.num_blocks + hp, m.order))
+        self.buddy.free(m.phys_start)
+        m.phys_start = hp
+        m.tier = TIER_HOST
+        self._tier_stamp[(pid, logical_start)] = self.ktime_ns
+        self.stats.demotions += 1
+        self.stats.demotion_blocks += n
+        self.stats.mgmt_ns += self.cost.migrate_ns(m.order)
+        return True
+
+    def promote_page(self, pid: int, logical_start: int) -> bool:
+        """Move one mapping host tier -> HBM (compacting HBM if needed)."""
+        st = self.procs[pid]
+        m = st.page_table[logical_start]
+        if m.tier != TIER_HOST:
+            return False
+        try:
+            phys = self.buddy.alloc(m.order)
+        except BuddyError:
+            plan = self.buddy.plan_compaction(m.order)
+            if plan is None:
+                return False
+            self._apply_compaction(plan)
+            try:
+                phys = self.buddy.alloc(m.order)
+            except BuddyError:
+                return False
+        n = order_blocks(m.order)
+        self._move_log.append((self.buddy.num_blocks + m.phys_start, phys,
+                               m.order))
+        self.host_buddy.free(m.phys_start)
+        m.phys_start = phys
+        m.tier = TIER_HBM
+        self._tier_stamp[(pid, logical_start)] = self.ktime_ns
+        self.stats.tier_promotions += 1
+        self.stats.tier_promotion_blocks += n
+        self.stats.mgmt_ns += self.cost.migrate_ns(m.order)
+        return True
+
+    def _apply_host_compaction(self, plan: list[tuple[int, int, int]]) -> None:
+        """Host-pool compaction: same bookkeeping as HBM compaction, against
+        tier-1 mappings and shifted into combined device coordinates (the
+        host-local memcpy shares the read+write cost model)."""
+        self._apply_compaction(plan, tier=TIER_HOST,
+                               device_offset=self.buddy.num_blocks)
+
+    # ---------------------------------------------------------- reclaim entry
+    def demote_cold_global(self, need_blocks: int | None = None,
+                           prefer_pid: int | None = None) -> int:
+        """Global reclaim scan (the kswapd analogue): nominate HBM pages from
+        EVERY process coldest-first — the reclaim victim's pages win ties —
+        and demote HOOK_TIER-approved ones until ``need_blocks`` are freed.
+        A victim that is already fully host-resident then simply contributes
+        no candidates instead of stalling reclaim."""
+        need = need_blocks if need_blocks is not None \
+            else self.tier_cfg.demote_chunk_blocks
+        cands = [(st, m) for st in self.procs.values()
+                 for m in st.mappings_sorted() if m.tier == TIER_HBM]
+        if not cands:
+            return 0
+        cands.sort(key=lambda sm: (
+            sm[0].damon.heat_at(sm[1].logical_start, sm[1].order),
+            0 if sm[0].pid == prefer_pid else 1,
+            sm[0].pid, -sm[1].logical_start))
+        decisions = self.tier_decisions(cands)
+        freed = 0
+        for (st, m), d in zip(cands, decisions):
+            if freed >= need:
+                break
+            if d == TIER_DEMOTE and self.demote_page(st.pid, m.logical_start):
+                freed += order_blocks(m.order)
+        return freed
+
+    def promotion_scan(self, budget_blocks: int | None = None) -> int:
+        """Background promotion (khugepaged-style): offer every host-tier
+        page to HOOK_TIER; pages the policy wants back in HBM are promoted,
+        hottest-first, under a per-tick block budget."""
+        budget = budget_blocks if budget_blocks is not None \
+            else self.tier_cfg.promote_blocks_per_tick
+        # age > 0: never bounce a page demoted within the current tick (the
+        # demote and promote copies would otherwise land in one device batch)
+        cands = [(st, m) for st in self.procs.values()
+                 for m in st.mappings_sorted()
+                 if m.tier == TIER_HOST
+                 and self._page_age_ticks(st.pid, m.logical_start) > 0]
+        if not cands:
+            return 0
+        cands.sort(key=lambda sm: -sm[0].damon.heat_at(
+            sm[1].logical_start, sm[1].order))
+        decisions = self.tier_decisions(cands)
+        promoted = 0
+        for (st, m), d in zip(cands, decisions):
+            if promoted >= budget:
+                break
+            if d == TIER_KEEP and self.promote_page(st.pid, m.logical_start):
+                promoted += order_blocks(m.order)
+        return promoted
+
+    # ----------------------------------------------------------------- state
+    def host_resident_blocks(self) -> int:
+        return sum(order_blocks(o) for o in self.host_buddy.allocated.values())
+
+    def tier_snapshot(self) -> dict:
+        hstats = self.host_buddy.stats()
+        return {
+            "host_blocks": self.host_blocks,
+            "host_free_blocks": hstats.free_blocks,
+            "host_resident_blocks": self.host_resident_blocks(),
+            "host_utilization_milli": hstats.utilization_milli,
+            "pcie_ns_per_block": self.cost.pcie_ns_per_block(),
+        }

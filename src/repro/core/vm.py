@@ -26,6 +26,7 @@ from .verifier import verify
 HELPER_KTIME = 1
 HELPER_TRACE = 2
 HELPER_PROMOTION_COST = 3
+HELPER_MIGRATE_COST = 4
 
 
 @dataclass
@@ -65,10 +66,21 @@ def _helper_promotion_cost(regs, ctx, state: HelperState) -> int:
     return zero + compact
 
 
+def _helper_migrate_cost(regs, ctx, state: HelperState) -> int:
+    """bpf_mm_migrate_cost(order=r1) — full cost of one tier crossing for an
+    order-k page: fixed DMA setup + (PCIe + HBM-side) per block, matching
+    CostModel.migrate_ns exactly."""
+    from .context import CTX  # local import to avoid cycle at module load
+    order = max(0, min(3, int(regs[1])))
+    return (int(ctx[CTX.MIGRATE_SETUP_NS])
+            + int(ctx[CTX.MIGRATE_NS_PER_BLOCK]) * (4 ** order))
+
+
 HELPERS: dict[int, Callable] = {
     HELPER_KTIME: _helper_ktime,
     HELPER_TRACE: _helper_trace,
     HELPER_PROMOTION_COST: _helper_promotion_cost,
+    HELPER_MIGRATE_COST: _helper_migrate_cost,
 }
 HELPER_IDS = frozenset(HELPERS.keys())
 

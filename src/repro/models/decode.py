@@ -181,13 +181,17 @@ def paged_decode_attention_mla_gather(q_eff, q_rope, pool_ckv, block_table,
 
 def write_token_kv(pool, new_kv, block_table, lengths, *, block_tokens: int):
     """Scatter one token's KV into the pool.
-    pool: [NB,bt,...]; new_kv: [B,...]; lengths: position of the new token."""
+    pool: [NB,bt,...]; new_kv: [B,...]; lengths: position of the new token.
+    Rows whose target block is unmapped (table = -1: empty batch slots,
+    sequences skipped this step) are dropped, like write_prefill_kv."""
     B = new_kv.shape[0]
     blk = lengths // block_tokens
     off = lengths % block_tokens
-    phys = jnp.maximum(
-        jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0], 0)
-    return pool.at[phys, off].set(new_kv.astype(pool.dtype))
+    raw = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    # route unmapped rows out of bounds and drop them: a write-back of the
+    # stale value would race a live row scattering to the same (block, off)
+    safe = jnp.where(raw >= 0, raw, pool.shape[0])
+    return pool.at[safe, off].set(new_kv.astype(pool.dtype), mode="drop")
 
 
 def write_prefill_kv(pool, kv_seq, block_table, *, block_tokens: int):
@@ -198,12 +202,10 @@ def write_prefill_kv(pool, kv_seq, block_table, *, block_tokens: int):
     nb = S // bt
     kvb = kv_seq.reshape((B * nb, bt) + kv_seq.shape[2:])
     tbl = block_table[:, :nb].reshape(-1)
-    safe = jnp.where(tbl >= 0, tbl, 0)
-    keep = (tbl >= 0)[:, None]
-    while keep.ndim < kvb.ndim:
-        keep = keep[..., None]
-    cur = pool[safe]
-    return pool.at[safe].set(jnp.where(keep, kvb.astype(pool.dtype), cur))
+    # out-of-bounds + mode='drop' instead of a masked write-back, which
+    # would race a live row scattering to the same block
+    safe = jnp.where(tbl >= 0, tbl, pool.shape[0])
+    return pool.at[safe].set(kvb.astype(pool.dtype), mode="drop")
 
 
 # ---------------------------------------------------------------------------

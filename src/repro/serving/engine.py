@@ -11,13 +11,24 @@ The paper's workflow, end to end:
   * the khugepaged analogue runs between engine steps, collapsing hot
     regions into larger pages; migrations/compactions come back as explicit
     block-copy move lists applied to the device pools;
-  * pool exhaustion triggers the reclaim hook -> preemption of the victim
-    sequence (requeued and recomputed later).
+  * pool exhaustion triggers the reclaim hook; with a host-DRAM tier
+    configured (``host_blocks > 0``) the engine DEMOTES the victim's cold
+    blocks to the host tier instead of evicting the whole process
+    (demote-before-preempt): the mm_tier hook program vets each candidate
+    (TierBPF-style admission control), approved pages migrate over PCIe via
+    the same block-copy move lists, and a background promotion scan brings
+    re-heated pages back to HBM between steps.  Whole-sequence preemption
+    (requeue + recompute) remains only as the fallback when BOTH tiers are
+    exhausted or the tier policy vetoes every demotion.
 
 Policies (``policy=``): "ebpf" (profile + Figure-1 program), "thp"
 (kernel-default greedy PMD-size), "never" (base pages), "thp-prog"/
 "never-prog" (same baselines expressed as loaded programs, for measuring
-hook overhead).  The Figure-2 benchmark sweeps these.
+hook overhead).  The Figure-2 benchmark sweeps these.  Orthogonally,
+``tier_policy=`` selects the mm_tier program: "ebpf-tier" (DAMON-heat
+admission control), "lru-tier" (age-based demotion baseline), "never-tier"
+(veto all demotions -> preempt-only), or "default" (kernel-default path,
+no program attached).  The capacity-sweep benchmark sweeps these.
 """
 
 from __future__ import annotations
@@ -32,8 +43,10 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import (HWSpec, Khugepaged, KhugepagedConfig, MemoryManager,
-                    MMOutOfMemory, Profile, ebpf_mm_program, make_cost_model,
-                    never_program, reclaim_lru_program, thp_always_program)
+                    MMOutOfMemory, Profile, TieredMemoryManager,
+                    ebpf_mm_program, make_cost_model, never_program,
+                    reclaim_lru_program, thp_always_program,
+                    tier_damon_program, tier_lru_program, tier_never_program)
 from ..core.buddy import order_blocks
 from ..models.decode import PagedLayout, cache_init, decode_step, prefill_step
 from ..models.transformer import build_layer_plans
@@ -67,6 +80,7 @@ class EngineStats:
     prefills: int = 0
     decode_tokens: int = 0
     preemptions: int = 0
+    tier_reliefs: int = 0          # OOMs resolved by demotion, not preemption
     wall_host_s: float = 0.0
     completed: int = 0
 
@@ -79,12 +93,14 @@ class ServingEngine:
                  *, max_batch: int = 4, policy: str = "ebpf",
                  profile: Profile | None = None, hw: HWSpec | None = None,
                  khugepaged: bool = True, seed: int = 0,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16,
+                 host_blocks: int = 0, tier_policy: str = "ebpf-tier"):
         self.cfg = cfg
         self.params = params
         self.layout = layout
         self.max_batch = max_batch
         self.policy = policy
+        self.tier_policy = tier_policy if host_blocks > 0 else None
         hw = hw or HWSpec()
 
         n_attn = sum(1 for k in cfg.layer_kinds() if k == "a")
@@ -97,8 +113,25 @@ class ServingEngine:
         cost.block_bytes = layout.block_tokens * slab * 2 * max(1, n_attn)
 
         default_mode = {"never": "never", "never-prog": "never"}.get(policy, "thp")
-        self.mm = MemoryManager(layout.num_blocks, cost,
-                                default_mode=default_mode, damon_seed=seed)
+        if host_blocks > 0:
+            # tiered pool: HBM buddy + host-DRAM buddy; the device cache below
+            # is materialized over the COMBINED index space so tier crossings
+            # are ordinary block_copy moves
+            self.mm = TieredMemoryManager(
+                layout.num_blocks, cost, host_blocks=host_blocks,
+                default_mode=default_mode, damon_seed=seed)
+            if tier_policy == "ebpf-tier":
+                self.mm.attach_tier_program(tier_damon_program())
+            elif tier_policy == "lru-tier":
+                self.mm.attach_tier_program(tier_lru_program())
+            elif tier_policy == "never-tier":
+                self.mm.attach_tier_program(tier_never_program())
+            elif tier_policy != "default":
+                raise ValueError(f"unknown tier_policy {tier_policy!r}")
+        else:
+            self.mm = MemoryManager(layout.num_blocks, cost,
+                                    default_mode=default_mode, damon_seed=seed)
+        self._pool_blocks = layout.num_blocks + max(0, host_blocks)
         self.mm.attach_reclaim_program(reclaim_lru_program())
         if policy == "ebpf":
             if profile is None:
@@ -118,7 +151,10 @@ class ServingEngine:
 
         self.khugepaged = (Khugepaged(self.mm, KhugepagedConfig())
                            if (khugepaged and policy == "ebpf") else None)
-        self.cache = cache_init(cfg, layout, max_batch, cache_dtype)
+        pool_layout = layout if host_blocks <= 0 else PagedLayout(
+            num_blocks=self._pool_blocks, block_tokens=layout.block_tokens,
+            max_blocks=layout.max_blocks)
+        self.cache = cache_init(cfg, pool_layout, max_batch, cache_dtype)
         self.sampler = Sampler(seed=seed)
         self.stats = EngineStats()
 
@@ -162,16 +198,16 @@ class ServingEngine:
                              self.layout.max_blocks)
             self.mm.create_process(pid, app=req.app, vma_blocks=vma_blocks)
             nblocks = self._blocks_needed(len(req.prompt))
-            try:
-                self.mm.ensure_range(pid, 0, nblocks)
-            except MMOutOfMemory as oom:
-                self._preempt(oom.victim_pid)
-                try:
-                    self.mm.ensure_range(pid, 0, nblocks)
-                except MMOutOfMemory:
-                    self.mm.free_process(pid)
-                    self.waiting.insert(0, req)
-                    break
+            ok = self._ensure_with_reclaim(
+                lambda p=pid, n=nblocks: self.mm.ensure_range(p, 0, n),
+                pid, nblocks)
+            if not ok:
+                self.mm.free_process(pid)
+                self.waiting.insert(0, req)
+                break
+            if isinstance(self.mm, TieredMemoryManager):
+                # land any demotion copies before prefill writes the pool
+                self._apply_pending_moves()
             seq = SeqState(req=req, pid=pid, slot=slot,
                            length=len(req.prompt))
             self.active[slot] = seq
@@ -243,6 +279,36 @@ class ServingEngine:
                 np.arange(seq_len, dtype=np.float32), (3, batch, 1)))
         return kw
 
+    # ---------------------------------------------------------------- reclaim
+    def _ensure_with_reclaim(self, fault_fn, faulting_pid: int,
+                             need_blocks: int) -> bool:
+        """Run a fault entry point, relieving pressure on MMOutOfMemory.
+
+        Demote-before-preempt: each OOM first tries to free HBM by demoting
+        cold blocks to the host tier — scanning all processes coldest-first
+        with the nominated victim's pages preferred (a single long sequence
+        spills its own cold prefix this way).  Demotion reliefs retry as
+        often as they make progress; whole-sequence preemption is the
+        fallback when both tiers are exhausted (or the tier policy vetoes
+        every candidate) and fires AT MOST ONCE per fault, so admission can
+        never evict the whole running batch to place one request."""
+        preempted = False
+        for _ in range(4 + 2 * need_blocks + self.max_batch):
+            try:
+                fault_fn()
+                return True
+            except MMOutOfMemory as oom:
+                if isinstance(self.mm, TieredMemoryManager) and \
+                        self.mm.demote_cold_global(
+                            need_blocks, prefer_pid=oom.victim_pid) > 0:
+                    self.stats.tier_reliefs += 1
+                    continue
+                if preempted or oom.victim_pid is None:
+                    return False
+                self._preempt(oom.victim_pid)
+                preempted = True
+        return False
+
     # ---------------------------------------------------------------- decode
     def _preempt(self, victim_pid: int | None) -> None:
         if victim_pid is None:
@@ -266,6 +332,9 @@ class ServingEngine:
             self._decode_once()
         if self.khugepaged is not None:
             self.khugepaged.tick()
+        if isinstance(self.mm, TieredMemoryManager):
+            # background promotion: bring re-heated host-tier pages back to HBM
+            self.mm.promotion_scan()
         self._apply_pending_moves()
         self.mm.tick()
         self.stats.steps += 1
@@ -277,11 +346,22 @@ class ServingEngine:
         tokens = np.zeros(B, np.int32)
         lengths = np.zeros(B, np.int32)
         tables = np.full((B, MB), -1, np.int32)
+        skipped: set[int] = set()     # slots that must not advance this step
+        tiered = isinstance(self.mm, TieredMemoryManager)
         for slot, seq in list(self.active.items()):
             if slot not in self.active:       # preempted earlier this pass
                 continue
             # page-fault path: the new token's slot may cross a block boundary
             addr = seq.length // self.layout.block_tokens
+            if tiered:
+                ok = self._ensure_with_reclaim(
+                    lambda p=seq.pid, a=addr: self.mm.ensure_mapped(p, a),
+                    seq.pid, 1)
+                if not ok or slot not in self.active:
+                    # both tiers truly exhausted (retry next step) or this
+                    # sequence was preempted relieving another slot
+                    skipped.add(slot)
+                continue   # tiered rows are captured below, post-migration
             try:
                 self.mm.ensure_mapped(seq.pid, addr)
             except MMOutOfMemory as oom:
@@ -290,6 +370,18 @@ class ServingEngine:
             tokens[slot] = seq.generated[-1]
             lengths[slot] = seq.length
             tables[slot] = self.mm.block_table(seq.pid, MB)
+        if tiered:
+            # Flush demotion/promotion copies BEFORE the kernel touches the
+            # pool: a fault above may have demoted block A and re-allocated
+            # it — the copy must land before decode overwrites A — and BEFORE
+            # capturing tables, which a later slot's reclaim may have remapped.
+            self._apply_pending_moves()
+            for slot, seq in self.active.items():
+                if slot in skipped:
+                    continue
+                tokens[slot] = seq.generated[-1]
+                lengths[slot] = seq.length
+                tables[slot] = self.mm.block_table(seq.pid, MB)
         pos3d = None
         if self.cfg.vlm_patches:
             pos3d = jnp.asarray(
@@ -300,6 +392,10 @@ class ServingEngine:
         logits_np = np.asarray(logits)
         heat_np = np.asarray(heat)
         for slot, seq in list(self.active.items()):
+            if slot in skipped:
+                # its batch row decoded with no block table — the logits are
+                # garbage; the sequence stays put and refaults next step
+                continue
             nb = self._blocks_needed(seq.length + 1)
             self.mm.record_access(seq.pid, heat_np[slot, :nb])
             app = seq.req.app or "_default"
@@ -325,6 +421,26 @@ class ServingEngine:
         moves = self.mm.drain_moves()
         if not moves:
             return
+        # A batched .at[dst].set(leaf[src]) reads every src from the PRE-move
+        # pool, so a chain within one drain (compact A->B, then demote B->H)
+        # would copy stale data; and a repeated destination (block freed and
+        # re-allocated within the drain) makes the scatter winner undefined.
+        # Segment the list so no batch reads OR writes a block an earlier
+        # move in the same batch wrote; batches apply in order.
+        batches: list[list[tuple[int, int, int]]] = [[]]
+        written: set[int] = set()
+        for s, d, o in moves:
+            n = order_blocks(o)
+            if any(b in written for b in range(s, s + n)) or \
+                    any(b in written for b in range(d, d + n)):
+                batches.append([])
+                written = set()
+            batches[-1].append((s, d, o))
+            written.update(range(d, d + n))
+        for batch in batches:
+            self._apply_move_batch(batch)
+
+    def _apply_move_batch(self, moves: list[tuple[int, int, int]]) -> None:
         src = np.concatenate([np.arange(s, s + order_blocks(o))
                               for s, _, o in moves]).astype(np.int32)
         dst = np.concatenate([np.arange(d, d + order_blocks(o))
@@ -335,7 +451,7 @@ class ServingEngine:
             key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
             if key not in self._POOL_KEYS:
                 return leaf
-            if leaf.ndim >= 2 and leaf.shape[0] != self.layout.num_blocks:
+            if leaf.ndim >= 2 and leaf.shape[0] != self._pool_blocks:
                 return leaf.at[:, dst_j].set(leaf[:, src_j])   # stacked [reps,NB,..]
             return leaf.at[dst_j].set(leaf[src_j])
         self.cache = jax.tree_util.tree_map_with_path(move, self.cache)
@@ -349,6 +465,8 @@ class ServingEngine:
                 break
         out = {"engine": self.stats.snapshot(), "mm": self.mm.stats.snapshot(),
                "huge_fraction": self.mm.hugepage_block_fraction()}
+        if isinstance(self.mm, TieredMemoryManager):
+            out["tier"] = self.mm.tier_snapshot()
         if self.khugepaged is not None:
             out["khugepaged"] = {"collapsed": self.khugepaged.collapsed,
                                  "considered": self.khugepaged.considered}

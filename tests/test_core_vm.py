@@ -1,8 +1,9 @@
-"""Policy VM: ISA semantics, verifier guarantees, interpreter == XLA JIT."""
+"""Policy VM: ISA semantics, verifier guarantees, interpreter == XLA JIT.
+
+Fuzz tests use a seeded numpy RNG (the container has no hypothesis)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (CTX, CTX_LEN, Asm, ArrayMap, FaultContext, FaultKind,
                         JitPolicy, MapRegistry, PolicyVM, Profile,
@@ -168,49 +169,55 @@ ALU_IMM_OPS = [Op.MOVI, Op.ADDI, Op.SUBI, Op.MULI, Op.ANDI, Op.ORI, Op.XORI,
                Op.LSHI, Op.RSHI, Op.MINI, Op.MAXI]
 
 
-@st.composite
-def straight_line_program(draw):
+def straight_line_program(rng: np.random.Generator):
     """Random verified straight-line ALU program over ctx loads."""
     a = Asm()
-    a.movi("r0", draw(st.integers(-1000, 1000)))
+    a.movi("r0", int(rng.integers(-1000, 1001)))
     for r in range(1, 6):
-        a.ldctx(f"r{r}", draw(st.integers(0, CTX_LEN - 1)))
-    n = draw(st.integers(1, 30))
+        a.ldctx(f"r{r}", int(rng.integers(0, CTX_LEN)))
+    n = int(rng.integers(1, 31))
+    reg_ops = ["add", "sub", "mul", "and_", "or_", "xor", "min_", "max_",
+               "div", "mod"]
     for _ in range(n):
-        op = draw(st.sampled_from(ALU_IMM_OPS + ["reg"]))
-        dst = f"r{draw(st.integers(0, 5))}"
-        if op == "reg":
-            regop = draw(st.sampled_from(
-                ["add", "sub", "mul", "and_", "or_", "xor", "min_", "max_",
-                 "div", "mod"]))
-            getattr(a, regop)(dst, f"r{draw(st.integers(0, 5))}")
+        choice = int(rng.integers(0, len(ALU_IMM_OPS) + 1))
+        dst = f"r{int(rng.integers(0, 6))}"
+        if choice == len(ALU_IMM_OPS):
+            regop = reg_ops[int(rng.integers(0, len(reg_ops)))]
+            getattr(a, regop)(dst, f"r{int(rng.integers(0, 6))}")
         else:
-            imm = draw(st.integers(-(2**31), 2**31 - 1))
+            op = ALU_IMM_OPS[choice]
             if op in (Op.LSHI, Op.RSHI):
-                imm = draw(st.integers(0, 63))
+                imm = int(rng.integers(0, 64))
+            else:
+                imm = int(rng.integers(-(2**31), 2**31))
             getattr(a, op.name.lower())(dst, imm)
     a.exit()
     return a.build("fuzz")
 
 
+def fuzz_case(rng: np.random.Generator):
+    prog = straight_line_program(rng)
+    addr = int(rng.integers(0, 2**31))
+    heat = tuple(int(rng.integers(0, 10**6 + 1)) for _ in range(4))
+    return prog, addr, heat
+
+
 class TestJitEquivalence:
-    @settings(max_examples=40, deadline=None)
-    @given(prog=straight_line_program(),
-           addr=st.integers(0, 2**31 - 1),
-           heat=st.tuples(*[st.integers(0, 10**6)] * 4))
-    def test_interpreter_matches_jit(self, prog, addr, heat):
+    @pytest.mark.parametrize("example", range(40))
+    def test_interpreter_matches_jit(self, example):
+        rng = np.random.default_rng(2000 + example)
+        prog, addr, heat = fuzz_case(rng)
         maps = MapRegistry()
         ctx = make_ctx(addr=addr, heat=heat)
         host = PolicyVM(prog, maps).run(ctx).ret
         dev = JitPolicy(prog, maps).run(ctx)
         assert host == dev
 
-    @settings(max_examples=15, deadline=None)
-    @given(prog=straight_line_program(),
-           addr=st.integers(0, 2**31 - 1),
-           heat=st.tuples(*[st.integers(0, 10**6)] * 4))
-    def test_interpreter_matches_predicated(self, prog, addr, heat):
+    @pytest.mark.parametrize("example", range(15))
+    def test_interpreter_matches_predicated(self, example):
         from repro.core.predicate import PredicatedPolicy
+        rng = np.random.default_rng(3000 + example)
+        prog, addr, heat = fuzz_case(rng)
         maps = MapRegistry()
         ctx = make_ctx(addr=addr, heat=heat)
         host = PolicyVM(prog, maps).run(ctx).ret
