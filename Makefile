@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench
+.PHONY: test bench-smoke bench bench-json
 
 # tier-1 verify: the gate every PR must keep green
 test:
@@ -14,6 +14,13 @@ test:
 bench-smoke: test
 	$(PY) -m benchmarks.capacity_sweep --smoke
 
-# full benchmark harness (fig2 policy sweep, capacity sweep, VM, kernels)
+# full benchmark harness (fig2 policy sweep, capacity sweep, hot path, VM,
+# kernels)
 bench:
 	$(PY) -m benchmarks.run
+
+# hot-path perf artifact: BENCH_hotpath.json (steps/s, faults/s,
+# policy-invocations/step, mgmt_ns, wall_host_s; scalar vs batched per
+# policy and batch size) — the perf trajectory tracked from PR 2 onward
+bench-json:
+	$(PY) -m benchmarks.hotpath_bench --json BENCH_hotpath.json

@@ -1,0 +1,306 @@
+"""Hot-path benchmark: per-engine-step memory-management cost, scalar vs
+batched fault path.
+
+Drives the MemoryManager through the exact per-step sequence the serving
+engine performs on its hottest path — every sequence crosses a block
+boundary (a page fault), per-block attention heat feeds DAMON, and the
+device block tables are captured — WITHOUT the model forward, so the numbers
+isolate the management path the paper's overhead argument is about.
+
+Two per-step routes are measured in the same file:
+
+  * ``scalar``  — the pre-PR path: one ctx build + one policy invocation
+    (host interpreter) per fault (``ensure_mapped``), the per-step Python
+    ``block_table`` rebuild, and the per-mapping Python access-accounting
+    loop (the seed implementations, reproduced below so the baseline stays
+    measurable after the optimized paths replaced them in ``core.mm``);
+  * ``batched`` — this PR's path: the whole step resolves through ONE
+    ``fault_batch`` (one vectorized ctx build + one compiled policy
+    invocation), incremental block tables, segment-sum access accounting.
+
+Per (policy, max_batch, mode) cell we report steps/s, faults/s,
+policy-invocations/step, modeled mgmt_ns and wall_host_s.  ``--json`` writes
+``BENCH_hotpath.json`` (the ``make bench-json`` artifact) including the
+scalar->batched speedup summary, so the perf trajectory is tracked from this
+PR onward.
+
+Run:  PYTHONPATH=src python -m benchmarks.hotpath_bench [--json FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random as _pyrandom
+import time
+
+import numpy as np
+
+from repro.core import (HWSpec, MemoryManager, Profile, ProfileRegion,
+                        ebpf_mm_program, make_cost_model)
+from repro.core.buddy import order_blocks
+from repro.core.context import FaultKind
+from repro.core.damon import Damon, Region
+from repro.core.hooks import HOOK_FAULT
+
+POLICIES = ("ebpf", "thp", "never")
+BATCH_SIZES = (4, 16)
+STEPS = 192
+WARMUP = 16
+N_PROFILE_REGIONS = 32      # realistic multi-region profile -> real search cost
+
+
+def _profile(vma_blocks: int) -> Profile:
+    """Striped multi-region profile over the whole VMA (hot stripes benefit
+    from huge pages, cold stripes do not) — the map the Fig-1 program
+    searches on every fault."""
+    bounds = np.linspace(0, vma_blocks, N_PROFILE_REGIONS + 1).astype(int)
+    regions = []
+    for i, (a, b) in enumerate(zip(bounds, bounds[1:])):
+        if b <= a:
+            continue
+        hot = i % 4 == 0
+        # hot stripes pay for order-1 pages; cold stripes stay base pages —
+        # keeps a steady ~1 fault per sequence per step to decide on
+        benefit = (0, 150_000, 0, 0) if hot else (0, 0, 0, 0)
+        regions.append(ProfileRegion(int(a), int(b), benefit))
+    return Profile("app", regions)
+
+
+def _mk_mm(policy: str, nprocs: int, vma_blocks: int) -> MemoryManager:
+    cost = make_cost_model(HWSpec(), kv_heads=8, head_dim=128, block_tokens=4)
+    mm = MemoryManager(nprocs * vma_blocks + 64, cost,
+                       default_mode="never" if policy == "never" else "thp")
+    app = None
+    if policy == "ebpf":
+        mm.load_profile(_profile(vma_blocks))
+        mm.attach_fault_program(
+            ebpf_mm_program(max_regions=N_PROFILE_REGIONS))
+        app = "app"
+    for pid in range(1, nprocs + 1):
+        mm.create_process(pid, app=app, vma_blocks=vma_blocks)
+    return mm
+
+
+# ---------------------------------------------------------------------------
+# Pre-PR (seed) per-step implementations, kept HERE so the baseline remains
+# measurable: the per-mapping Python loops below are what core.mm shipped
+# before the incremental tables / segment-sum accounting replaced them.
+# ---------------------------------------------------------------------------
+
+def _legacy_block_table(mm: MemoryManager, pid: int,
+                        max_blocks: int) -> np.ndarray:
+    st = mm.procs[pid]
+    t = np.full(max_blocks, -1, dtype=np.int32)
+    for m in st.page_table.values():
+        size = order_blocks(m.order)
+        hi = min(m.logical_start + size, max_blocks)
+        base = m.phys_start
+        for i in range(m.logical_start, hi):
+            t[i] = base + (i - m.logical_start)
+    return t
+
+
+def _legacy_damon_record(d: Damon, heat_per_block: np.ndarray,
+                         rng: _pyrandom.Random) -> None:
+    """The seed's ``Damon.record``: per-region Python EMA loop and one
+    ``random.randint`` per region split (since replaced by the vectorized
+    pass in ``core.damon``).  ``rng`` is per-cell so each cell's split
+    sequence is hermetic."""
+    heat = np.asarray(heat_per_block, dtype=np.float64)
+    csum = np.concatenate([[0.0], np.cumsum(heat)])
+
+    def span_sum(a: int, b: int) -> float:
+        a = min(a, heat.size)
+        b = min(b, heat.size)
+        return float(csum[b] - csum[a]) if b > a else 0.0
+
+    for r in d.regions:
+        mean = span_sum(r.start, r.end) / max(1, len(r))
+        r.nr_accesses = d.ema * mean + (1 - d.ema) * r.nr_accesses
+        r.age += 1
+    d.windows += 1
+    d._merge_regions()
+    budget = d.max_nr - len(d.regions)
+    if budget > 0:
+        out = []
+        for r in d.regions:
+            if budget > 0 and len(r) >= 2:
+                cut = r.start + rng.randint(1, len(r) - 1)
+                out.append(Region(r.start, cut, r.nr_accesses, 0))
+                out.append(Region(cut, r.end, r.nr_accesses, 0))
+                budget -= 1
+            else:
+                out.append(r)
+        d.regions = out
+    d.version += 1      # keep the (new) heat cache coherent for queries
+
+
+def _legacy_record_access(mm: MemoryManager, pid: int,
+                          heat_per_block: np.ndarray,
+                          rng: _pyrandom.Random) -> None:
+    st = mm.procs[pid]
+    heat = np.asarray(heat_per_block, dtype=np.float64)
+    _legacy_damon_record(st.damon, heat, rng)
+    st.accesses += 1
+    csum = np.concatenate([[0.0], np.cumsum(heat)])
+    for m in st.mappings_sorted():
+        lo = min(m.logical_start, heat.size)
+        hi = min(m.logical_start + order_blocks(m.order), heat.size)
+        if hi > lo and csum[hi] - csum[lo] > 0:
+            mm.stats.descriptors_touched += 1
+            mm.stats.access_ns += int(mm.cost.access_ns(m.order))
+
+
+def _drive(mm: MemoryManager, pids: list[int], start: int, steps: int,
+           vma_blocks: int, *, batched: bool,
+           legacy_rng: _pyrandom.Random | None = None) -> None:
+    """``steps`` engine-step analogues: fault the next boundary for every
+    sequence, feed DAMON, capture block tables."""
+    # sub-integer heat: the access accounting and DAMON stay exercised but
+    # the live-heat bonus does not override the profile's size choices
+    heat = np.full(vma_blocks, 0.5)
+    if not batched and legacy_rng is None:
+        legacy_rng = _pyrandom.Random(0)
+    for step in range(start, start + steps):
+        if batched:
+            mm.fault_batch([(pid, step, FaultKind.FIRST_TOUCH)
+                            for pid in pids])
+        else:
+            for pid in pids:
+                mm.ensure_mapped(pid, step)
+        for pid in pids:
+            if batched:
+                mm.record_access(pid, heat[:step + 1])
+                mm.block_table(pid, vma_blocks)
+            else:
+                _legacy_record_access(mm, pid, heat[:step + 1], legacy_rng)
+                _legacy_block_table(mm, pid, vma_blocks)
+        mm.drain_moves()
+        mm.tick()
+
+
+N_WINDOWS = 3     # per mode, interleaved scalar/batched; median reported
+
+
+class _Cell:
+    """One (policy, max_batch, mode) measurement lane with its own mm."""
+
+    def __init__(self, policy: str, max_batch: int, *, batched: bool,
+                 steps: int, warmup: int):
+        self.policy, self.max_batch, self.batched = policy, max_batch, batched
+        self.steps = steps
+        self.vma_blocks = N_WINDOWS * steps + warmup + 8
+        self.mm = _mk_mm(policy, max_batch, self.vma_blocks)
+        self.pids = list(range(1, max_batch + 1))
+        self.pos = 0
+        self.windows: list[dict] = []
+        self.legacy_rng = _pyrandom.Random(0)   # hermetic per cell
+        # warmup: first faults, compile of the batched policy, damon spin-up
+        self._advance(warmup, timed=False)
+
+    def _advance(self, steps: int, *, timed: bool) -> None:
+        mm = self.mm
+        faults0, mgmt0 = mm.stats.faults, mm.stats.mgmt_ns
+        calls0 = mm.hooks.calls[HOOK_FAULT]
+        t0 = time.perf_counter()
+        _drive(mm, self.pids, self.pos, steps, self.vma_blocks,
+               batched=self.batched, legacy_rng=self.legacy_rng)
+        wall = time.perf_counter() - t0
+        self.pos += steps
+        if timed:
+            self.windows.append({
+                "wall": wall,
+                "faults": mm.stats.faults - faults0,
+                "calls": mm.hooks.calls[HOOK_FAULT] - calls0,
+                "mgmt_ns": mm.stats.mgmt_ns - mgmt0,
+            })
+
+    def window(self) -> None:
+        self._advance(self.steps, timed=True)
+
+    def result(self) -> dict:
+        # median window by wall time: robust to host jitter, representative
+        # of mid-run sequence lengths for both lanes
+        ws = sorted(self.windows, key=lambda w: w["wall"])
+        mid = ws[len(ws) // 2]
+        return {
+            "policy": self.policy,
+            "max_batch": self.max_batch,
+            "mode": "batched" if self.batched else "scalar",
+            "steps": self.steps,
+            "steps_per_s": self.steps / mid["wall"],
+            "faults_per_s": mid["faults"] / mid["wall"],
+            "faults": mid["faults"],
+            "policy_invocations_per_step": mid["calls"] / self.steps,
+            "mgmt_ns": mid["mgmt_ns"],
+            "wall_host_s": mid["wall"],
+        }
+
+
+def collect(*, smoke: bool = False) -> dict:
+    batch_sizes = (4,) if smoke else BATCH_SIZES
+    steps = 48 if smoke else STEPS
+    warmup = 8 if smoke else WARMUP
+    cells = []
+    for policy in POLICIES:
+        for b in batch_sizes:
+            # scalar/batched windows interleave so slow host drift (thermal,
+            # neighbors) hits both modes alike; median-of-N per mode
+            pair = [_Cell(policy, b, batched=False, steps=steps,
+                          warmup=warmup),
+                    _Cell(policy, b, batched=True, steps=steps,
+                          warmup=warmup)]
+            for _ in range(N_WINDOWS):
+                for cell in pair:
+                    cell.window()
+            cells.extend(c.result() for c in pair)
+    speedup = {}
+    for policy in POLICIES:
+        for b in batch_sizes:
+            pr = {c["mode"]: c for c in cells
+                  if c["policy"] == policy and c["max_batch"] == b}
+            speedup[f"{policy}_b{b}"] = (pr["batched"]["steps_per_s"]
+                                         / pr["scalar"]["steps_per_s"])
+    return {"bench": "hotpath", "steps_per_cell": steps, "cells": cells,
+            "speedup_batched_over_scalar": speedup}
+
+
+def main(smoke: bool = False) -> list[str]:
+    out = collect(smoke=smoke)
+    lines = []
+    for c in out["cells"]:
+        us_per_step = 1e6 / c["steps_per_s"]
+        lines.append(
+            f"hotpath_{c['policy']}_b{c['max_batch']}_{c['mode']},"
+            f"{us_per_step:.1f},"
+            f"steps_per_s={c['steps_per_s']:.1f};"
+            f"faults_per_s={c['faults_per_s']:.0f};"
+            f"inv_per_step={c['policy_invocations_per_step']:.2f};"
+            f"mgmt_us={c['mgmt_ns'] / 1e3:.0f}")
+    for key, s in out["speedup_batched_over_scalar"].items():
+        lines.append(f"hotpath_speedup_{key},{s:.2f},batched_over_scalar")
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one batch size, fewer steps (CI)")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="write the full result dict as JSON")
+    args = ap.parse_args()
+    result = collect(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.json}")
+    print("name,us_per_call,derived")
+    for c in result["cells"]:
+        print(f"hotpath_{c['policy']}_b{c['max_batch']}_{c['mode']},"
+              f"{1e6 / c['steps_per_s']:.1f},"
+              f"steps_per_s={c['steps_per_s']:.1f};"
+              f"faults_per_s={c['faults_per_s']:.0f};"
+              f"inv_per_step={c['policy_invocations_per_step']:.2f}")
+    for key, s in result["speedup_batched_over_scalar"].items():
+        print(f"hotpath_speedup_{key},{s:.2f},batched_over_scalar")

@@ -9,6 +9,9 @@ Sections:
   capacity_*        tiered-memory capacity sweep: concurrently-resident
                     sequences vs HBM size, ebpf-tier vs preempt-only
                     (demote-before-preempt over the host-DRAM tier).
+  hotpath_*         per-engine-step management cost: batched fault path
+                    (one policy invocation per step) vs the pre-PR scalar
+                    path, per policy and batch size.
   vm_*              eBPF-VM interpreter vs XLA-JIT batch execution.
   paged_read_*      multi-size page DMA model (descriptor amortization /
                     effective HBM bandwidth per page size — the TLB-reach
@@ -25,12 +28,14 @@ import traceback
 
 
 def main() -> None:
-    from . import bench_kernels, bench_vm, capacity_sweep, fig2_policy_sweep
+    from . import (bench_kernels, bench_vm, capacity_sweep,
+                   fig2_policy_sweep, hotpath_bench)
 
     print("name,us_per_call,derived")
     sections = [
         ("fig2", fig2_policy_sweep.main),
         ("capacity", lambda: capacity_sweep.main(smoke=True)),
+        ("hotpath", lambda: hotpath_bench.main(smoke=True)),
         ("vm", bench_vm.main),
         ("kernels", bench_kernels.main),
     ]

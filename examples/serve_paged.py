@@ -33,6 +33,9 @@ ap.add_argument("--host-blocks", type=int, default=0,
 ap.add_argument("--tier", default="ebpf-tier",
                 choices=["ebpf-tier", "lru-tier", "never-tier", "default"],
                 help="mm_tier hook policy (used when --host-blocks > 0)")
+ap.add_argument("--scalar-faults", action="store_true",
+                help="pre-batching fault path: one policy invocation per "
+                     "fault instead of one per engine step")
 args = ap.parse_args()
 
 cfg = get_smoke_config(args.arch)
@@ -50,7 +53,8 @@ profile = Profile("chat", [
 
 engine = ServingEngine(cfg, params, layout, max_batch=4, policy=args.policy,
                        profile=profile, host_blocks=args.host_blocks,
-                       tier_policy=args.tier)
+                       tier_policy=args.tier,
+                       batch_faults=not args.scalar_faults)
 rng = np.random.default_rng(0)
 for r in range(args.requests):
     plen = int(rng.integers(16, 48))

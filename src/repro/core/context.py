@@ -147,6 +147,52 @@ class FaultContext:
         return v
 
 
+# --------------------------------------------------------------------------
+# Batched ctx assembly.  A batch built from one snapshot shares all of the
+# system-state columns (buddy free lists, fragmentation, cost constants,
+# clock, pressure); only the per-fault columns differ per row.  These helpers
+# are the column-wise (vectorized) counterpart of FaultContext.vector() and
+# are used by both the fault-path and tier-scan batch builders.
+# --------------------------------------------------------------------------
+
+def ctx_batch(n: int) -> np.ndarray:
+    """A zeroed ``[n, CTX_LEN]`` int64 ctx matrix (one row per fault)."""
+    return np.zeros((n, CTX_LEN), dtype=np.int64)
+
+
+def fill_system_columns(mat: np.ndarray, *,
+                        free_blocks, frag,
+                        zero_ns_per_block: int, compact_ns_per_block: int,
+                        descriptor_ns: int, block_bytes: int,
+                        ktime_ns: int, mem_pressure: int,
+                        tier_free_blocks: int = 0, tier_total_blocks: int = 0,
+                        tier_pressure: int = 0, pcie_ns_per_block: int = 0,
+                        migrate_setup_ns: int = 0,
+                        migrate_ns_per_block: int = 0) -> np.ndarray:
+    """Broadcast one system-state snapshot into every row of ``mat``.
+
+    ``free_blocks``/``frag`` may be shorter than ``NUM_ORDERS`` when the
+    allocator runs with a reduced ``max_order``; the tail columns stay 0.
+    """
+    fb = np.asarray(free_blocks, dtype=np.int64)
+    fr = np.asarray(frag, dtype=np.int64)
+    mat[:, CTX.FREE_BLOCKS_O0:CTX.FREE_BLOCKS_O0 + fb.size] = fb
+    mat[:, CTX.FRAG_O0:CTX.FRAG_O0 + fr.size] = fr
+    mat[:, CTX.ZERO_NS_PER_BLOCK] = zero_ns_per_block
+    mat[:, CTX.COMPACT_NS_PER_BLOCK] = compact_ns_per_block
+    mat[:, CTX.DESCRIPTOR_NS] = descriptor_ns
+    mat[:, CTX.BLOCK_BYTES] = block_bytes
+    mat[:, CTX.KTIME_NS] = ktime_ns
+    mat[:, CTX.MEM_PRESSURE] = mem_pressure
+    mat[:, CTX.TIER_FREE_BLOCKS] = tier_free_blocks
+    mat[:, CTX.TIER_TOTAL_BLOCKS] = tier_total_blocks
+    mat[:, CTX.TIER_PRESSURE] = tier_pressure
+    mat[:, CTX.PCIE_NS_PER_BLOCK] = pcie_ns_per_block
+    mat[:, CTX.MIGRATE_SETUP_NS] = migrate_setup_ns
+    mat[:, CTX.MIGRATE_NS_PER_BLOCK] = migrate_ns_per_block
+    return mat
+
+
 # Return-value convention for fault-hook programs.
 POLICY_FALLBACK = -1     # defer to the kernel default policy
 

@@ -17,7 +17,6 @@ The region machinery is a faithful port of DAMON's design:
 
 from __future__ import annotations
 
-import random
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -47,35 +46,41 @@ class Damon:
         self.max_nr = max_nr_regions
         self.merge_threshold = merge_threshold
         self.ema = ema
-        self._rng = random.Random(seed)
+        self._rng = np.random.default_rng(seed)
         n0 = min(self.min_nr, self.space_blocks)
         bounds = np.linspace(0, self.space_blocks, n0 + 1).astype(int)
         self.regions: list[Region] = [
             Region(int(a), int(b)) for a, b in zip(bounds, bounds[1:]) if b > a
         ]
         self.windows = 0
+        # bumped whenever the region state changes; lets consumers (batched
+        # ctx builders, the tier-scan ctx cache) reuse heat snapshots
+        self.version = 0
+        self._csum_cache: tuple[int, np.ndarray] | None = None
 
     # ----------------------------------------------------------- aggregation
     def record(self, heat_per_block: np.ndarray) -> None:
         """Aggregate one window of per-block heat into the regions.
 
-        ``heat_per_block`` may be shorter than the space (tail = 0).
+        ``heat_per_block`` may be shorter than the space (tail = 0).  The
+        per-region EMA runs as one vectorized pass (this is on the engine's
+        per-step path, once per active sequence).
         """
         heat = np.asarray(heat_per_block, dtype=np.float64)
         csum = np.concatenate([[0.0], np.cumsum(heat)])
-
-        def span_sum(a: int, b: int) -> float:
-            a = min(a, heat.size)
-            b = min(b, heat.size)
-            return float(csum[b] - csum[a]) if b > a else 0.0
-
-        for r in self.regions:
-            mean = span_sum(r.start, r.end) / max(1, len(r))
+        n = len(self.regions)
+        starts = np.fromiter((r.start for r in self.regions), np.int64, n)
+        ends = np.fromiter((r.end for r in self.regions), np.int64, n)
+        lo = np.minimum(starts, heat.size)
+        hi = np.minimum(ends, heat.size)
+        means = (csum[hi] - csum[lo]) / np.maximum(1, ends - starts)
+        for r, mean in zip(self.regions, means):
             r.nr_accesses = self.ema * mean + (1 - self.ema) * r.nr_accesses
             r.age += 1
         self.windows += 1
         self._merge_regions()
         self._split_regions()
+        self.version += 1
 
     def grow(self, new_space_blocks: int) -> None:
         """The monitored VMA grew (sequence got longer)."""
@@ -83,6 +88,7 @@ class Damon:
             return
         self.regions.append(Region(self.space_blocks, new_space_blocks))
         self.space_blocks = new_space_blocks
+        self.version += 1
 
     # --------------------------------------------------- adaptive regions
     def _merge_regions(self) -> None:
@@ -109,32 +115,72 @@ class Damon:
         budget = self.max_nr - len(self.regions)
         if budget <= 0:
             return
+        # DAMON splits at a random offset to discover sub-structure; all cut
+        # offsets for this pass are drawn in one vectorized call
+        splittable = [i for i, r in enumerate(self.regions)
+                      if len(r) >= 2][:budget]
+        if not splittable:
+            return
+        lens = np.fromiter((len(self.regions[i]) for i in splittable),
+                           np.int64, len(splittable))
+        cuts = self._rng.integers(1, lens)    # in [1, len)
+        cut_at = dict(zip(splittable, cuts))
         out: list[Region] = []
-        for r in self.regions:
-            if budget > 0 and len(r) >= 2:
-                # DAMON splits at a random offset to discover sub-structure
-                cut = r.start + self._rng.randint(1, len(r) - 1)
+        for i, r in enumerate(self.regions):
+            if i in cut_at:
+                cut = r.start + int(cut_at[i])
                 out.append(Region(r.start, cut, r.nr_accesses, 0))
                 out.append(Region(cut, r.end, r.nr_accesses, 0))
-                budget -= 1
             else:
                 out.append(r)
         self.regions = out
 
     # ------------------------------------------------------------- queries
+    def _heat_csum(self) -> np.ndarray:
+        """Cumulative per-block heat (``csum[i]`` = heat over blocks
+        ``[0, i)``), cached per region-state version.  This is the single
+        heat source both the scalar and the batched query paths read, so the
+        two agree bit-for-bit."""
+        if self._csum_cache is None or self._csum_cache[0] != self.version:
+            dense = np.zeros(self.space_blocks, dtype=np.float64)
+            for r in self.regions:
+                dense[r.start:r.end] = r.nr_accesses
+            csum = np.concatenate([[0.0], np.cumsum(dense)])
+            self._csum_cache = (self.version, csum)
+        return self._csum_cache[1]
+
+    _SIZES = 4 ** np.arange(NUM_ORDERS, dtype=np.int64)   # [1, 4, 16, 64]
+
+    def heat_many(self, addrs: np.ndarray, order: int) -> np.ndarray:
+        """Vectorized ``heat_at`` over many addresses at one order."""
+        addrs = np.asarray(addrs, dtype=np.int64)
+        size = 4 ** order
+        a = (addrs // size) * size
+        csum = self._heat_csum()
+        lo = np.minimum(a, self.space_blocks)
+        hi = np.minimum(a + size, self.space_blocks)
+        total = csum[hi] - csum[lo]
+        covered = hi - lo
+        return np.where(covered > 0, total / np.maximum(covered, 1), 0.0)
+
     def heat_at(self, addr: int, order: int) -> float:
         """Mean access count over the aligned order-k page enclosing ``addr``
         (area-weighted across overlapping monitor regions)."""
-        size = 4 ** order
-        a = (addr // size) * size
-        b = a + size
-        total, covered = 0.0, 0
-        for r in self.regions:
-            lo, hi = max(a, r.start), min(b, r.end)
-            if hi > lo:
-                total += r.nr_accesses * (hi - lo)
-                covered += hi - lo
-        return total / max(1, covered)
+        return float(self.heat_many(np.asarray([addr]), order)[0])
+
+    def heat_matrix(self, addrs: np.ndarray) -> np.ndarray:
+        """``int64[N, NUM_ORDERS]`` heat of every address at every order —
+        the batched-ctx-build form of ``heat_vector``, all orders in one
+        broadcasted pass."""
+        addrs = np.asarray(addrs, dtype=np.int64)[:, None]     # [N, 1]
+        a = (addrs // self._SIZES) * self._SIZES               # [N, K]
+        csum = self._heat_csum()
+        lo = np.minimum(a, self.space_blocks)
+        hi = np.minimum(a + self._SIZES, self.space_blocks)
+        total = csum[hi] - csum[lo]
+        covered = hi - lo
+        heat = np.where(covered > 0, total / np.maximum(covered, 1), 0.0)
+        return heat.astype(np.int64)
 
     def heat_vector(self, addr: int) -> tuple[int, ...]:
         return tuple(int(self.heat_at(addr, k)) for k in range(NUM_ORDERS))

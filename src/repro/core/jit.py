@@ -245,14 +245,19 @@ class JitPolicy:
         self._fn, self.facts = compile_program(program, maps)
         self._batched = jax.jit(jax.vmap(self._fn, in_axes=(0, None, None)))
         self._single = jax.jit(self._fn)
+        self._map_cache: tuple | None = None   # (version, arrays, lens)
 
     def _map_args(self):
-        arrays = tuple(jnp.asarray(self.maps[i].live_array()) for i in range(len(self.maps)))
-        lens = jnp.asarray(self.maps.lens(), I64)
-        if not arrays:
-            arrays = (jnp.zeros(1, I64),)
-            lens = jnp.zeros(1, I64)
-        return arrays, lens
+        ver = self.maps.version()
+        if self._map_cache is None or self._map_cache[0] != ver:
+            arrays = tuple(jnp.asarray(self.maps[i].live_array())
+                           for i in range(len(self.maps)))
+            lens = jnp.asarray(self.maps.lens(), I64)
+            if not arrays:
+                arrays = (jnp.zeros(1, I64),)
+                lens = jnp.zeros(1, I64)
+            self._map_cache = (ver, arrays, lens)
+        return self._map_cache[1], self._map_cache[2]
 
     def run(self, ctx_vec: np.ndarray) -> int:
         # enable_x64 scopes true 64-bit ALU semantics to the policy VM without

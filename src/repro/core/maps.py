@@ -22,6 +22,7 @@ class ArrayMap:
         self.capacity = int(capacity)
         self._data = np.zeros(self.capacity, dtype=np.int64)
         self._len = 0
+        self.version = 0      # bumped on every userspace write
 
     def __len__(self) -> int:
         return self._len
@@ -33,6 +34,7 @@ class ArrayMap:
         self._data[:] = 0
         self._data[:values.size] = values
         self._len = int(values.size)
+        self.version += 1
 
     def lookup(self, idx: int) -> int:
         """Bounds-clamped lookup; out-of-range reads return 0 (missing key)."""
@@ -45,6 +47,7 @@ class ArrayMap:
             raise IndexError(f"map {self.name}: index {idx} out of capacity")
         self._data[idx] = np.int64(value)
         self._len = max(self._len, idx + 1)
+        self.version += 1
 
     def as_array(self) -> np.ndarray:
         return self._data.copy()
@@ -72,3 +75,8 @@ class MapRegistry:
 
     def lens(self) -> list[int]:
         return [len(m) for m in self._maps]
+
+    def version(self) -> tuple:
+        """Registry-wide content version — lets executors cache device-side
+        map arguments until userspace reloads a profile."""
+        return (len(self._maps), tuple(m.version for m in self._maps))

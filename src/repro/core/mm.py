@@ -19,9 +19,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .buddy import BuddyAllocator, BuddyError, order_blocks
+from .buddy import RADIX, BuddyAllocator, BuddyError, order_blocks
 from .context import (CTX, CTX_LEN, NUM_ORDERS, POLICY_FALLBACK, FaultContext,
-                      FaultKind)
+                      FaultKind, ctx_batch, fill_system_columns)
 from .cost import CostModel
 from .damon import Damon
 from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
@@ -56,6 +56,18 @@ class ProcessState:
     page_table: dict[int, PageMapping] = field(default_factory=dict)
     mapped: set = field(default_factory=set)   # logical block indices
     accesses: int = 0
+    # Incremental device-visible block table: logical block -> combined
+    # device index (-1 = unmapped).  Updated in place at install/unmap/
+    # collapse/compaction/migration time by the MemoryManager — never
+    # rebuilt per step.  Mutate mappings only through MemoryManager APIs
+    # (install/unmap/collapse/migrate) or the table goes stale.
+    blocktab: np.ndarray = field(
+        default_factory=lambda: np.empty(0, dtype=np.int32))
+    # Mapping-metadata arrays (sorted starts/sizes/orders/tiers/device
+    # indices) for the vectorized access-accounting path; rebuilt lazily
+    # when a mapping changes.
+    meta_dirty: bool = True
+    meta: tuple | None = None
 
     def mappings_sorted(self) -> list[PageMapping]:
         return [self.page_table[k] for k in sorted(self.page_table)]
@@ -133,6 +145,7 @@ class MemoryManager:
         self.ktime_ns = 0
         self._damon_seed = damon_seed
         self._move_log: list[tuple[int, int, int]] = []   # pending device copies
+        self._access_tab: tuple[np.ndarray, np.ndarray] | None = None
 
     # ------------------------------------------------------------- userspace
     def load_profile(self, profile: Profile) -> int:
@@ -174,6 +187,18 @@ class MemoryManager:
         for m in st.page_table.values():
             self._free_phys(m)
 
+    def unmap(self, pid: int, logical_start: int) -> None:
+        """Drop one mapping and release its physical page (partial free —
+        e.g. punching holes to fragment a pool).  Goes through the manager
+        so the incremental block table stays in sync."""
+        st = self.procs[pid]
+        m = st.page_table.pop(logical_start)
+        size = order_blocks(m.order)
+        st.mapped.difference_update(range(m.logical_start,
+                                          m.logical_start + size))
+        self._free_phys(m)
+        self._note_unmapped(st, m.logical_start, m.order)
+
     def _free_phys(self, m: PageMapping) -> None:
         """Release a mapping's physical page into its tier's allocator."""
         self.buddy.free(m.phys_start)
@@ -181,6 +206,74 @@ class MemoryManager:
     def _device_index(self, m: PageMapping) -> int:
         """Base-block index of ``m`` in the device-visible (combined) pool."""
         return m.phys_start
+
+    # ------------------------------------------------ incremental block table
+    def _table(self, st: ProcessState) -> np.ndarray:
+        """The process's cached logical->device table, grown to the VMA."""
+        if st.blocktab.size < st.vma_end:
+            t = np.full(max(st.vma_end, 1), -1, dtype=np.int32)
+            t[:st.blocktab.size] = st.blocktab
+            st.blocktab = t
+        return st.blocktab
+
+    def _set_span(self, st: ProcessState, m: PageMapping) -> int:
+        t = self._table(st)
+        size = order_blocks(m.order)
+        base = self._device_index(m)
+        t[m.logical_start:m.logical_start + size] = \
+            base + np.arange(size, dtype=np.int32)
+        return base
+
+    def _note_installed(self, st: ProcessState, m: PageMapping) -> None:
+        """A NEW mapping: extend the table span; append to the metadata
+        arrays in place when the mapping lands past the current tail (the
+        decode-growth pattern), full rebuild otherwise."""
+        base = self._set_span(st, m)
+        if st.meta is not None and not st.meta_dirty:
+            starts, sizes, orders, tiers, dev = st.meta
+            if starts.size == 0 or m.logical_start > starts[-1]:
+                st.meta = (np.append(starts, m.logical_start),
+                           np.append(sizes, order_blocks(m.order)),
+                           np.append(orders, m.order),
+                           np.append(tiers, m.tier),
+                           np.append(dev, base))
+                return
+        st.meta_dirty = True
+
+    def _note_mapped(self, st: ProcessState, m: PageMapping) -> None:
+        """An EXISTING mapping changed physical placement (compaction, tier
+        migration): refresh its table span; patch the metadata arrays in
+        place when its geometry is unchanged."""
+        base = self._set_span(st, m)
+        if st.meta is not None and not st.meta_dirty:
+            starts, sizes, orders, tiers, dev = st.meta
+            idx = int(np.searchsorted(starts, m.logical_start))
+            if idx < starts.size and starts[idx] == m.logical_start \
+                    and orders[idx] == m.order:
+                tiers[idx] = m.tier
+                dev[idx] = base
+                return
+        st.meta_dirty = True
+
+    def _note_unmapped(self, st: ProcessState, logical_start: int,
+                       order: int) -> None:
+        t = self._table(st)
+        t[logical_start:logical_start + order_blocks(order)] = -1
+        st.meta_dirty = True
+
+    def _mapping_arrays(self, st: ProcessState) -> tuple:
+        """(starts, sizes, orders, tiers, dev) int64 arrays sorted by start,
+        rebuilt lazily when a mapping changed (dirty tracking)."""
+        if st.meta_dirty or st.meta is None:
+            ms = st.mappings_sorted()
+            n = len(ms)
+            starts = np.fromiter((m.logical_start for m in ms), np.int64, n)
+            orders = np.fromiter((m.order for m in ms), np.int64, n)
+            tiers = np.fromiter((m.tier for m in ms), np.int64, n)
+            dev = np.fromiter((self._device_index(m) for m in ms), np.int64, n)
+            st.meta = (starts, RADIX ** orders, orders, tiers, dev)
+            st.meta_dirty = False
+        return st.meta
 
     # ---------------------------------------------------------------- faults
     def fault_max_order(self, st: ProcessState, addr: int) -> int:
@@ -249,7 +342,9 @@ class MemoryManager:
         return self._install(st, addr, order, hinted)
 
     def ensure_range(self, pid: int, start: int, end: int) -> list[FaultResult]:
-        """Bulk fault (prefill/mmap population)."""
+        """Bulk fault (prefill/mmap population), scalar path: one policy
+        invocation per fault.  Kept as the reference/no-program route; the
+        engine's hot path uses :meth:`fault_range`."""
         results = []
         st = self.procs[pid]
         addr = start
@@ -262,6 +357,156 @@ class MemoryManager:
                 addr = (addr // size) * size + size
                 results.append(r)
         return results
+
+    # --------------------------------------------------------- batched faults
+    def fault_batch(self, reqs: list[tuple[int, int, FaultKind]]
+                    ) -> list[FaultResult | None]:
+        """Resolve many faults through ONE policy invocation.
+
+        ``reqs`` is ``[(pid, addr, kind), ...]``; the return list is aligned
+        with it (``None`` = already mapped, or covered by an earlier grant in
+        the same batch).  The ctx matrix is built from one system-state
+        snapshot (one ``buddy.stats()``, vectorized DAMON heat) and decided
+        by a single ``hooks.run_batch`` call; installs then run in request
+        order with install-time conflict resolution — an earlier grant that
+        covers a later request skips it, one that overlaps a later request's
+        window shrinks its feasible order (the grant is clamped to a freshly
+        computed ``fault_max_order``).  OOM/degrade/compaction semantics are
+        identical to the scalar path: the first request that cannot be
+        satisfied raises :class:`MMOutOfMemory` with earlier installs kept,
+        exactly like the scalar loop.  With no program attached the default
+        path installs directly — no ctx is built (zero-overhead property).
+        """
+        results: list[FaultResult | None] = [None] * len(reqs)
+        pend: list[int] = []
+        for i, (pid, addr, _kind) in enumerate(reqs):
+            st = self.procs[pid]
+            if addr >= st.vma_end:
+                raise MMError(
+                    f"pid {pid}: fault at {addr} beyond VMA end {st.vma_end}")
+            if addr not in st.mapped:
+                pend.append(i)
+        if not pend:
+            return results
+        if not self.hooks.attached(HOOK_FAULT):
+            for i in pend:
+                pid, addr, _kind = reqs[i]
+                st = self.procs[pid]
+                if addr in st.mapped:          # covered by an earlier install
+                    continue
+                fmax = self.fault_max_order(st, addr)
+                results[i] = self._install(st, addr,
+                                           self._default_order(fmax), False)
+            return results
+        ctx_mat = self._build_ctx_batch([reqs[i] for i in pend])
+        decisions = self.hooks.run_batch(HOOK_FAULT, ctx_mat)
+        for row, i in enumerate(pend):
+            pid, addr, _kind = reqs[i]
+            st = self.procs[pid]
+            if addr in st.mapped:              # conflict: earlier grant won
+                continue
+            fmax = self.fault_max_order(st, addr)
+            decision = int(decisions[row])
+            hinted = decision != POLICY_FALLBACK
+            if not hinted:
+                order = self._default_order(fmax)
+                self.stats.fallback_faults += 1
+            else:
+                order = max(0, min(decision, fmax))
+            results[i] = self._install(st, addr, order, hinted)
+        return results
+
+    def fault_range(self, pid: int, start: int, end: int,
+                    kind: FaultKind = FaultKind.PREFILL) -> list[FaultResult]:
+        """Batched :meth:`ensure_range`: the whole span resolves through one
+        policy invocation (every unmapped block is a candidate; blocks
+        covered by an earlier grant in the batch are skipped at install)."""
+        res = self.fault_batch([(pid, a, kind) for a in range(start, end)])
+        return [r for r in res if r is not None]
+
+    def _build_ctx_batch(self, reqs: list[tuple[int, int, FaultKind]]
+                         ) -> np.ndarray:
+        """Vectorized :meth:`_build_ctx`: one buddy snapshot shared by every
+        row, per-pid vectorized DAMON heat and feasible-order computation.
+        Row ``i`` equals ``_build_ctx(procs[pid_i], addr_i, kind_i)`` built
+        at batch-start state."""
+        bstats = self.buddy.stats()
+        n = len(reqs)
+        mat = ctx_batch(n)
+        fill_system_columns(
+            mat,
+            free_blocks=bstats.free_per_order,
+            frag=bstats.frag_index_milli,
+            zero_ns_per_block=self.cost.zero_ns_per_block(),
+            compact_ns_per_block=self.cost.compact_ns_per_block(),
+            descriptor_ns=int(self.cost.hw.descriptor_ns),
+            block_bytes=self.cost.block_bytes,
+            ktime_ns=self.ktime_ns,
+            mem_pressure=bstats.utilization_milli)
+        pids = np.fromiter((r[0] for r in reqs), np.int64, n)
+        addrs = np.fromiter((r[1] for r in reqs), np.int64, n)
+        kinds = np.fromiter((int(r[2]) for r in reqs), np.int64, n)
+        mat[:, CTX.ADDR] = addrs
+        mat[:, CTX.PID] = pids
+        mat[:, CTX.FAULT_KIND] = kinds
+        # Per-process state is gathered through concatenated cumsum tables so
+        # the whole batch resolves in a fixed number of numpy ops, however
+        # many processes it spans.
+        upids, inv = np.unique(pids, return_inverse=True)
+        sts = [self.procs[int(p)] for p in upids]
+        g = len(sts)
+        ves = np.fromiter((st.vma_end for st in sts), np.int64, g)
+        mat[:, CTX.VMA_END] = ves[inv]
+        mat[:, CTX.SEQ_LEN] = ves[inv]
+        has, mapid, nreg = np.zeros(g, np.int64), np.zeros(g, np.int64), \
+            np.zeros(g, np.int64)
+        for j, st in enumerate(sts):
+            if st.app and st.app in self.profiles:
+                prof, map_id = self.profiles[st.app]
+                has[j], mapid[j], nreg[j] = 1, map_id, len(prof.regions)
+        mat[:, CTX.HAS_PROFILE] = has[inv]
+        mat[:, CTX.PROFILE_MAP_ID] = mapid[inv]
+        mat[:, CTX.PROFILE_NREGIONS] = nreg[inv]
+        sizes = self._ORDER_SIZES[:NUM_ORDERS]
+        a = (addrs[:, None] // sizes) * sizes                     # [N, K]
+        # --- DAMON heat, all rows/orders at once ---
+        csums = [st.damon._heat_csum() for st in sts]
+        offs = np.zeros(g, np.int64)
+        offs[1:] = np.cumsum([c.size for c in csums])[:-1]
+        heat_cat = np.concatenate(csums)
+        spaces = np.fromiter((st.damon.space_blocks for st in sts),
+                             np.int64, g)
+        row_space = spaces[inv][:, None]
+        row_off = offs[inv][:, None]
+        lo = np.minimum(a, row_space)
+        hi = np.minimum(a + sizes, row_space)
+        total = heat_cat[row_off + hi] - heat_cat[row_off + lo]
+        covered = hi - lo
+        heat = np.where(covered > 0, total / np.maximum(covered, 1), 0.0)
+        mat[:, CTX.HEAT_O0:CTX.HEAT_O0 + NUM_ORDERS] = \
+            heat.astype(np.int64)
+        # --- feasible order (vectorized fault_max_order), same pattern;
+        #     candidate orders stop at self.max_order like the scalar path ---
+        frees = [np.concatenate(
+            [[0], np.cumsum(self._table(st)[:st.vma_end] == -1)])
+            for st in sts]
+        foffs = np.zeros(g, np.int64)
+        foffs[1:] = np.cumsum([f.size for f in frees])[:-1]
+        free_cat = np.concatenate(frees)
+        row_ve = ves[inv][:, None]
+        row_foff = foffs[inv][:, None]
+        ks = self.max_order + 1
+        fsizes = sizes[:ks]
+        af = a[:, :ks]
+        flo = np.minimum(af, row_ve)
+        fhi = np.minimum(af + fsizes, row_ve)
+        span_free = free_cat[row_foff + fhi] - free_cat[row_foff + flo]
+        ok = (af + fsizes <= row_ve) & (span_free == fsizes)
+        mat[:, CTX.FAULT_MAX_ORDER] = \
+            (ok * np.arange(ks, dtype=np.int64)).max(axis=1)
+        return mat
+
+    _ORDER_SIZES = RADIX ** np.arange(NUM_ORDERS, dtype=np.int64)
 
     def _install(self, st: ProcessState, addr: int, order: int,
                  hinted: bool) -> FaultResult:
@@ -292,6 +537,7 @@ class MemoryManager:
         m = PageMapping(logical_start=a, phys_start=phys, order=order)
         st.page_table[a] = m
         st.mapped.update(range(a, a + size))
+        self._note_installed(st, m)
         self.stats.faults += 1
         if hinted:
             self.stats.hinted_faults += 1
@@ -314,6 +560,7 @@ class MemoryManager:
             for m in st.page_table.values():
                 if m.tier == tier and m.phys_start in remap:
                     m.phys_start = remap[m.phys_start]
+                    self._note_mapped(st, m)
         blocks = sum(order_blocks(o) for _, _, o in plan)
         self.stats.compaction_blocks_moved += blocks
         self.stats.mgmt_ns += self.cost.compact_ns_per_block() * blocks
@@ -355,8 +602,11 @@ class MemoryManager:
             copied += order_blocks(m.order)
             self.buddy.free(m.phys_start)
             del st.page_table[m.logical_start]
-        st.page_table[a] = PageMapping(a, phys, to_order)
+        big = PageMapping(a, phys, to_order)
+        st.page_table[a] = big
         st.mapped.update(range(a, a + size))
+        self._set_span(st, big)        # covers the holes + migrated spans
+        st.meta_dirty = True           # structural change: old pages removed
         self.stats.promotions += 1
         self.stats.promotion_blocks_copied += copied
         self.stats.blocks_zeroed += size - copied
@@ -390,59 +640,83 @@ class MemoryManager:
         self.stats.evictions += 1
 
     # -------------------------------------------------------------- access
+    def _access_ns_tables(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-order access cost (HBM and host tier), cached — the constants
+        behind the vectorized access accounting."""
+        if self._access_tab is None:
+            ks = range(self.max_order + 1)
+            self._access_tab = (
+                np.fromiter((int(self.cost.access_ns(k)) for k in ks),
+                            np.int64, self.max_order + 1),
+                np.fromiter((int(self.cost.tier_access_ns(k)) for k in ks),
+                            np.int64, self.max_order + 1))
+        return self._access_tab
+
     def record_access(self, pid: int, heat_per_block: np.ndarray) -> None:
         """Called once per engine step with the kernel-emitted heat stats.
 
         Access cost is charged only for mappings that were actually READ this
         step (nonzero attention mass over their span) — sliding-window and
-        sparse-attention models do not stream their cold blocks."""
+        sparse-attention models do not stream their cold blocks.  The
+        per-mapping accounting runs as numpy segment sums over the cached
+        mapping arrays, not a Python loop."""
         st = self.procs[pid]
         heat = np.asarray(heat_per_block, dtype=np.float64)
         st.damon.record(heat)
         st.accesses += 1
+        starts, sizes, orders, tiers, _ = self._mapping_arrays(st)
+        if starts.size == 0:
+            return
         csum = np.concatenate([[0.0], np.cumsum(heat)])
-        for m in st.mappings_sorted():
-            lo = min(m.logical_start, heat.size)
-            hi = min(m.logical_start + order_blocks(m.order), heat.size)
-            if hi > lo and csum[hi] - csum[lo] > 0:
-                self.stats.descriptors_touched += 1
-                if m.tier == 0:
-                    self.stats.access_ns += int(self.cost.access_ns(m.order))
-                else:
-                    # host-tier resident page: the read crosses PCIe
-                    self.stats.tier_reads += 1
-                    self.stats.access_ns += int(self.cost.tier_access_ns(m.order))
+        lo = np.minimum(starts, heat.size)
+        hi = np.minimum(starts + sizes, heat.size)
+        read = (hi > lo) & ((csum[hi] - csum[lo]) > 0)
+        self.stats.descriptors_touched += int(read.sum())
+        acc_hbm, acc_host = self._access_ns_tables()
+        hbm = read & (tiers == 0)
+        host = read & (tiers != 0)
+        self.stats.tier_reads += int(host.sum())
+        self.stats.access_ns += int(acc_hbm[orders[hbm]].sum()
+                                    + acc_host[orders[host]].sum())
 
     def descriptors_for(self, pid: int) -> int:
         return len(self.procs[pid].page_table)
 
     # ---------------------------------------------------- device integration
     def block_table(self, pid: int, max_blocks: int) -> np.ndarray:
-        """Flattened logical->physical base-block map (-1 = unmapped)."""
+        """Flattened logical->physical base-block map (-1 = unmapped).
+
+        Served from the per-process incremental table — an O(max_blocks)
+        numpy copy, not a per-mapping Python rebuild."""
         st = self.procs[pid]
-        t = np.full(max_blocks, -1, dtype=np.int32)
-        for m in st.page_table.values():
-            size = order_blocks(m.order)
-            hi = min(m.logical_start + size, max_blocks)
-            base = self._device_index(m)
-            for i in range(m.logical_start, hi):
-                t[i] = base + (i - m.logical_start)
-        return t
+        t = self._table(st)
+        out = np.full(max_blocks, -1, dtype=np.int32)
+        n = min(max_blocks, t.size)
+        out[:n] = t[:n]
+        return out
 
     def page_lists_by_order(self, pids: list[int]) -> dict[int, np.ndarray]:
         """Per-order page lists for the multi-size paged-attention kernel.
 
         Returns {order: int32[[seq_slot, logical_page_idx, phys_page_start]]}.
-        seq_slot is the position of the pid in ``pids``.
+        seq_slot is the position of the pid in ``pids``.  Assembled from the
+        cached mapping arrays (dirty-tracked), vectorized per order.
         """
-        out = {k: [] for k in range(self.max_order + 1)}
+        out: dict[int, list] = {k: [] for k in range(self.max_order + 1)}
         for slot, pid in enumerate(pids):
-            st = self.procs[pid]
-            for m in st.mappings_sorted():
-                out[m.order].append(
-                    (slot, m.logical_start // order_blocks(m.order),
-                     self._device_index(m)))
-        return {k: np.asarray(v, dtype=np.int32).reshape(-1, 3)
+            starts, _sizes, orders, _tiers, dev = \
+                self._mapping_arrays(self.procs[pid])
+            for k in range(self.max_order + 1):
+                sel = orders == k
+                if not sel.any():
+                    continue
+                rows = np.stack([
+                    np.full(int(sel.sum()), slot, dtype=np.int64),
+                    starts[sel] // order_blocks(k),
+                    dev[sel]], axis=1)
+                out[k].append(rows)
+        return {k: (np.concatenate(v).astype(np.int32) if v
+                    else np.zeros((0, 3), dtype=np.int32))
                 for k, v in out.items()}
 
     def drain_moves(self) -> list[tuple[int, int, int]]:

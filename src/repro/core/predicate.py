@@ -131,9 +131,14 @@ def unroll(program: Program, maps: MapRegistry) -> list[_Jump]:
         else None) for pc, i in enumerate(insns)]
 
 
-def compile_predicated(program: Program, maps: MapRegistry) -> Callable:
-    """Returns fn(ctx [B, CTX_LEN], map_arrays, map_lens) -> r0 [B]."""
-    code = unroll(program, maps)
+def compile_predicated(program: Program, maps: MapRegistry,
+                       code: list[_Jump] | None = None) -> Callable:
+    """Returns fn(ctx [B, CTX_LEN], map_arrays, map_lens) -> r0 [B].
+
+    ``code`` lets a caller that already unrolled the program (e.g. to size
+    it) pass the result in instead of unrolling twice."""
+    if code is None:
+        code = unroll(program, maps)
     n = len(code)
 
     def run(ctx, map_arrays, map_lens):
@@ -233,17 +238,26 @@ def compile_predicated(program: Program, maps: MapRegistry) -> Callable:
 class PredicatedPolicy:
     """Batch fault-decision executor (drop-in for JitPolicy.run_batch)."""
 
-    def __init__(self, program: Program, maps: MapRegistry) -> None:
+    def __init__(self, program: Program, maps: MapRegistry,
+                 code: list[_Jump] | None = None) -> None:
         self.maps = maps
-        self._fn = jax.jit(compile_predicated(program, maps))
+        self._fn = jax.jit(compile_predicated(program, maps, code))
+        self._map_cache: tuple | None = None   # (version, arrays, lens)
 
-    def run_batch(self, ctx_mat: np.ndarray) -> np.ndarray:
-        with jax.experimental.enable_x64():
+    def _map_args(self):
+        ver = self.maps.version()
+        if self._map_cache is None or self._map_cache[0] != ver:
             arrays = tuple(jnp.asarray(self.maps[i].live_array())
                            for i in range(len(self.maps)))
             lens = jnp.asarray(self.maps.lens(), I64)
             if not arrays:
                 arrays = (jnp.zeros(1, I64),)
                 lens = jnp.zeros(1, I64)
+            self._map_cache = (ver, arrays, lens)
+        return self._map_cache[1], self._map_cache[2]
+
+    def run_batch(self, ctx_mat: np.ndarray) -> np.ndarray:
+        with jax.experimental.enable_x64():
+            arrays, lens = self._map_args()
             return np.asarray(self._fn(jnp.asarray(ctx_mat, I64), arrays,
                                        lens))

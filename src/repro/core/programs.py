@@ -29,7 +29,8 @@ from .vm import HELPER_MIGRATE_COST, HELPER_PROMOTION_COST
 
 
 def ebpf_mm_program(profile_map_id: int | None = None,
-                    heat_weight_milli: int = 1000) -> Program:
+                    heat_weight_milli: int = 1000,
+                    max_regions: int = MAX_PROFILE_REGIONS) -> Program:
     """The paper's fault-hook program.
 
     profile map layout per region (REGION_STRIDE int64s):
@@ -39,6 +40,8 @@ def ebpf_mm_program(profile_map_id: int | None = None,
     LDMAPX load — one loaded program serves every application's profile
     (map-in-map, like the userspace framework registering one map per app).
     Passing ``profile_map_id`` pins a static map instead (single-app mode).
+    ``max_regions`` bounds the verified search loop; lowering it keeps the
+    unrolled (predicated) compile small when profiles are known to be short.
 
     Register plan:
         r1 addr / helper arg     r2 nregions / fault_max_order / map id
@@ -65,7 +68,7 @@ def ebpf_mm_program(profile_map_id: int | None = None,
     # ---- profile region search (bounded loop) ----
     a.movi("r8", -1)
     a.movi("r4", 0)
-    a.movi("r3", MAX_PROFILE_REGIONS)
+    a.movi("r3", max_regions)
     a.label("loop")
     a.jge("r4", "r2", "next_iter")          # idx >= nregions: nothing left
     a.mov("r9", "r4")

@@ -34,8 +34,9 @@ from dataclasses import dataclass
 import numpy as np
 
 from .buddy import BuddyAllocator, BuddyError, order_blocks
-from .context import (FIXED_POINT, POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP,
-                      FaultContext)
+from .context import (CTX, FIXED_POINT, NUM_ORDERS, POLICY_FALLBACK,
+                      TIER_DEMOTE, TIER_KEEP, FaultContext, ctx_batch,
+                      fill_system_columns)
 from .cost import CostModel
 from .hooks import HOOK_TIER
 from .mm import MemoryManager, PageMapping, ProcessState
@@ -73,6 +74,13 @@ class TieredMemoryManager(MemoryManager):
         self.tier_cfg = tier_cfg or TierConfig()
         # (pid, logical_start) -> ktime_ns of the last tier change / install
         self._tier_stamp: dict[tuple[int, int], int] = {}
+        # Scan-ctx cache: the per-candidate columns of a tier-scan ctx matrix
+        # (heat, identity, geometry) are reused across ticks while the
+        # candidate set and every involved DAMON monitor are unchanged; only
+        # the time-varying columns (clock, age, pool state) are refreshed.
+        self._scan_ctx_cache: dict[str, tuple] = {}
+        self.ctx_cache_hits = 0
+        self.ctx_cache_misses = 0
 
     # --------------------------------------------------------------- geometry
     @property
@@ -95,6 +103,10 @@ class TieredMemoryManager(MemoryManager):
         super().free_process(pid)
         self._tier_stamp = {k: v for k, v in self._tier_stamp.items()
                             if k[0] != pid}
+
+    def unmap(self, pid: int, logical_start: int) -> None:
+        super().unmap(pid, logical_start)
+        self._tier_stamp.pop((pid, logical_start), None)
 
     def _install(self, st, addr, order, hinted):
         r = super()._install(st, addr, order, hinted)
@@ -154,17 +166,89 @@ class TieredMemoryManager(MemoryManager):
         return (TIER_KEEP if st.damon.heat_at(m.logical_start, m.order) > 0
                 else TIER_DEMOTE)
 
-    def tier_decisions(self, cands: list[tuple[ProcessState, PageMapping]]
-                       ) -> list[int]:
+    def _build_tier_mat(self, cands: list[tuple[ProcessState, PageMapping]]
+                        ) -> np.ndarray:
+        """Vectorized per-candidate ctx columns (identity, geometry, DAMON
+        heat) — the part of the matrix the scan cache can reuse across
+        ticks.  Time-varying columns are filled by the caller."""
+        n = len(cands)
+        mat = ctx_batch(n)
+        pids = np.fromiter((st.pid for st, _ in cands), np.int64, n)
+        addrs = np.fromiter((m.logical_start for _, m in cands), np.int64, n)
+        orders = np.fromiter((m.order for _, m in cands), np.int64, n)
+        tiers = np.fromiter((m.tier for _, m in cands), np.int64, n)
+        mat[:, CTX.ADDR] = addrs
+        mat[:, CTX.PID] = pids
+        mat[:, CTX.FAULT_MAX_ORDER] = orders
+        mat[:, CTX.PAGE_ORDER] = orders
+        mat[:, CTX.PAGE_TIER] = tiers
+        for pid in np.unique(pids):
+            st = self.procs[int(pid)]
+            sel = pids == pid
+            mat[sel, CTX.VMA_END] = st.vma_end
+            mat[sel, CTX.SEQ_LEN] = st.vma_end
+            mat[sel, CTX.HEAT_O0:CTX.HEAT_O0 + NUM_ORDERS] = \
+                st.damon.heat_matrix(addrs[sel])
+            for k in np.unique(orders[sel]):
+                s2 = sel & (orders == k)
+                heat = st.damon.heat_many(addrs[s2], int(k)) * FIXED_POINT
+                mat[s2, CTX.PAGE_HEAT] = heat.astype(np.int64)
+        return mat
+
+    def _tier_ctx_batch(self, cands: list[tuple[ProcessState, PageMapping]],
+                        *, cache: str | None = None) -> np.ndarray:
+        """Ctx matrix for a candidate batch; row ``i`` equals
+        ``_tier_ctx(*cands[i])``.  With ``cache`` set, the per-candidate
+        columns are reused across ticks while the candidate set and the
+        involved DAMON monitors are unchanged (the ROADMAP's promotion-scan
+        cost item); the clock/age/pool-state columns refresh every call."""
+        key = (tuple((st.pid, m.logical_start, m.tier, m.order)
+                     for st, m in cands),
+               tuple(sorted({(st.pid, st.damon.version) for st, _ in cands})))
+        cached = self._scan_ctx_cache.get(cache) if cache else None
+        if cached is not None and cached[0] == key:
+            mat = cached[1]
+            self.ctx_cache_hits += 1
+        else:
+            mat = self._build_tier_mat(cands)
+            self.ctx_cache_misses += 1
+            if cache:
+                self._scan_ctx_cache[cache] = (key, mat)
+        bstats = self.buddy.stats()
+        hstats = self.host_buddy.stats()
+        fill_system_columns(
+            mat,
+            free_blocks=bstats.free_per_order,
+            frag=bstats.frag_index_milli,
+            zero_ns_per_block=self.cost.zero_ns_per_block(),
+            compact_ns_per_block=self.cost.compact_ns_per_block(),
+            descriptor_ns=int(self.cost.hw.descriptor_ns),
+            block_bytes=self.cost.block_bytes,
+            ktime_ns=self.ktime_ns,
+            mem_pressure=bstats.utilization_milli,
+            tier_free_blocks=hstats.free_blocks,
+            tier_total_blocks=hstats.total_blocks,
+            tier_pressure=hstats.utilization_milli,
+            pcie_ns_per_block=self.cost.pcie_ns_per_block(),
+            migrate_setup_ns=int(self.cost.hw.pcie_setup_ns),
+            migrate_ns_per_block=self.cost.migrate_ns_per_block())
+        mat[:, CTX.PAGE_AGE] = np.fromiter(
+            (self._page_age_ticks(st.pid, m.logical_start)
+             for st, m in cands), np.int64, len(cands))
+        return mat
+
+    def tier_decisions(self, cands: list[tuple[ProcessState, PageMapping]],
+                       *, scan: str | None = None) -> list[int]:
         """Run HOOK_TIER over candidate pages; vectorized when the batch is
-        large enough to amortize the XLA dispatch."""
+        large enough to amortize the XLA dispatch.  ``scan`` names the ctx
+        cache slot the batch matrix may be reused from across ticks."""
         if not cands:
             return []
         if not self.hooks.attached(HOOK_TIER):
             # zero-overhead default path: no ctx build, no VM run
             return [self._default_tier_decision(st, m) for st, m in cands]
         if len(cands) >= self.tier_cfg.batch_threshold:
-            mat = np.stack([self._tier_ctx(st, m) for st, m in cands])
+            mat = self._tier_ctx_batch(cands, cache=scan)
             raw = self.hooks.run_batch(HOOK_TIER, mat)
             decisions = [int(d) for d in raw]
         else:
@@ -197,6 +281,7 @@ class TieredMemoryManager(MemoryManager):
         self.buddy.free(m.phys_start)
         m.phys_start = hp
         m.tier = TIER_HOST
+        self._note_mapped(st, m)
         self._tier_stamp[(pid, logical_start)] = self.ktime_ns
         self.stats.demotions += 1
         self.stats.demotion_blocks += n
@@ -226,6 +311,7 @@ class TieredMemoryManager(MemoryManager):
         self.host_buddy.free(m.phys_start)
         m.phys_start = phys
         m.tier = TIER_HBM
+        self._note_mapped(st, m)
         self._tier_stamp[(pid, logical_start)] = self.ktime_ns
         self.stats.tier_promotions += 1
         self.stats.tier_promotion_blocks += n
@@ -257,7 +343,7 @@ class TieredMemoryManager(MemoryManager):
             sm[0].damon.heat_at(sm[1].logical_start, sm[1].order),
             0 if sm[0].pid == prefer_pid else 1,
             sm[0].pid, -sm[1].logical_start))
-        decisions = self.tier_decisions(cands)
+        decisions = self.tier_decisions(cands, scan="demote")
         freed = 0
         for (st, m), d in zip(cands, decisions):
             if freed >= need:
@@ -282,7 +368,7 @@ class TieredMemoryManager(MemoryManager):
             return 0
         cands.sort(key=lambda sm: -sm[0].damon.heat_at(
             sm[1].logical_start, sm[1].order))
-        decisions = self.tier_decisions(cands)
+        decisions = self.tier_decisions(cands, scan="promote")
         promoted = 0
         for (st, m), d in zip(cands, decisions):
             if promoted >= budget:

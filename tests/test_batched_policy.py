@@ -1,0 +1,421 @@
+"""Batched fault path — parity and equivalence guarantees.
+
+* ctx-matrix parity: the vectorized batch builder must reproduce the scalar
+  ``_build_ctx`` rows bit-for-bit (one snapshot, vectorized DAMON heat).
+* executor parity: interpreter == JIT == predicated decisions for every
+  shipped program over randomized ctx batches.
+* end-state equivalence: ``fault_batch`` == sequential ``ensure_mapped``
+  (page tables, stats, move lists) when decisions don't depend on mid-batch
+  allocator drift.
+* engine accounting: with a fault program attached, a decode step issues
+  exactly ONE ``HOOK_FAULT`` batch invocation.
+* incremental block tables stay consistent with a from-scratch rebuild
+  across install/unmap/collapse/compaction/migration.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (ArrayMap, HWSpec, JitPolicy, MapRegistry,
+                        MemoryManager, PolicyVM, PredicatedPolicy, Profile,
+                        ProfileRegion, TieredMemoryManager, ebpf_mm_program,
+                        make_cost_model, never_program, reclaim_lru_program,
+                        thp_always_program, tier_damon_program,
+                        tier_lru_program, tier_never_program)
+from repro.core.buddy import order_blocks
+from repro.core.context import CTX, CTX_LEN, FaultContext, FaultKind
+from repro.core.hooks import HOOK_FAULT
+from repro.core.tiering import TIER_HOST
+
+
+def mk_mm(num_blocks=2048, default="thp", *, tiered=False, host=256,
+          profile=None, program=None):
+    cost = make_cost_model(HWSpec(), kv_heads=8, head_dim=128)
+    if tiered:
+        mm = TieredMemoryManager(num_blocks, cost, host_blocks=host,
+                                 default_mode=default)
+    else:
+        mm = MemoryManager(num_blocks, cost, default_mode=default)
+    if profile is not None:
+        mm.load_profile(profile)
+    if program is not None:
+        mm.attach_fault_program(program)
+    return mm
+
+
+def striped_profile(app="app", blocks=256, nreg=8):
+    bounds = np.linspace(0, blocks, nreg + 1).astype(int)
+    regions = [ProfileRegion(int(a), int(b),
+                             (0, 150_000, 0, 0) if i % 2 == 0
+                             else (0, 0, 0, 0))
+               for i, (a, b) in enumerate(zip(bounds, bounds[1:])) if b > a]
+    return Profile(app, regions)
+
+
+def reference_block_table(mm, pid, max_blocks):
+    """From-scratch rebuild (the seed implementation) as the oracle."""
+    st = mm.procs[pid]
+    t = np.full(max_blocks, -1, dtype=np.int32)
+    for m in st.page_table.values():
+        size = order_blocks(m.order)
+        hi = min(m.logical_start + size, max_blocks)
+        base = mm._device_index(m)
+        for i in range(m.logical_start, hi):
+            t[i] = base + (i - m.logical_start)
+    return t
+
+
+class TestCtxBatchParity:
+    def test_rows_match_scalar_builder(self):
+        mm = mk_mm(profile=striped_profile(),
+                   program=ebpf_mm_program(max_regions=8))
+        rng = np.random.default_rng(0)
+        mm.create_process(1, app="app", vma_blocks=256)
+        mm.create_process(2, app=None, vma_blocks=100)
+        mm.ensure_range(1, 0, 40)
+        mm.ensure_range(2, 0, 10)
+        mm.record_access(1, rng.random(256) * 3)
+        mm.record_access(2, rng.random(100))
+        mm.tick()
+        reqs = [(1, int(a), FaultKind.FIRST_TOUCH)
+                for a in rng.integers(0, 256, 12)]
+        reqs += [(2, int(a), FaultKind.PREFILL)
+                 for a in rng.integers(0, 100, 7)]
+        mat = mm._build_ctx_batch(reqs)
+        assert mat.shape == (len(reqs), CTX_LEN)
+        for row, (pid, addr, kind) in zip(mat, reqs):
+            ref = mm._build_ctx(mm.procs[pid], addr, kind)
+            np.testing.assert_array_equal(row, ref)
+
+    @pytest.mark.parametrize("max_order", [1, 2, 3])
+    def test_vectorized_fault_max_orders(self, max_order):
+        cost = make_cost_model(HWSpec(), kv_heads=8, head_dim=128)
+        mm = MemoryManager(2048, cost, default_mode="never",
+                           max_order=max_order)
+        mm.create_process(1, vma_blocks=200)
+        rng = np.random.default_rng(1)
+        for a in rng.integers(0, 200, 60):
+            if int(a) not in mm.procs[1].mapped:
+                mm.ensure_mapped(1, int(a))
+        addrs = [int(a) for a in np.arange(200) if a not in mm.procs[1].mapped]
+        reqs = [(1, a, FaultKind.FIRST_TOUCH) for a in addrs]
+        vec = mm._build_ctx_batch(reqs)[:, CTX.FAULT_MAX_ORDER]
+        ref = [mm.fault_max_order(mm.procs[1], a) for a in addrs]
+        np.testing.assert_array_equal(vec, ref)
+
+
+def _random_ctx_batch(rng, n, *, nregions=0, map_id=0):
+    rows = []
+    for _ in range(n):
+        fc = FaultContext(
+            addr=int(rng.integers(0, 256)), pid=int(rng.integers(1, 9)),
+            vma_start=0, vma_end=int(rng.integers(1, 257)),
+            fault_max_order=int(rng.integers(0, 4)),
+            has_profile=int(nregions > 0 and rng.random() < 0.8),
+            profile_map_id=map_id, profile_nregions=nregions,
+            free_blocks=tuple(rng.integers(0, 200, 4)),
+            frag=tuple(rng.integers(0, 1001, 4)),
+            heat=tuple(rng.integers(0, 50, 4)),
+            zero_ns_per_block=int(rng.integers(100, 2000)),
+            compact_ns_per_block=int(rng.integers(100, 3000)),
+            descriptor_ns=800, block_bytes=65536,
+            ktime_ns=int(rng.integers(0, 10 ** 9)),
+            mem_pressure=int(rng.integers(0, 1001)),
+            fault_kind=int(rng.integers(0, 3)),
+            seq_len=int(rng.integers(0, 257)),
+            tier_free_blocks=int(rng.integers(0, 300)),
+            tier_total_blocks=256,
+            tier_pressure=int(rng.integers(0, 1001)),
+            pcie_ns_per_block=int(rng.integers(100, 4000)),
+            page_tier=int(rng.integers(0, 2)),
+            page_order=int(rng.integers(0, 4)),
+            page_age=int(rng.integers(0, 20)),
+            page_heat=int(rng.integers(0, 5000)),
+            migrate_setup_ns=2000,
+            migrate_ns_per_block=int(rng.integers(500, 5000)))
+        rows.append(fc.vector())
+    return np.stack(rows)
+
+
+class TestExecutorParity:
+    """interpreter == JIT == predicated for every shipped program."""
+
+    @pytest.mark.parametrize("name,make,with_profile", [
+        ("ebpf_mm", lambda: ebpf_mm_program(max_regions=8), True),
+        ("thp_always", thp_always_program, False),
+        ("never", never_program, False),
+        ("reclaim_lru", reclaim_lru_program, False),
+        ("tier_damon", tier_damon_program, False),
+        ("tier_lru", tier_lru_program, False),
+        ("tier_never", tier_never_program, False),
+    ])
+    def test_all_executors_agree(self, name, make, with_profile):
+        rng = np.random.default_rng(hash(name) % (2 ** 31))
+        maps = MapRegistry()
+        nregions = 0
+        if with_profile:
+            m = ArrayMap(64)
+            striped_profile(blocks=256, nreg=8).load_into(m)
+            maps.register(m)
+            nregions = 8
+        prog = make()
+        mat = _random_ctx_batch(rng, 24, nregions=nregions)
+        vm = PolicyVM(prog, maps)
+        host = [vm.run(row).ret for row in mat]
+        jit = JitPolicy(prog, maps).run_batch(mat)
+        pred = PredicatedPolicy(prog, maps).run_batch(mat)
+        assert host == list(jit), f"{name}: interpreter != JIT"
+        assert host == list(pred), f"{name}: interpreter != predicated"
+
+
+def _state(mm):
+    tables = {pid: sorted((m.logical_start, m.phys_start, m.order, m.tier)
+                          for m in st.page_table.values())
+              for pid, st in mm.procs.items()}
+    mapped = {pid: sorted(st.mapped) for pid, st in mm.procs.items()}
+    return tables, mapped, mm.stats.snapshot(), mm.drain_moves(), \
+        sorted(mm.buddy.allocated.items())
+
+
+class TestFaultBatchEquivalence:
+    """fault_batch == sequential ensure_mapped end state (ample pool, so
+    policy decisions can't depend on mid-batch allocator drift)."""
+
+    def _pair(self, **kw):
+        return mk_mm(**kw), mk_mm(**kw)
+
+    @pytest.mark.parametrize("default", ["thp", "never"])
+    def test_decode_crossings_default_paths(self, default):
+        a, b = self._pair(default=default)
+        for mm in (a, b):
+            for pid in range(1, 5):
+                mm.create_process(pid, vma_blocks=64)
+                mm.ensure_range(pid, 0, 8)
+        reqs = [(pid, 8, FaultKind.FIRST_TOUCH) for pid in range(1, 5)]
+        a.fault_batch(reqs)
+        for pid, addr, kind in reqs:
+            b.ensure_mapped(pid, addr, kind)
+        assert _state(a) == _state(b)
+
+    def test_prefill_range_with_program(self):
+        kw = dict(profile=striped_profile(),
+                  program=ebpf_mm_program(max_regions=8))
+        a, b = self._pair(**kw)
+        for mm in (a, b):
+            mm.create_process(1, app="app", vma_blocks=256)
+        ra = a.fault_range(1, 0, 96)
+        rb = b.ensure_range(1, 0, 96)
+        assert [(r.order, r.phys_start, r.hinted) for r in ra] == \
+            [(r.order, r.phys_start, r.hinted) for r in rb]
+        assert _state(a) == _state(b)
+
+    def test_mixed_pids_with_program(self):
+        kw = dict(profile=striped_profile(),
+                  program=ebpf_mm_program(max_regions=8))
+        a, b = self._pair(**kw)
+        rng = np.random.default_rng(3)
+        for mm in (a, b):
+            for pid in (1, 2, 3):
+                mm.create_process(pid, app="app", vma_blocks=256)
+                mm.ensure_range(pid, 0, 16)
+                mm.record_access(pid, rng.random(64))
+        rng = np.random.default_rng(4)
+        reqs = [(int(p), int(ad), FaultKind.FIRST_TOUCH)
+                for p, ad in zip(rng.integers(1, 4, 20),
+                                 rng.integers(0, 256, 20))]
+        a.fault_batch(reqs)
+        for pid, addr, kind in reqs:
+            b.ensure_mapped(pid, addr, kind)
+        assert _state(a) == _state(b)
+
+    def test_already_mapped_returns_none_without_invocation(self):
+        mm = mk_mm(profile=striped_profile(),
+                   program=ebpf_mm_program(max_regions=8))
+        mm.create_process(1, app="app", vma_blocks=64)
+        mm.fault_range(1, 0, 16)
+        calls0 = mm.hooks.calls[HOOK_FAULT]
+        res = mm.fault_batch([(1, 3, FaultKind.FIRST_TOUCH)])
+        assert res == [None]
+        assert mm.hooks.calls[HOOK_FAULT] == calls0   # nothing pending
+
+
+class TestBlockTableConsistency:
+    def test_randomized_ops_keep_table_in_sync(self):
+        rng = np.random.default_rng(7)
+        mm = mk_mm(num_blocks=64, default="never", tiered=True, host=64)
+        mm.create_process(1, vma_blocks=64)
+        mm.create_process(2, vma_blocks=32)
+        for _ in range(300):
+            pid = int(rng.integers(1, 3))
+            st = mm.procs[pid]
+            op = rng.random()
+            try:
+                if op < 0.45:
+                    mm.ensure_mapped(pid, int(rng.integers(0, st.vma_end)))
+                elif op < 0.6 and st.page_table:
+                    lg = list(st.page_table)[
+                        int(rng.integers(0, len(st.page_table)))]
+                    mm.unmap(pid, lg)
+                elif op < 0.75 and st.page_table:
+                    lg = list(st.page_table)[
+                        int(rng.integers(0, len(st.page_table)))]
+                    mm.demote_page(pid, lg)
+                elif op < 0.9 and st.page_table:
+                    lg = list(st.page_table)[
+                        int(rng.integers(0, len(st.page_table)))]
+                    mm.promote_page(pid, lg)
+                else:
+                    mm.collapse(pid, int(rng.integers(0, st.vma_end)), 1)
+            except Exception:
+                pass   # OOM etc — state must still be consistent
+            for p in (1, 2):
+                np.testing.assert_array_equal(
+                    mm.block_table(p, 64), reference_block_table(mm, p, 64))
+        # metadata arrays agree with the oracle too
+        for p in (1, 2):
+            starts, sizes, orders, tiers, dev = \
+                mm._mapping_arrays(mm.procs[p])
+            ms = mm.procs[p].mappings_sorted()
+            assert list(starts) == [m.logical_start for m in ms]
+            assert list(orders) == [m.order for m in ms]
+            assert list(tiers) == [m.tier for m in ms]
+            assert list(dev) == [mm._device_index(m) for m in ms]
+
+    def test_compaction_keeps_table_in_sync(self):
+        mm = mk_mm(num_blocks=64, default="never")
+        mm.create_process(1, vma_blocks=64)
+        mm.ensure_range(1, 0, 48)
+        for lg in list(mm.procs[1].page_table)[::2]:
+            mm.unmap(1, lg)
+        mm._install(mm.procs[1], 60, 2, hinted=False)   # forces compaction
+        np.testing.assert_array_equal(
+            mm.block_table(1, 64), reference_block_table(mm, 1, 64))
+
+
+class TestEngineInvocationAccounting:
+    """The acceptance property: with a fault program attached, a full decode
+    step issues exactly ONE HOOK_FAULT batch invocation — and the scalar
+    run() entry point never fires from the engine."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        import jax
+        from repro.configs.base import get_smoke_config
+        from repro.models import PagedLayout, materialize, model_spec
+        cfg = get_smoke_config("deepseek_7b")
+        params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
+        layout = PagedLayout(num_blocks=256, block_tokens=4, max_blocks=32)
+        return cfg, params, layout
+
+    def _engine(self, setup, **kw):
+        from repro.serving import Request, ServingEngine
+        cfg, params, layout = setup
+        # never-prog: base pages only, so every block boundary crossing is a
+        # fault — with 4 slots in lockstep, decode steps carry multiple
+        # faults for one invocation to amortize
+        eng = ServingEngine(cfg, params, layout, max_batch=4,
+                            policy="never-prog", **kw)
+        rng = np.random.default_rng(0)
+        for r in range(4):
+            eng.submit(Request(rid=r,
+                               prompt=rng.integers(1, cfg.vocab, 18).tolist(),
+                               max_new_tokens=12))
+        return eng
+
+    def test_one_batch_invocation_per_decode_step(self, setup):
+        eng = self._engine(setup)
+        hooks = eng.mm.hooks
+        total_faults = 0
+        steps_with_fault = 0
+        for _ in range(40):
+            calls0 = hooks.calls[HOOK_FAULT]
+            batch0 = hooks.batch_calls[HOOK_FAULT]
+            faults0 = eng.mm.stats.faults
+            if not eng.active:
+                if not eng.step():       # admission steps may batch prefill
+                    break
+                continue
+            eng._decode_once()
+            dcalls = hooks.batch_calls[HOOK_FAULT] - batch0
+            dfaults = eng.mm.stats.faults - faults0
+            assert dcalls <= 1, "a decode step must batch all its faults"
+            if dfaults > 0:
+                assert dcalls == 1
+                steps_with_fault += 1
+            total_faults += dfaults
+            # every invocation was a batch one — no scalar run() on faults
+            assert hooks.calls[HOOK_FAULT] - calls0 == dcalls
+        assert steps_with_fault > 0 and total_faults > steps_with_fault, \
+            "workload must exercise multi-fault steps"
+
+    def test_scalar_mode_never_batches(self, setup):
+        eng = self._engine(setup, batch_faults=False)
+        eng.run(max_steps=30)
+        hooks = eng.mm.hooks
+        assert hooks.batch_calls[HOOK_FAULT] == 0
+        assert hooks.calls[HOOK_FAULT] == hooks.invocations[HOOK_FAULT] > 0
+
+    def test_batched_and_scalar_engines_agree(self, setup):
+        from repro.core import Profile, ProfileRegion
+        from repro.serving import Request, ServingEngine
+        cfg, params, layout = setup
+        prof = Profile("chat", [
+            ProfileRegion(0, 8, (0, 150_000, 600_000, 2_500_000)),
+            ProfileRegion(8, 32, (0, 0, 0, 0))])
+        outs = {}
+        for batched in (True, False):
+            eng = ServingEngine(cfg, params, layout, max_batch=2,
+                                policy="ebpf", profile=prof,
+                                batch_faults=batched)
+            rng = np.random.default_rng(0)
+            for r in range(3):
+                eng.submit(Request(
+                    rid=r, prompt=rng.integers(1, cfg.vocab, 22).tolist(),
+                    max_new_tokens=10, app="chat"))
+            eng.run(max_steps=200)
+            outs[batched] = (dict(eng.finished),
+                             eng.mm.stats.snapshot()["pages_per_order"])
+        assert outs[True] == outs[False]
+
+
+class TestTierCtxCache:
+    def _mk(self):
+        mm = mk_mm(num_blocks=64, default="never", tiered=True, host=64)
+        mm.attach_tier_program(tier_damon_program())
+        mm.create_process(1, vma_blocks=32)
+        mm.ensure_range(1, 0, 32)
+        for lg in list(mm.procs[1].page_table)[:12]:
+            mm.demote_page(1, lg)
+        mm.tick()
+        return mm
+
+    def test_batch_rows_match_scalar_tier_ctx(self):
+        mm = self._mk()
+        mm.record_access(1, np.arange(32, dtype=float))
+        cands = [(mm.procs[1], m) for m in mm.procs[1].mappings_sorted()]
+        mat = mm._tier_ctx_batch(cands)
+        for row, (st, m) in zip(mat, cands):
+            np.testing.assert_array_equal(row, mm._tier_ctx(st, m))
+
+    def test_scan_ctx_reused_until_heat_changes(self):
+        mm = self._mk()
+        mm.promotion_scan(0)      # budget 0: decisions run, nothing moves
+        misses0 = mm.ctx_cache_misses
+        assert misses0 >= 1
+        mm.tick()
+        mm.promotion_scan(0)      # same candidates, same DAMON -> cache hit
+        assert mm.ctx_cache_hits >= 1
+        assert mm.ctx_cache_misses == misses0
+        mm.record_access(1, np.ones(32))   # DAMON changed -> rebuild
+        mm.promotion_scan(0)
+        assert mm.ctx_cache_misses > misses0
+
+    def test_cached_scan_decisions_match_fresh(self):
+        mm = self._mk()
+        mm.promotion_scan(0)
+        mm.tick()
+        cands = [(mm.procs[1], m) for m in mm.procs[1].mappings_sorted()
+                 if m.tier == TIER_HOST]
+        cached = mm.tier_decisions(cands, scan="promote")
+        fresh = mm.tier_decisions(cands)          # no cache slot
+        assert cached == fresh

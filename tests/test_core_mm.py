@@ -189,9 +189,7 @@ class TestMemoryManager:
         # free every other mapping to fragment
         st = mm.procs[1]
         for lstart in list(st.page_table)[::2]:
-            m = st.page_table.pop(lstart)
-            st.mapped -= set(range(m.logical_start, m.logical_start + 1))
-            mm.buddy.free(m.phys_start)
+            mm.unmap(1, lstart)
         before = {m.phys_start for m in st.page_table.values()}
         r = mm._install(st, 60, 2, hinted=False)   # needs compaction
         assert r.order == 2

@@ -159,9 +159,7 @@ class TestBlockCopyKernel:
         mm.ensure_range(1, 0, 48)
         st = mm.procs[1]
         for lstart in list(st.page_table)[::2]:
-            m = st.page_table.pop(lstart)
-            st.mapped.discard(m.logical_start)
-            mm.buddy.free(m.phys_start)
+            mm.unmap(1, lstart)
         pool = jnp.asarray(RNG.normal(size=(64, 4, 8)).astype(np.float32))
         expect = {m.phys_start: np.asarray(pool[m.phys_start])
                   for m in st.page_table.values()}

@@ -215,6 +215,10 @@ class TestEngineTiering:
         return cfg, params, layout
 
     def _run(self, setup, n_req=6, max_steps=280, **kw):
+        # Active sequences must OUTGROW the 48-block HBM pool (admission no
+        # longer preempts actives — the waiting-queue watermark — so the
+        # pressure has to come from decode growth): 3 admitted seqs at
+        # 14 prompt blocks grow toward 24 blocks each, 72 > 48.
         cfg, params, layout = setup
         eng = ServingEngine(cfg, params, layout, max_batch=6, policy="never",
                             **kw)
@@ -222,7 +226,7 @@ class TestEngineTiering:
         for r in range(n_req):
             eng.submit(Request(rid=r,
                                prompt=rng.integers(1, cfg.vocab, 56).tolist(),
-                               max_new_tokens=8, app="chat"))
+                               max_new_tokens=40, app="chat"))
         steps = 0
         while eng.step():
             steps += 1
