@@ -4,11 +4,19 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench bench-json
+.PHONY: test test-diff bench-smoke bench bench-json
 
-# tier-1 verify: the gate every PR must keep green
+# tier-1 verify: the gate every PR must keep green (collects the
+# differential suite too — test-diff is the focused entry point)
 test:
 	$(PY) -m pytest -x -q
+
+# differential/property harness: seeded random workloads replayed through
+# scalar-vs-batched fault paths and untiered/2-tier/4-tier managers.  The
+# generating seed is part of each test id (shown on failure); add seeds
+# with DIFF_SEEDS=7,8 make test-diff
+test-diff:
+	$(PY) -m pytest -q -m differential tests/test_differential.py
 
 # tier-1 tests + the tiered-memory capacity sweep in smoke mode
 bench-smoke: test

@@ -1,17 +1,21 @@
 """Capacity sweep: concurrently-resident sequences vs modeled HBM size,
-eBPF-guided tiering vs the preempt-only baseline.
+eBPF-guided tiering vs the preempt-only baseline — over 2-, 3- and 4-tier
+topologies at EQUAL total spill capacity.
 
 The production question the tiered-memory subsystem answers: how many
 sequences can stay RESIDENT (KV materialized in some memory tier, no
 recompute-from-scratch on readmission) on a given HBM budget?  The
 preempt-only baseline caps residency at what HBM holds and thrashes beyond
-it; demote-before-preempt spills cold blocks to the host-DRAM tier over PCIe
-and keeps every admitted sequence resident.
+it; demote-before-preempt spills cold blocks down the tier chain and keeps
+every admitted sequence resident.  The 3-/4-tier rows split the SAME total
+spill capacity across peer-HBM (ICI) / host DRAM (PCIe) / NVMe pools driven
+by the N-tier placement programs (heat-banded placement, per-edge admission
+control), so deeper topologies are judged at equal budget.
 
 Per (hbm_blocks, policy) cell we report: peak concurrently-resident
-sequences, preemptions, completions, demotion/promotion traffic, host-tier
-reads, and the modeled device time — so the PCIe tax the tier pays is
-visible next to the preemptions it avoids.
+sequences, preemptions, completions, demotion/promotion traffic, spill-tier
+reads, and the modeled device time — so the link tax the tiers pay is
+visible next to the preemptions they avoid.
 
 Run:  PYTHONPATH=src python -m benchmarks.capacity_sweep [--smoke]
 """
@@ -34,10 +38,19 @@ NEW_TOKENS = 10
 HOST_BLOCKS = 256          # host-DRAM tier capacity (blocks)
 MAX_STEPS = 320
 
+# Every tiered row gets the SAME total spill capacity (HOST_BLOCKS), split
+# across deeper chains for the 3-/4-tier topologies: (peer-HBM,) host DRAM
+# (, NVMe).
 POLICIES = [
     ("preempt-only", dict()),
     ("ebpf-tier", dict(host_blocks=HOST_BLOCKS, tier_policy="ebpf-tier")),
     ("lru-tier", dict(host_blocks=HOST_BLOCKS, tier_policy="lru-tier")),
+    ("heat-tier3", dict(tier_blocks=(64, HOST_BLOCKS - 64),
+                        tier_policy="heat-tier")),
+    ("heat-tier4", dict(tier_blocks=(32, HOST_BLOCKS - 96, 64),
+                        tier_policy="heat-tier")),
+    ("edge-tier4", dict(tier_blocks=(32, HOST_BLOCKS - 96, 64),
+                        tier_policy="edge-tier")),
 ]
 
 _STATE: dict = {}
@@ -94,6 +107,14 @@ def main(smoke: bool = False) -> list[str]:
         assert tier["peak_resident"] > base["peak_resident"], (
             f"hbm={hbm}: ebpf-tier must sustain strictly more resident "
             f"sequences ({tier['peak_resident']} vs {base['peak_resident']})")
+        # acceptance: a 4-tier chain with an eBPF placement program keeps at
+        # least as many sequences resident as the 2-tier baseline at equal
+        # total spill capacity
+        four = cells["heat-tier4"]
+        assert four["peak_resident"] >= tier["peak_resident"], (
+            f"hbm={hbm}: 4-tier heat placement must match the 2-tier "
+            f"baseline's residency at equal capacity "
+            f"({four['peak_resident']} vs {tier['peak_resident']})")
         for label, r in cells.items():
             lines.append(
                 f"capacity_hbm{hbm}_{label},{r['modeled_device_us']:.1f},"

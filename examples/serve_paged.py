@@ -7,7 +7,10 @@ back when they re-heat.  Without a host tier, preemption under pressure.
 
 Run:  PYTHONPATH=src python examples/serve_paged.py [--arch gemma3_27b]
       PYTHONPATH=src python examples/serve_paged.py \
-          --hbm-blocks 48 --host-blocks 256 --tier ebpf-tier   # tiered
+          --hbm-blocks 48 --host-blocks 256 --tier ebpf-tier   # 2-tier
+      PYTHONPATH=src python examples/serve_paged.py \
+          --hbm-blocks 48 --tier-blocks 32,160,64 \
+          --tier heat-tier                     # 4-tier: +peer-HBM, +NVMe
 """
 
 import argparse
@@ -30,16 +33,23 @@ ap.add_argument("--hbm-blocks", type=int, default=512,
                 help="modeled HBM pool size in blocks")
 ap.add_argument("--host-blocks", type=int, default=0,
                 help="host-DRAM tier size in blocks (0 = no tiering)")
+ap.add_argument("--tier-blocks", default="",
+                help="comma-separated spill-tier capacities for an N-pool "
+                     "chain, e.g. '64,192,256' = peer-HBM, host DRAM, NVMe "
+                     "(overrides --host-blocks)")
 ap.add_argument("--tier", default="ebpf-tier",
-                choices=["ebpf-tier", "lru-tier", "never-tier", "default"],
-                help="mm_tier hook policy (used when --host-blocks > 0)")
+                choices=["ebpf-tier", "lru-tier", "never-tier", "heat-tier",
+                         "edge-tier", "default"],
+                help="mm_tier hook policy (used when a tier chain is set)")
 ap.add_argument("--scalar-faults", action="store_true",
                 help="pre-batching fault path: one policy invocation per "
                      "fault instead of one per engine step")
 args = ap.parse_args()
 
 cfg = get_smoke_config(args.arch)
-tier_note = (f", {args.tier} over {args.host_blocks} host blocks"
+tier_blocks = tuple(int(b) for b in args.tier_blocks.split(",") if b) or None
+tier_note = (f", {args.tier} over tiers {tier_blocks}" if tier_blocks
+             else f", {args.tier} over {args.host_blocks} host blocks"
              if args.host_blocks else "")
 print(f"serving {cfg.name} ({args.policy} policy{tier_note})")
 params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
@@ -53,7 +63,7 @@ profile = Profile("chat", [
 
 engine = ServingEngine(cfg, params, layout, max_batch=4, policy=args.policy,
                        profile=profile, host_blocks=args.host_blocks,
-                       tier_policy=args.tier,
+                       tier_blocks=tier_blocks, tier_policy=args.tier,
                        batch_faults=not args.scalar_faults)
 rng = np.random.default_rng(0)
 for r in range(args.requests):

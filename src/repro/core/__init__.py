@@ -13,14 +13,17 @@ The paper's contribution as a composable library:
     manager with the fault hook (the kernel side).
   * :mod:`programs` — Figure-1 policy + THP/never baselines as bytecode.
   * :mod:`khugepaged` — background promotion (async collapse).
-  * :mod:`tiering` — HBM <-> host-DRAM tiered placement behind ``HOOK_TIER``
-    (second buddy pool, PCIe-costed migration engine, demote/promote scans).
+  * :mod:`tiering` — N-pool tiered placement behind ``HOOK_TIER`` (per-tier
+    buddy pools for peer-HBM / host DRAM / NVMe, per-edge-costed multi-hop
+    migration engine, demote/promote scans, prefill-time placement).
 """
 
 from .buddy import BuddyAllocator, BuddyError, BuddyStats, order_blocks
-from .context import (CTX, CTX_LEN, FIXED_POINT, NUM_ORDERS, POLICY_FALLBACK,
-                      TIER_DEMOTE, TIER_KEEP, FaultContext, FaultKind)
-from .cost import CostModel, HWSpec, make_cost_model
+from .context import (CTX, CTX_LEN, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
+                      POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP, FaultContext,
+                      FaultKind)
+from .cost import (CostModel, HWSpec, TierSpec, default_tier_chain,
+                   host_dram_tier, make_cost_model, nvme_tier, peer_hbm_tier)
 from .damon import Damon, Region
 from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
 from .isa import Asm, Insn, Op, Program
@@ -34,6 +37,7 @@ from .profiles import (MAX_PROFILE_REGIONS, REGION_STRIDE, Profile,
                        ProfileRegion, profile_from_heat)
 from .programs import (ebpf_mm_program, never_program, reclaim_lru_program,
                        thp_always_program, tier_damon_program,
+                       tier_edge_admission_program, tier_heat_band_program,
                        tier_lru_program, tier_never_program)
 from .tiering import (TIER_HBM, TIER_HOST, TierConfig, TieredMemoryManager)
 from .verifier import VerifierError, verify

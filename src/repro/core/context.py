@@ -19,6 +19,7 @@ import numpy as np
 
 NUM_ORDERS = 4          # page-size classes: 4^order base blocks
 FIXED_POINT = 1000      # scale for fractional ctx fields
+MAX_TIERS = 4           # tier ids 0..3: local HBM, and up to 3 spill tiers
 
 
 class CTX(enum.IntEnum):
@@ -62,13 +63,38 @@ class CTX(enum.IntEnum):
     TIER_PRESSURE = 30       # FIXED_POINT-scaled host-tier utilization
     PCIE_NS_PER_BLOCK = 31   # modeled ns to move one base block across PCIe
     # Candidate page under a tier decision (mm_tier hook only)
-    PAGE_TIER = 32           # current tier of the candidate page (0=HBM, 1=host)
+    PAGE_TIER = 32           # current tier of the candidate page (0=HBM, 1..=spill)
     PAGE_ORDER = 33          # order of the candidate page
     PAGE_AGE = 34            # engine ticks since the page last changed tiers
     PAGE_HEAT = 35           # DAMON heat of the page's own span, FIXED_POINT-scaled
-    MIGRATE_SETUP_NS = 36    # fixed per-migration DMA setup cost
-    MIGRATE_NS_PER_BLOCK = 37  # PCIe + HBM-side cost per migrated base block
-    CTX_LEN = 38             # number of fields; keep last
+    MIGRATE_SETUP_NS = 36    # fixed setup cost of the tier-0<->1 edge (legacy)
+    MIGRATE_NS_PER_BLOCK = 37  # per-block cost of the tier-0<->1 edge (legacy)
+    # N-pool tier graph (HBM / peer-HBM over ICI / host DRAM / NVMe); the
+    # tier id in PAGE_TIER is 0..NTIERS-1, ordered fastest to slowest.
+    NTIERS = 38              # live tier count of the topology (0 = untiered ctx)
+    # Per-tier pool state (free / total base blocks; unused tiers stay 0)
+    TIER_FREE_T0 = 39
+    TIER_FREE_T1 = 40
+    TIER_FREE_T2 = 41
+    TIER_FREE_T3 = 42
+    TIER_TOTAL_T0 = 43
+    TIER_TOTAL_T1 = 44
+    TIER_TOTAL_T2 = 45
+    TIER_TOTAL_T3 = 46
+    # Cumulative per-edge migration cost tables: entry t is the summed cost of
+    # crossing every edge between tier 0 and tier t, so the cost of a
+    # (src, dst) path is table[max]-table[min] — the form the
+    # bpf_mm_migrate_cost helper evaluates identically on the interpreter,
+    # JIT and predicated backends.
+    MIG_CUM_SETUP_T0 = 47
+    MIG_CUM_SETUP_T1 = 48
+    MIG_CUM_SETUP_T2 = 49
+    MIG_CUM_SETUP_T3 = 50
+    MIG_CUM_NS_T0 = 51
+    MIG_CUM_NS_T1 = 52
+    MIG_CUM_NS_T2 = 53
+    MIG_CUM_NS_T3 = 54
+    CTX_LEN = 55             # number of fields; keep last
 
 
 CTX_LEN = int(CTX.CTX_LEN)
@@ -112,6 +138,11 @@ class FaultContext:
     page_heat: int = 0
     migrate_setup_ns: int = 0
     migrate_ns_per_block: int = 0
+    ntiers: int = 0
+    tier_free: tuple[int, int, int, int] = (0, 0, 0, 0)
+    tier_total: tuple[int, int, int, int] = (0, 0, 0, 0)
+    mig_cum_setup: tuple[int, int, int, int] = (0, 0, 0, 0)
+    mig_cum_ns: tuple[int, int, int, int] = (0, 0, 0, 0)
 
     def vector(self) -> np.ndarray:
         v = np.zeros(CTX_LEN, dtype=np.int64)
@@ -144,6 +175,12 @@ class FaultContext:
         v[CTX.PAGE_HEAT] = self.page_heat
         v[CTX.MIGRATE_SETUP_NS] = self.migrate_setup_ns
         v[CTX.MIGRATE_NS_PER_BLOCK] = self.migrate_ns_per_block
+        v[CTX.NTIERS] = self.ntiers
+        v[CTX.TIER_FREE_T0:CTX.TIER_FREE_T0 + MAX_TIERS] = self.tier_free
+        v[CTX.TIER_TOTAL_T0:CTX.TIER_TOTAL_T0 + MAX_TIERS] = self.tier_total
+        v[CTX.MIG_CUM_SETUP_T0:CTX.MIG_CUM_SETUP_T0 + MAX_TIERS] = \
+            self.mig_cum_setup
+        v[CTX.MIG_CUM_NS_T0:CTX.MIG_CUM_NS_T0 + MAX_TIERS] = self.mig_cum_ns
         return v
 
 
@@ -168,7 +205,11 @@ def fill_system_columns(mat: np.ndarray, *,
                         tier_free_blocks: int = 0, tier_total_blocks: int = 0,
                         tier_pressure: int = 0, pcie_ns_per_block: int = 0,
                         migrate_setup_ns: int = 0,
-                        migrate_ns_per_block: int = 0) -> np.ndarray:
+                        migrate_ns_per_block: int = 0,
+                        ntiers: int = 0, tier_free=(0, 0, 0, 0),
+                        tier_total=(0, 0, 0, 0),
+                        mig_cum_setup=(0, 0, 0, 0),
+                        mig_cum_ns=(0, 0, 0, 0)) -> np.ndarray:
     """Broadcast one system-state snapshot into every row of ``mat``.
 
     ``free_blocks``/``frag`` may be shorter than ``NUM_ORDERS`` when the
@@ -190,15 +231,27 @@ def fill_system_columns(mat: np.ndarray, *,
     mat[:, CTX.PCIE_NS_PER_BLOCK] = pcie_ns_per_block
     mat[:, CTX.MIGRATE_SETUP_NS] = migrate_setup_ns
     mat[:, CTX.MIGRATE_NS_PER_BLOCK] = migrate_ns_per_block
+    mat[:, CTX.NTIERS] = ntiers
+    mat[:, CTX.TIER_FREE_T0:CTX.TIER_FREE_T0 + MAX_TIERS] = \
+        np.asarray(tier_free, dtype=np.int64)
+    mat[:, CTX.TIER_TOTAL_T0:CTX.TIER_TOTAL_T0 + MAX_TIERS] = \
+        np.asarray(tier_total, dtype=np.int64)
+    mat[:, CTX.MIG_CUM_SETUP_T0:CTX.MIG_CUM_SETUP_T0 + MAX_TIERS] = \
+        np.asarray(mig_cum_setup, dtype=np.int64)
+    mat[:, CTX.MIG_CUM_NS_T0:CTX.MIG_CUM_NS_T0 + MAX_TIERS] = \
+        np.asarray(mig_cum_ns, dtype=np.int64)
     return mat
 
 
 # Return-value convention for fault-hook programs.
 POLICY_FALLBACK = -1     # defer to the kernel default policy
 
-# Return-value convention for tier-hook (mm_tier) programs: where should the
-# candidate page live?  KEEP = HBM (promote if currently in the host tier),
-# DEMOTE = host DRAM (demote if currently in HBM).  FALLBACK defers to the
-# kernel-default tiering policy.
+# Return-value convention for tier-hook (mm_tier) programs: the return value
+# is the TARGET TIER id the candidate page should live in (0 = local HBM,
+# 1..NTIERS-1 = spill tiers ordered fastest to slowest; the manager clamps to
+# the live topology and migrates hop by hop).  FALLBACK defers to the
+# kernel-default tiering policy.  TIER_KEEP / TIER_DEMOTE are the two-pool
+# names for targets 0 and 1 — in a 2-tier topology they mean exactly what
+# they did before the N-pool generalization (live in HBM / live in host).
 TIER_KEEP = 0
 TIER_DEMOTE = 1

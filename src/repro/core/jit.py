@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .context import CTX
+from .context import CTX, MAX_TIERS
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Insn, Op, Program)
 from .maps import MapRegistry
@@ -185,8 +185,15 @@ def compile_program(program: Program, maps: MapRegistry):
                 elif insn.imm == HELPER_MIGRATE_COST:
                     order = jnp.clip(regs[1], 0, 3)
                     nblocks = jnp.asarray(4, I64) ** order
-                    r0 = (ctx[CTX.MIGRATE_SETUP_NS]
-                          + ctx[CTX.MIGRATE_NS_PER_BLOCK] * nblocks)
+                    src = jnp.clip(regs[2], 0, MAX_TIERS - 1)
+                    dst = jnp.clip(regs[3], 0, MAX_TIERS - 1)
+                    lo = jnp.minimum(src, dst)
+                    hi = jnp.maximum(src, dst)
+                    setup = (_dyn(ctx, CTX.MIG_CUM_SETUP_T0, hi)
+                             - _dyn(ctx, CTX.MIG_CUM_SETUP_T0, lo))
+                    per = (_dyn(ctx, CTX.MIG_CUM_NS_T0, hi)
+                           - _dyn(ctx, CTX.MIG_CUM_NS_T0, lo))
+                    r0 = setup + per * nblocks
                 elif insn.imm == HELPER_TRACE:
                     r0 = jnp.asarray(0, I64)  # trace is a host-only facility
                 else:  # pragma: no cover - verifier rejects unknown helpers

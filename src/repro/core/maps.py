@@ -58,7 +58,13 @@ class ArrayMap:
 
 
 class MapRegistry:
-    """Numbered map table a program is verified and executed against."""
+    """Numbered map table a program is verified and executed against.
+
+    Map ids are stable for the registry's lifetime — programs are verified
+    against them — so userspace RELOADS data into an existing map (found by
+    name) rather than registering a fresh one; see
+    :meth:`~repro.core.mm.MemoryManager.load_profile`.
+    """
 
     def __init__(self) -> None:
         self._maps: list[ArrayMap] = []
@@ -66,6 +72,13 @@ class MapRegistry:
     def register(self, m: ArrayMap) -> int:
         self._maps.append(m)
         return len(self._maps) - 1
+
+    def find(self, name: str) -> int | None:
+        """Map id of the map registered under ``name`` (None if absent)."""
+        for i, m in enumerate(self._maps):
+            if m.name == name:
+                return i
+        return None
 
     def __len__(self) -> int:
         return len(self._maps)

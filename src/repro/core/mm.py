@@ -20,8 +20,8 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .buddy import RADIX, BuddyAllocator, BuddyError, order_blocks
-from .context import (CTX, CTX_LEN, NUM_ORDERS, POLICY_FALLBACK, FaultContext,
-                      FaultKind, ctx_batch, fill_system_columns)
+from .context import (CTX, CTX_LEN, MAX_TIERS, NUM_ORDERS, POLICY_FALLBACK,
+                      FaultContext, FaultKind, ctx_batch, fill_system_columns)
 from .cost import CostModel
 from .damon import Damon
 from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
@@ -44,7 +44,9 @@ class PageMapping:
     logical_start: int
     phys_start: int               # block index within the owning tier's pool
     order: int
-    tier: int = 0                 # 0 = HBM, 1 = host DRAM (see core.tiering)
+    # Tier id in the N-pool chain, 0..MAX_TIERS-1 ordered fastest to slowest
+    # (0 = local HBM; 1.. = peer-HBM / host DRAM / NVMe — see core.tiering).
+    tier: int = 0
 
 
 @dataclass
@@ -149,11 +151,18 @@ class MemoryManager:
 
     # ------------------------------------------------------------- userspace
     def load_profile(self, profile: Profile) -> int:
-        """Userspace loads an application profile into an eBPF map."""
+        """Userspace loads an application profile into an eBPF map.
+
+        Reloading the same app's profile reuses its existing map slot (found
+        by name) — a reload is a map WRITE, not a new map, so attached
+        programs keep their verified map ids and the executors only refresh
+        cached map arguments."""
         cap = MAX_PROFILE_REGIONS * (2 + NUM_ORDERS)
-        m = ArrayMap(cap, name=f"profile:{profile.app}")
-        profile.load_into(m)
-        map_id = self.maps.register(m)
+        name = f"profile:{profile.app}"
+        map_id = self.maps.find(name)
+        if map_id is None:
+            map_id = self.maps.register(ArrayMap(cap, name=name))
+        profile.load_into(self.maps[map_id])
         self.profiles[profile.app] = (profile, map_id)
         return map_id
 
@@ -577,8 +586,14 @@ class MemoryManager:
         a = (addr // size) * size
         if a + size > st.vma_end:
             return None
+        # every mapping OVERLAPPING the window: a page of order >= to_order
+        # whose start lies outside [a, a+size) still contains the window
+        # (alignment), and collapsing "through" it would double-map the span
+        # and zero-fill live KV — the differential harness caught exactly
+        # that with a window inside an existing larger page.
         old = [m for m in st.page_table.values()
-               if m.logical_start >= a and m.logical_start < a + size]
+               if m.logical_start < a + size
+               and m.logical_start + order_blocks(m.order) > a]
         if any(m.order >= to_order for m in old):
             return None   # already backed at >= target order
         if any(m.tier != 0 for m in old):
@@ -640,16 +655,16 @@ class MemoryManager:
         self.stats.evictions += 1
 
     # -------------------------------------------------------------- access
-    def _access_ns_tables(self) -> tuple[np.ndarray, np.ndarray]:
-        """Per-order access cost (HBM and host tier), cached — the constants
-        behind the vectorized access accounting."""
+    def _access_ns_tables(self) -> np.ndarray:
+        """Per-(tier, order) access cost matrix, cached — the constants
+        behind the vectorized access accounting.  Row 0 is HBM; rows 1..
+        charge each spill tier's link bandwidth."""
         if self._access_tab is None:
             ks = range(self.max_order + 1)
-            self._access_tab = (
-                np.fromiter((int(self.cost.access_ns(k)) for k in ks),
-                            np.int64, self.max_order + 1),
-                np.fromiter((int(self.cost.tier_access_ns(k)) for k in ks),
-                            np.int64, self.max_order + 1))
+            self._access_tab = np.stack([
+                np.fromiter((int(self.cost.tier_access_ns(k, t)) for k in ks),
+                            np.int64, self.max_order + 1)
+                for t in range(MAX_TIERS)])
         return self._access_tab
 
     def record_access(self, pid: int, heat_per_block: np.ndarray) -> None:
@@ -672,12 +687,10 @@ class MemoryManager:
         hi = np.minimum(starts + sizes, heat.size)
         read = (hi > lo) & ((csum[hi] - csum[lo]) > 0)
         self.stats.descriptors_touched += int(read.sum())
-        acc_hbm, acc_host = self._access_ns_tables()
-        hbm = read & (tiers == 0)
-        host = read & (tiers != 0)
-        self.stats.tier_reads += int(host.sum())
-        self.stats.access_ns += int(acc_hbm[orders[hbm]].sum()
-                                    + acc_host[orders[host]].sum())
+        acc = self._access_ns_tables()
+        rt = np.minimum(tiers[read], MAX_TIERS - 1)
+        self.stats.tier_reads += int((rt != 0).sum())
+        self.stats.access_ns += int(acc[rt, orders[read]].sum())
 
     def descriptors_for(self, pid: int) -> int:
         return len(self.procs[pid].page_table)

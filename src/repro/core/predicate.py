@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .context import CTX
+from .context import CTX, MAX_TIERS
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Insn, Op, Program)
 from .jit import _alu_jnp, _cmp_jnp
@@ -219,8 +219,20 @@ def compile_predicated(program: Program, maps: MapRegistry,
                 elif insn.imm == HELPER_MIGRATE_COST:
                     order = jnp.clip(regs[1], 0, 3)
                     nblocks = jnp.asarray(4, I64) ** order
-                    r0 = (ctx[:, CTX.MIGRATE_SETUP_NS]
-                          + ctx[:, CTX.MIGRATE_NS_PER_BLOCK] * nblocks)
+                    src = jnp.clip(regs[2], 0, MAX_TIERS - 1)
+                    dst = jnp.clip(regs[3], 0, MAX_TIERS - 1)
+                    lo = jnp.minimum(src, dst).astype(jnp.int32)
+                    hi = jnp.maximum(src, dst).astype(jnp.int32)
+
+                    def gather(base, idx):
+                        cols = jnp.int32(base) + idx
+                        return jnp.take_along_axis(
+                            ctx, cols[:, None], axis=1)[:, 0]
+                    setup = (gather(CTX.MIG_CUM_SETUP_T0, hi)
+                             - gather(CTX.MIG_CUM_SETUP_T0, lo))
+                    per = (gather(CTX.MIG_CUM_NS_T0, hi)
+                           - gather(CTX.MIG_CUM_NS_T0, lo))
+                    r0 = setup + per * nblocks
                 else:   # HELPER_TRACE and friends: host-only, no-op
                     r0 = jnp.zeros(B, I64)
                 regs = write(regs, 0, r0, active)

@@ -17,12 +17,18 @@ programs so the hook overhead itself can be benchmarked.
 ``tier_damon_program`` / ``tier_lru_program`` / ``tier_never_program`` are
 mm_tier-hook policies for the tiered-memory subsystem (:mod:`repro.core.
 tiering`): DAMON-heat admission control, an LRU-demote baseline, and a
-never-tier baseline that forces the preemption fallback.
+never-tier baseline that forces the preemption fallback.  A tier program's
+return value is the TARGET TIER id for the candidate page (0 = HBM,
+1..NTIERS-1 = spill tiers; the manager clamps and migrates hop by hop).
+``tier_heat_band_program`` and ``tier_edge_admission_program`` are the
+N-tier policies: heat-banded direct placement (including prefill-time
+cold-prefix placement across the spill chain) and TierBPF-style single-hop
+per-edge admission control.
 """
 
 from __future__ import annotations
 
-from .context import CTX, POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP
+from .context import CTX, FaultKind, POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP
 from .isa import Asm, Program
 from .profiles import MAX_PROFILE_REGIONS, REGION_STRIDE
 from .vm import HELPER_MIGRATE_COST, HELPER_PROMOTION_COST
@@ -152,14 +158,14 @@ def tier_damon_program(cold_heat_milli: int = 100, promote_horizon: int = 4,
     admission control that keeps proactive migration from thrashing.  Under
     HARD pressure (pool effectively full) the veto is waived: reclaim offers
     pages coldest-first and the alternative is whole-sequence preemption.
-    For a host-tier candidate: promote only when there is HBM headroom AND
-    the modeled PCIe penalty it pays per aggregation window, amortized over
+    For a spill-tier candidate: promote only when there is HBM headroom AND
+    the modeled link penalty it pays per aggregation window, amortized over
     ``promote_horizon`` windows, exceeds the one-off migration cost
-    (bpf_mm_migrate_cost helper).
+    (bpf_mm_migrate_cost helper over the page's tier -> HBM path).
     """
     a = Asm()
     a.ldctx("r1", CTX.PAGE_TIER)
-    a.jeqi("r1", 1, "host_resident")
+    a.jgei("r1", 1, "spill_resident")
     # ---- HBM page: demote-admission control ----
     a.ldctx("r4", CTX.TIER_FREE_BLOCKS)
     a.jeqi("r4", 0, "keep")                  # host tier full -> nothing to gain
@@ -171,24 +177,26 @@ def tier_damon_program(cold_heat_milli: int = 100, promote_horizon: int = 4,
     a.ldctx("r2", CTX.PAGE_HEAT)
     a.jgei("r2", cold_heat_milli, "keep")    # hot -> veto proactive demotion
     a.label("demote")
-    a.movi("r0", TIER_DEMOTE)
+    a.movi("r0", TIER_DEMOTE)                # one tier down from HBM
     a.exit()
     a.label("keep")
     a.movi("r0", TIER_KEEP)
     a.exit()
-    # ---- host-tier page: promote when the PCIe tax beats the move cost ----
-    a.label("host_resident")
+    # ---- spill page: promote when the link tax beats the move cost ----
+    a.label("spill_resident")
     a.ldctx("r6", CTX.MEM_PRESSURE)
     a.jgei("r6", 900, "stay")                # no HBM headroom -> avoid churn
-    a.ldctx("r2", CTX.PAGE_HEAT)
-    a.jeqi("r2", 0, "stay")                  # untouched -> stay demoted
+    a.ldctx("r7", CTX.PAGE_HEAT)
+    a.jeqi("r7", 0, "stay")                  # untouched -> stay demoted
     a.ldctx("r1", CTX.PAGE_ORDER)
-    a.call(HELPER_MIGRATE_COST)              # r0 = cost of moving this page
+    a.ldctx("r2", CTX.PAGE_TIER)
+    a.movi("r3", 0)
+    a.call(HELPER_MIGRATE_COST)              # r0 = cost(order, tier -> HBM)
     a.mov("r4", "r0")
-    # per-window PCIe tax ~= heat * pcie_ns_per_block * 4^order (heat is
+    # per-window link tax ~= heat * pcie_ns_per_block * 4^order (heat is
     # FIXED_POINT-scaled, so divide it back out at the end)
     a.ldctx("r3", CTX.PCIE_NS_PER_BLOCK)
-    a.mul("r3", "r2")
+    a.mul("r3", "r7")
     a.muli("r3", promote_horizon)
     a.ldctx("r5", CTX.PAGE_ORDER)
     a.muli("r5", 2)
@@ -196,7 +204,7 @@ def tier_damon_program(cold_heat_milli: int = 100, promote_horizon: int = 4,
     a.divi("r3", 1000)
     a.jgt("r3", "r4", "promote")
     a.label("stay")
-    a.movi("r0", TIER_DEMOTE)
+    a.ldctx("r0", CTX.PAGE_TIER)             # stay where it lives
     a.exit()
     a.label("promote")
     a.movi("r0", TIER_KEEP)
@@ -205,22 +213,18 @@ def tier_damon_program(cold_heat_milli: int = 100, promote_horizon: int = 4,
 
 
 def tier_lru_program(min_age_ticks: int = 1) -> Program:
-    """LRU-demote baseline: demote any page that has not changed tiers for
-    ``min_age_ticks`` engine ticks, regardless of heat; never proactively
-    promote (demoted pages pay the PCIe tax until reclaim churn brings them
-    back) — the classic kernel-default weakness eBPF tiering fixes."""
+    """LRU-demote baseline: sink any page that has not changed tiers for
+    ``min_age_ticks`` engine ticks one tier down the chain, regardless of
+    heat; never proactively promote (demoted pages pay the link tax until
+    reclaim churn brings them back) — the classic kernel-default weakness
+    eBPF tiering fixes.  In a 2-tier topology this is exactly the old
+    KEEP/DEMOTE behavior (the manager clamps the bottom tier in place)."""
     a = Asm()
-    a.ldctx("r1", CTX.PAGE_TIER)
-    a.jeqi("r1", 1, "host_resident")
+    a.ldctx("r0", CTX.PAGE_TIER)
     a.ldctx("r2", CTX.PAGE_AGE)
-    a.jgei("r2", min_age_ticks, "demote")
-    a.movi("r0", TIER_KEEP)
-    a.exit()
-    a.label("demote")
-    a.movi("r0", TIER_DEMOTE)
-    a.exit()
-    a.label("host_resident")
-    a.movi("r0", TIER_DEMOTE)                # stay in the host tier
+    a.jlti("r2", min_age_ticks, "keep")
+    a.addi("r0", 1)                          # aged: one tier down
+    a.label("keep")
     a.exit()
     return a.build("tier_lru")
 
@@ -232,6 +236,130 @@ def tier_never_program() -> Program:
     a.movi("r0", TIER_KEEP)
     a.exit()
     return a.build("tier_never")
+
+
+def tier_heat_band_program(hot_milli: int = 1500, warm_milli: int = 400,
+                           cool_milli: int = 50,
+                           place_pressure_milli: int = 600,
+                           recent_blocks: int = 8) -> Program:
+    """Heat-banded N-tier placement.
+
+    Scan queries: the page's own DAMON heat (FIXED_POINT-scaled) picks a
+    band — hot -> HBM, warm -> tier 1, cool -> tier 2, cold -> the deepest
+    tier of the live topology (NTIERS from ctx; shallower topologies clamp).
+
+    Prefill placement queries (FAULT_KIND == PREFILL): with HBM headroom
+    everything defaults to HBM (zero behavior change when idle); under
+    pressure the most recent ``recent_blocks`` of the prompt stay in HBM and
+    the cold prefix spreads across the spill chain oldest-deepest, so cold
+    prompts land directly in host/NVMe tiers instead of bouncing through
+    reclaim.
+    """
+    a = Asm()
+    a.ldctx("r9", CTX.NTIERS)
+    a.subi("r9", 1)                          # deepest tier id
+    a.ldctx("r1", CTX.FAULT_KIND)
+    a.jnei("r1", int(FaultKind.PREFILL), "scan")
+    # ---- prefill placement: cold-prefix spread across the spill chain ----
+    a.ldctx("r3", CTX.MEM_PRESSURE)
+    a.jlti("r3", place_pressure_milli, "t0")   # headroom -> default to HBM
+    a.ldctx("r4", CTX.SEQ_LEN)
+    a.subi("r4", recent_blocks)                # cold-prefix end
+    a.ldctx("r5", CTX.ADDR)
+    a.jge("r5", "r4", "t0")                    # recent tail stays in HBM
+    # tier = deepest - floor(addr * deepest / cold_end): oldest prefix lowest
+    a.mov("r6", "r5")
+    a.mul("r6", "r9")
+    a.div("r6", "r4")
+    a.mov("r0", "r9")
+    a.sub("r0", "r6")
+    a.maxi("r0", 1)                            # always a spill tier here
+    a.exit()
+    # ---- scan path: band by the page's own heat ----
+    a.label("scan")
+    a.ldctx("r2", CTX.PAGE_HEAT)
+    a.jgei("r2", hot_milli, "t0")
+    a.jgei("r2", warm_milli, "t1")
+    a.jgei("r2", cool_milli, "t2")
+    a.mov("r0", "r9")                        # cold -> deepest tier
+    a.exit()
+    a.label("t2")
+    a.movi("r0", 2)
+    a.min_("r0", "r9")
+    a.exit()
+    a.label("t1")
+    a.movi("r0", 1)
+    a.min_("r0", "r9")
+    a.exit()
+    a.label("t0")
+    a.movi("r0", 0)
+    a.exit()
+    return a.build("tier_heat_band")
+
+
+def tier_edge_admission_program(promote_horizon: int = 4,
+                                pressure_milli: int = 700) -> Program:
+    """Per-edge admission control à la TierBPF: decisions are SINGLE-HOP —
+    a page may only cross one edge of the tier graph per decision, and every
+    crossing must pass that edge's own cost test via the
+    bpf_mm_migrate_cost(order, src, dst) helper.
+
+    The page's per-window link-tax proxy (heat x pcie_ns_per_block x 4^order
+    x horizon) is compared against the edge cost both ways: promote one hop
+    up when the tax it keeps paying exceeds the up-edge cost; admit a
+    one-hop demotion under HBM pressure only when the tax is BELOW the
+    down-edge cost (a hotter page would bounce straight back — the classic
+    migration-thrash TierBPF's admission control kills).  Hard pressure
+    (>= 990 milli) admits demotion unconditionally, and prefill placements
+    (heat 0) admit one hop down under pressure — cold prompts enter the
+    spill chain at tier 1 and sink edge by edge.
+    """
+    a = Asm()
+    a.ldctx("r8", CTX.PAGE_TIER)
+    a.ldctx("r9", CTX.NTIERS)
+    a.subi("r9", 1)                          # deepest tier id
+    # r7 = per-window link-tax proxy, FIXED_POINT divided back out
+    a.ldctx("r7", CTX.PAGE_HEAT)
+    a.ldctx("r3", CTX.PCIE_NS_PER_BLOCK)
+    a.mul("r7", "r3")
+    a.muli("r7", promote_horizon)
+    a.ldctx("r5", CTX.PAGE_ORDER)
+    a.muli("r5", 2)
+    a.lsh("r7", "r5")                        # * 4^order == << 2*order
+    a.divi("r7", 1000)
+    a.jeqi("r8", 0, "demote_side")
+    # ---- spill page: promote admission over edge (t, t-1) ----
+    a.ldctx("r6", CTX.MEM_PRESSURE)
+    a.jgei("r6", 900, "demote_side")         # no HBM headroom -> consider down
+    a.ldctx("r1", CTX.PAGE_ORDER)
+    a.mov("r2", "r8")
+    a.mov("r3", "r8")
+    a.subi("r3", 1)
+    a.call(HELPER_MIGRATE_COST)              # r0 = cost of one hop up
+    a.jle("r7", "r0", "demote_side")         # tax under the edge cost: not up
+    a.mov("r0", "r8")
+    a.subi("r0", 1)
+    a.exit()
+    # ---- demote admission over edge (t, t+1) ----
+    a.label("demote_side")
+    a.jge("r8", "r9", "stay")                # already in the deepest tier
+    a.ldctx("r6", CTX.MEM_PRESSURE)
+    a.jlti("r6", pressure_milli, "stay")     # no pressure -> nothing to gain
+    a.jgei("r6", 990, "admit")               # hard pressure: unconditional
+    a.ldctx("r1", CTX.PAGE_ORDER)
+    a.mov("r2", "r8")
+    a.mov("r3", "r8")
+    a.addi("r3", 1)
+    a.call(HELPER_MIGRATE_COST)              # r0 = cost of one hop down
+    a.jgt("r7", "r0", "stay")                # it would bounce back -> veto
+    a.label("admit")
+    a.mov("r0", "r8")
+    a.addi("r0", 1)
+    a.exit()
+    a.label("stay")
+    a.mov("r0", "r8")
+    a.exit()
+    return a.build("tier_edge_admission")
 
 
 def reclaim_lru_program() -> Program:

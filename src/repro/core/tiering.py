@@ -1,30 +1,41 @@
-"""Tiered memory: eBPF-guided HBM <-> host-DRAM page placement.
+"""Tiered memory: eBPF-guided placement over an N-pool tier graph.
 
 The paper names page placement across memory tiers as the natural next hook
 after the fault-path page-size hook and stubs it as ``HOOK_TIER``.  This
-module implements that subsystem: a second block pool modeling host DRAM with
-its own buddy allocator, a :class:`TieredMemoryManager` over
-:class:`~repro.core.mm.MemoryManager` whose :class:`PageMapping`\\ s carry a
-tier id, and a migration engine that emits explicit move lists the device
-executes with the block_copy kernel — with PCIe-bandwidth costs accounted in
-the :class:`~repro.core.cost.CostModel`.
+module implements that subsystem over an N-pool tier chain — local HBM
+(tier 0) plus up to three spill tiers (peer-HBM over ICI, host DRAM over
+PCIe, NVMe), each with its own buddy allocator — a
+:class:`TieredMemoryManager` over :class:`~repro.core.mm.MemoryManager`
+whose :class:`PageMapping`\\ s carry a tier id, and a migration engine that
+emits explicit move lists the device executes with the block_copy kernel,
+with per-edge bandwidth/setup costs accounted in the
+:class:`~repro.core.cost.CostModel` edge table.
 
 Device addressing: the engine materializes ONE combined pool of
-``num_blocks + host_blocks`` base blocks.  Indices ``[0, num_blocks)`` are
-HBM; ``[num_blocks, num_blocks + host_blocks)`` model pinned host DRAM the
-device can DMA from (at PCIe bandwidth — charged by the cost model, while the
-copies themselves stay exact).  Tier crossings are therefore ordinary
+``sum(pool sizes)`` base blocks.  Indices ``[0, num_blocks)`` are HBM; each
+spill tier occupies the next contiguous span (pinned mirrors the device can
+DMA from at that tier's link bandwidth — charged by the cost model, while
+the copies themselves stay exact).  Tier crossings are therefore ordinary
 ``(src, dst, order)`` moves in combined coordinates and reuse the existing
-``drain_moves`` / block_copy path unchanged.
+``drain_moves`` / block_copy path unchanged.  Multi-hop crossings
+(NVMe -> DRAM -> HBM) chain through intermediate pools hop by hop when they
+have room — each hop is its own move, batched through the same pre-kernel
+flush — and hop OVER a full intermediate tier (the link is still traversed
+and charged) when they don't.
 
-Policy: every migration decision is delegated to the verified program
-attached to ``HOOK_TIER`` (TierBPF-style admission control).  The program
-sees a :class:`~repro.core.context.FaultContext` describing the candidate
-page (tier, order, DAMON heat, age) plus both pools' real-time state, and
-returns ``TIER_KEEP`` (live in HBM) or ``TIER_DEMOTE`` (live in host DRAM).
-With nothing attached, a kernel-default policy runs without building the ctx
-at all — the paper's zero-overhead property, extended to the new hook.
-Decisions over many candidates run through the vectorized JIT batch path.
+Policy: every migration/placement decision is delegated to the verified
+program attached to ``HOOK_TIER`` (TierBPF-style per-edge admission
+control).  The program sees a :class:`~repro.core.context.FaultContext`
+describing the candidate page (tier, order, DAMON heat, age) plus every
+pool's real-time state and the cumulative per-edge migration cost tables,
+and returns the TARGET TIER id the page should live in (0 = HBM; the
+manager clamps to the live topology and migrates hop by hop).  Prefill-time
+placement: ``fault_batch``/``ensure_range`` consult ``HOOK_TIER`` once per
+prefill batch so profiles can place cold prefixes directly in the far tiers
+instead of defaulting to HBM.  With nothing attached, a kernel-default
+policy runs without building the ctx at all — the paper's zero-overhead
+property, extended to the new hook.  Decisions over many candidates run
+through the vectorized JIT batch path.
 """
 
 from __future__ import annotations
@@ -34,15 +45,15 @@ from dataclasses import dataclass
 import numpy as np
 
 from .buddy import BuddyAllocator, BuddyError, order_blocks
-from .context import (CTX, FIXED_POINT, NUM_ORDERS, POLICY_FALLBACK,
-                      TIER_DEMOTE, TIER_KEEP, FaultContext, ctx_batch,
-                      fill_system_columns)
-from .cost import CostModel
+from .context import (CTX, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
+                      POLICY_FALLBACK, TIER_KEEP, FaultContext, FaultKind,
+                      ctx_batch, fill_system_columns)
+from .cost import CostModel, TierSpec, host_dram_tier
 from .hooks import HOOK_TIER
 from .mm import MemoryManager, PageMapping, ProcessState
 
 TIER_HBM = 0
-TIER_HOST = 1
+TIER_HOST = 1     # the first spill tier of the classic 2-pool topology
 
 
 @dataclass
@@ -54,23 +65,46 @@ class TierConfig:
 
 
 class TieredMemoryManager(MemoryManager):
-    """MemoryManager with a second, host-DRAM block pool behind HOOK_TIER.
+    """MemoryManager with an N-pool tier chain behind HOOK_TIER.
 
-    HBM pages live in ``self.buddy`` (tier 0), host-DRAM pages in
-    ``self.host_buddy`` (tier 1).  ``phys_start`` of a mapping is always an
-    index within its own tier's pool; :meth:`_device_index` folds both into
-    the combined device pool the engine materializes.
+    HBM pages live in ``self.pools[0]`` (== ``self.buddy``, tier 0), spill
+    tiers 1..N-1 in ``self.pools[1:]`` (peer-HBM / host DRAM / NVMe — the
+    topology comes from ``tiers`` or defaults to the classic single
+    host-DRAM pool of ``host_blocks``).  ``phys_start`` of a mapping is
+    always an index within its own tier's pool; :meth:`_device_index` folds
+    all pools into the combined device pool the engine materializes.
     """
 
     def __init__(self, num_blocks: int, cost: CostModel, *,
-                 host_blocks: int, tier_cfg: TierConfig | None = None,
-                 **kw) -> None:
+                 host_blocks: int = 0, tiers=None,
+                 tier_cfg: TierConfig | None = None, **kw) -> None:
         super().__init__(num_blocks, cost, **kw)
-        if host_blocks <= 0:
-            raise ValueError("host_blocks must be positive (use MemoryManager "
-                             "for an untiered pool)")
-        self.host_blocks = host_blocks
-        self.host_buddy = BuddyAllocator(host_blocks, max_order=self.max_order)
+        if tiers is None:
+            if host_blocks <= 0:
+                raise ValueError("host_blocks must be positive (use "
+                                 "MemoryManager for an untiered pool)")
+            tiers = (host_dram_tier(cost.hw, host_blocks),)
+        tiers = tuple(tiers)
+        if not 1 <= len(tiers) <= MAX_TIERS - 1:
+            raise ValueError(f"need 1..{MAX_TIERS - 1} spill tiers")
+        if any(s.blocks <= 0 for s in tiers):
+            raise ValueError("every spill tier needs positive capacity")
+        # the cost model's per-edge table must describe the same chain the
+        # pools are built from (bpf_mm_migrate_cost == engine accounting);
+        # a CostModel already bound to a DIFFERENT chain would silently
+        # re-cost another manager's pools, so that reuse is rejected
+        if cost.topology is not None and tuple(cost.topology) != tiers:
+            raise ValueError(
+                "CostModel is already bound to a different tier topology; "
+                "use a fresh CostModel per tier chain")
+        cost.topology = tiers
+        self.tier_specs: tuple[TierSpec, ...] = tiers
+        self.pools: list[BuddyAllocator] = [self.buddy] + [
+            BuddyAllocator(s.blocks, max_order=self.max_order) for s in tiers]
+        # device base-block offset of each tier in the combined pool
+        self._tier_base = [0]
+        for p in self.pools[:-1]:
+            self._tier_base.append(self._tier_base[-1] + p.num_blocks)
         self.tier_cfg = tier_cfg or TierConfig()
         # (pid, logical_start) -> ktime_ns of the last tier change / install
         self._tier_stamp: dict[tuple[int, int], int] = {}
@@ -84,20 +118,28 @@ class TieredMemoryManager(MemoryManager):
 
     # --------------------------------------------------------------- geometry
     @property
+    def ntiers(self) -> int:
+        return len(self.pools)
+
+    @property
+    def host_buddy(self) -> BuddyAllocator:
+        """The first spill pool (the classic host-DRAM tier)."""
+        return self.pools[TIER_HOST]
+
+    @property
+    def host_blocks(self) -> int:
+        return self.pools[TIER_HOST].num_blocks
+
+    @property
     def device_pool_blocks(self) -> int:
-        """Size of the combined device pool (HBM + host-DRAM mirror)."""
-        return self.buddy.num_blocks + self.host_blocks
+        """Size of the combined device pool (HBM + every spill mirror)."""
+        return sum(p.num_blocks for p in self.pools)
 
     def _device_index(self, m: PageMapping) -> int:
-        if m.tier == TIER_HOST:
-            return self.buddy.num_blocks + m.phys_start
-        return m.phys_start
+        return self._tier_base[m.tier] + m.phys_start
 
     def _free_phys(self, m: PageMapping) -> None:
-        if m.tier == TIER_HOST:
-            self.host_buddy.free(m.phys_start)
-        else:
-            self.buddy.free(m.phys_start)
+        self.pools[m.tier].free(m.phys_start)
 
     def free_process(self, pid: int) -> None:
         super().free_process(pid)
@@ -126,9 +168,26 @@ class TieredMemoryManager(MemoryManager):
         born = self._tier_stamp.get((pid, logical_start), 0)
         return max(0, (self.ktime_ns - born) // 1_000_000)
 
-    def _tier_ctx(self, st: ProcessState, m: PageMapping) -> np.ndarray:
-        bstats = self.buddy.stats()
-        hstats = self.host_buddy.stats()
+    def _tier_columns(self, pstats) -> dict:
+        """Per-tier pool state + cumulative edge-cost tables for ctx fill
+        (``pstats`` = one BuddyStats per pool, computed once per call)."""
+        free = [0] * MAX_TIERS
+        total = [0] * MAX_TIERS
+        for t, s in enumerate(pstats):
+            free[t] = s.free_blocks
+            total[t] = s.total_blocks
+        cum_setup, cum_ns = self.cost.migrate_cum_tables()
+        return dict(ntiers=self.ntiers, tier_free=tuple(free),
+                    tier_total=tuple(total), mig_cum_setup=cum_setup,
+                    mig_cum_ns=cum_ns)
+
+    def _tier_ctx(self, st: ProcessState, m: PageMapping,
+                  kind: int = int(FaultKind.FIRST_TOUCH),
+                  seq_len: int | None = None) -> np.ndarray:
+        pstats = [p.stats() for p in self.pools]
+        bstats = pstats[0]
+        hstats = pstats[TIER_HOST]
+        tc = self._tier_columns(pstats)
         fc = FaultContext(
             addr=m.logical_start, pid=st.pid, vma_start=0, vma_end=st.vma_end,
             fault_max_order=m.order, has_profile=0, profile_map_id=0,
@@ -142,7 +201,8 @@ class TieredMemoryManager(MemoryManager):
             block_bytes=self.cost.block_bytes,
             ktime_ns=self.ktime_ns,
             mem_pressure=bstats.utilization_milli,
-            seq_len=st.vma_end,
+            fault_kind=int(kind),
+            seq_len=st.vma_end if seq_len is None else seq_len,
             tier_free_blocks=hstats.free_blocks,
             tier_total_blocks=hstats.total_blocks,
             tier_pressure=hstats.utilization_milli,
@@ -152,19 +212,21 @@ class TieredMemoryManager(MemoryManager):
             page_age=self._page_age_ticks(st.pid, m.logical_start),
             page_heat=int(st.damon.heat_at(m.logical_start, m.order)
                           * FIXED_POINT),
-            migrate_setup_ns=int(self.cost.hw.pcie_setup_ns),
-            migrate_ns_per_block=self.cost.migrate_ns_per_block(),
+            migrate_setup_ns=self.cost.migrate_setup_ns(0, 1),
+            migrate_ns_per_block=self.cost.migrate_ns_per_block(0, 1),
+            **tc,
         )
         return fc.vector()
 
     def _default_tier_decision(self, st: ProcessState, m: PageMapping) -> int:
-        """Kernel-default tiering with no program attached: approve demotion
-        of whatever reclaim nominated (candidates arrive coldest-first), and
-        promote host pages that have been touched since demotion."""
+        """Kernel-default tiering with no program attached: approve one-hop
+        demotion of whatever reclaim nominated (candidates arrive
+        coldest-first), and bring spill-tier pages that have been touched
+        since demotion back to HBM."""
         if m.tier == TIER_HBM:
-            return TIER_DEMOTE
+            return min(m.tier + 1, self.ntiers - 1)
         return (TIER_KEEP if st.damon.heat_at(m.logical_start, m.order) > 0
-                else TIER_DEMOTE)
+                else m.tier)
 
     def _build_tier_mat(self, cands: list[tuple[ProcessState, PageMapping]]
                         ) -> np.ndarray:
@@ -196,12 +258,20 @@ class TieredMemoryManager(MemoryManager):
         return mat
 
     def _tier_ctx_batch(self, cands: list[tuple[ProcessState, PageMapping]],
-                        *, cache: str | None = None) -> np.ndarray:
+                        *, cache: str | None = None,
+                        kind: int = int(FaultKind.FIRST_TOUCH),
+                        seq_lens: dict[int, int] | None = None) -> np.ndarray:
         """Ctx matrix for a candidate batch; row ``i`` equals
         ``_tier_ctx(*cands[i])``.  With ``cache`` set, the per-candidate
         columns are reused across ticks while the candidate set and the
         involved DAMON monitors are unchanged (the ROADMAP's promotion-scan
-        cost item); the clock/age/pool-state columns refresh every call."""
+        cost item); the clock/age/pool-state columns refresh every call.
+        ``seq_lens`` (pid -> logical extent) overrides the SEQ_LEN column —
+        placement queries pass the PREFILL SPAN extent, not the VMA end, so
+        programs anchor "recent tail" logic to the prompt actually mapped;
+        it is incompatible with ``cache`` (the override would poison the
+        cached per-candidate columns)."""
+        assert not (cache and seq_lens), "seq_lens would poison the scan cache"
         key = (tuple((st.pid, m.logical_start, m.tier, m.order)
                      for st, m in cands),
                tuple(sorted({(st.pid, st.damon.version) for st, _ in cands})))
@@ -214,8 +284,9 @@ class TieredMemoryManager(MemoryManager):
             self.ctx_cache_misses += 1
             if cache:
                 self._scan_ctx_cache[cache] = (key, mat)
-        bstats = self.buddy.stats()
-        hstats = self.host_buddy.stats()
+        pstats = [p.stats() for p in self.pools]
+        bstats = pstats[0]
+        hstats = pstats[TIER_HOST]
         fill_system_columns(
             mat,
             free_blocks=bstats.free_per_order,
@@ -230,109 +301,141 @@ class TieredMemoryManager(MemoryManager):
             tier_total_blocks=hstats.total_blocks,
             tier_pressure=hstats.utilization_milli,
             pcie_ns_per_block=self.cost.pcie_ns_per_block(),
-            migrate_setup_ns=int(self.cost.hw.pcie_setup_ns),
-            migrate_ns_per_block=self.cost.migrate_ns_per_block())
+            migrate_setup_ns=self.cost.migrate_setup_ns(0, 1),
+            migrate_ns_per_block=self.cost.migrate_ns_per_block(0, 1),
+            **self._tier_columns(pstats))
+        mat[:, CTX.FAULT_KIND] = int(kind)
+        if seq_lens is not None:
+            mat[:, CTX.SEQ_LEN] = np.fromiter(
+                (seq_lens.get(st.pid, st.vma_end) for st, _ in cands),
+                np.int64, len(cands))
         mat[:, CTX.PAGE_AGE] = np.fromiter(
             (self._page_age_ticks(st.pid, m.logical_start)
              for st, m in cands), np.int64, len(cands))
         return mat
 
     def tier_decisions(self, cands: list[tuple[ProcessState, PageMapping]],
-                       *, scan: str | None = None) -> list[int]:
-        """Run HOOK_TIER over candidate pages; vectorized when the batch is
-        large enough to amortize the XLA dispatch.  ``scan`` names the ctx
-        cache slot the batch matrix may be reused from across ticks."""
+                       *, scan: str | None = None,
+                       kind: int = int(FaultKind.FIRST_TOUCH),
+                       force_batch: bool = False,
+                       seq_lens: dict[int, int] | None = None) -> list[int]:
+        """Run HOOK_TIER over candidate pages; returns one TARGET TIER id per
+        candidate, clamped to the live topology.  Vectorized when the batch
+        is large enough to amortize the XLA dispatch (``force_batch`` pins
+        the batch route — ONE program invocation however small the batch).
+        ``scan`` names the ctx cache slot the batch matrix may be reused
+        from across ticks."""
         if not cands:
             return []
         if not self.hooks.attached(HOOK_TIER):
             # zero-overhead default path: no ctx build, no VM run
             return [self._default_tier_decision(st, m) for st, m in cands]
-        if len(cands) >= self.tier_cfg.batch_threshold:
-            mat = self._tier_ctx_batch(cands, cache=scan)
+        if force_batch or len(cands) >= self.tier_cfg.batch_threshold:
+            mat = self._tier_ctx_batch(cands, cache=scan, kind=kind,
+                                       seq_lens=seq_lens)
             raw = self.hooks.run_batch(HOOK_TIER, mat)
             decisions = [int(d) for d in raw]
         else:
-            decisions = [int(self.hooks.run(HOOK_TIER, self._tier_ctx(st, m)))
+            decisions = [int(self.hooks.run(HOOK_TIER, self._tier_ctx(
+                st, m, kind,
+                seq_len=seq_lens.get(st.pid) if seq_lens else None)))
                          for st, m in cands]
-        return [self._default_tier_decision(st, m) if d == POLICY_FALLBACK else d
+        last = self.ntiers - 1
+        return [self._default_tier_decision(st, m) if d == POLICY_FALLBACK
+                else max(0, min(d, last))
                 for (st, m), d in zip(cands, decisions)]
 
     # -------------------------------------------------------------- migration
-    def demote_page(self, pid: int, logical_start: int) -> bool:
-        """Move one mapping HBM -> host tier. Returns False if the host pool
-        cannot back it (OOM in both tiers for this page)."""
+    def _alloc_in_tier(self, tier: int, order: int) -> int | None:
+        """Allocate an order-k page in ``tier``'s pool, compacting it once if
+        fragmented; None when the pool genuinely cannot back the page."""
+        pool = self.pools[tier]
+        try:
+            return pool.alloc(order)
+        except BuddyError:
+            plan = pool.plan_compaction(order)
+            if plan is None:
+                return None
+            self._apply_compaction(plan, tier=tier,
+                                   device_offset=self._tier_base[tier])
+            try:
+                return pool.alloc(order)
+            except BuddyError:
+                return None
+
+    def _hop(self, st: ProcessState, m: PageMapping, dst_tier: int,
+             phys: int) -> None:
+        """Bookkeeping for one committed hop: emit the device copy, release
+        the old block, charge the per-edge path cost, bump the stats."""
+        n = order_blocks(m.order)
+        src_dev = self._device_index(m)
+        self._move_log.append((src_dev, self._tier_base[dst_tier] + phys,
+                               m.order))
+        self.pools[m.tier].free(m.phys_start)
+        self.stats.mgmt_ns += self.cost.migrate_ns(m.order, m.tier, dst_tier)
+        if dst_tier > m.tier:
+            self.stats.demotions += 1
+            self.stats.demotion_blocks += n
+        else:
+            self.stats.tier_promotions += 1
+            self.stats.tier_promotion_blocks += n
+        m.phys_start = phys
+        m.tier = dst_tier
+        self._note_mapped(st, m)
+        self._tier_stamp[(st.pid, m.logical_start)] = self.ktime_ns
+
+    def migrate_page(self, pid: int, logical_start: int,
+                     dst_tier: int) -> bool:
+        """Move one mapping toward ``dst_tier``, hop by adjacent hop.  Each
+        hop allocates in the nearest tier toward the target with room
+        (compacting it if fragmented), emits one device copy and charges the
+        per-edge path cost — so an NVMe->HBM promotion chains
+        NVMe->DRAM->HBM when the intermediates have room and hops over them
+        (still paying their link crossings) when they don't.  Returns True
+        iff the page ends in ``dst_tier``; partial progress (it moved but
+        stalled short) leaves the page at the tier it reached."""
         st = self.procs[pid]
         m = st.page_table[logical_start]
-        if m.tier != TIER_HBM:
-            return False
-        try:
-            hp = self.host_buddy.alloc(m.order)
-        except BuddyError:
-            plan = self.host_buddy.plan_compaction(m.order)
-            if plan is None:
+        dst_tier = max(0, min(dst_tier, self.ntiers - 1))
+        while m.tier != dst_tier:
+            step = 1 if dst_tier > m.tier else -1
+            placed = False
+            for t in range(m.tier + step, dst_tier + step, step):
+                phys = self._alloc_in_tier(t, m.order)
+                if phys is not None:
+                    self._hop(st, m, t, phys)
+                    placed = True
+                    break
+            if not placed:
                 return False
-            self._apply_host_compaction(plan)
-            try:
-                hp = self.host_buddy.alloc(m.order)
-            except BuddyError:
-                return False
-        n = order_blocks(m.order)
-        self._move_log.append((m.phys_start, self.buddy.num_blocks + hp, m.order))
-        self.buddy.free(m.phys_start)
-        m.phys_start = hp
-        m.tier = TIER_HOST
-        self._note_mapped(st, m)
-        self._tier_stamp[(pid, logical_start)] = self.ktime_ns
-        self.stats.demotions += 1
-        self.stats.demotion_blocks += n
-        self.stats.mgmt_ns += self.cost.migrate_ns(m.order)
         return True
+
+    def demote_page(self, pid: int, logical_start: int) -> bool:
+        """Move one mapping one tier down the chain (HBM -> host in the
+        2-pool topology). Returns False if the page is already in the
+        deepest tier or no pool below can back it."""
+        m = self.procs[pid].page_table[logical_start]
+        if m.tier >= self.ntiers - 1:
+            return False
+        return self.migrate_page(pid, logical_start, m.tier + 1)
 
     def promote_page(self, pid: int, logical_start: int) -> bool:
-        """Move one mapping host tier -> HBM (compacting HBM if needed)."""
-        st = self.procs[pid]
-        m = st.page_table[logical_start]
-        if m.tier != TIER_HOST:
+        """Move one mapping one tier up the chain (host -> HBM in the 2-pool
+        topology), compacting the destination pool if needed."""
+        m = self.procs[pid].page_table[logical_start]
+        if m.tier == TIER_HBM:
             return False
-        try:
-            phys = self.buddy.alloc(m.order)
-        except BuddyError:
-            plan = self.buddy.plan_compaction(m.order)
-            if plan is None:
-                return False
-            self._apply_compaction(plan)
-            try:
-                phys = self.buddy.alloc(m.order)
-            except BuddyError:
-                return False
-        n = order_blocks(m.order)
-        self._move_log.append((self.buddy.num_blocks + m.phys_start, phys,
-                               m.order))
-        self.host_buddy.free(m.phys_start)
-        m.phys_start = phys
-        m.tier = TIER_HBM
-        self._note_mapped(st, m)
-        self._tier_stamp[(pid, logical_start)] = self.ktime_ns
-        self.stats.tier_promotions += 1
-        self.stats.tier_promotion_blocks += n
-        self.stats.mgmt_ns += self.cost.migrate_ns(m.order)
-        return True
-
-    def _apply_host_compaction(self, plan: list[tuple[int, int, int]]) -> None:
-        """Host-pool compaction: same bookkeeping as HBM compaction, against
-        tier-1 mappings and shifted into combined device coordinates (the
-        host-local memcpy shares the read+write cost model)."""
-        self._apply_compaction(plan, tier=TIER_HOST,
-                               device_offset=self.buddy.num_blocks)
+        return self.migrate_page(pid, logical_start, m.tier - 1)
 
     # ---------------------------------------------------------- reclaim entry
     def demote_cold_global(self, need_blocks: int | None = None,
                            prefer_pid: int | None = None) -> int:
         """Global reclaim scan (the kswapd analogue): nominate HBM pages from
         EVERY process coldest-first — the reclaim victim's pages win ties —
-        and demote HOOK_TIER-approved ones until ``need_blocks`` are freed.
-        A victim that is already fully host-resident then simply contributes
-        no candidates instead of stalling reclaim."""
+        and demote HOOK_TIER-approved ones toward their target tiers until
+        ``need_blocks`` HBM blocks are freed.  A victim that is already fully
+        spilled then simply contributes no candidates instead of stalling
+        reclaim."""
         need = need_blocks if need_blocks is not None \
             else self.tier_cfg.demote_chunk_blocks
         cands = [(st, m) for st in self.procs.values()
@@ -348,21 +451,23 @@ class TieredMemoryManager(MemoryManager):
         for (st, m), d in zip(cands, decisions):
             if freed >= need:
                 break
-            if d == TIER_DEMOTE and self.demote_page(st.pid, m.logical_start):
-                freed += order_blocks(m.order)
+            if d > m.tier:
+                self.migrate_page(st.pid, m.logical_start, d)
+                if m.tier != TIER_HBM:      # left HBM (even if short of d)
+                    freed += order_blocks(m.order)
         return freed
 
     def promotion_scan(self, budget_blocks: int | None = None) -> int:
-        """Background promotion (khugepaged-style): offer every host-tier
-        page to HOOK_TIER; pages the policy wants back in HBM are promoted,
-        hottest-first, under a per-tick block budget."""
+        """Background promotion (khugepaged-style): offer every spill-tier
+        page to HOOK_TIER; pages the policy wants in a faster tier are moved
+        up, hottest-first, under a per-tick block budget."""
         budget = budget_blocks if budget_blocks is not None \
             else self.tier_cfg.promote_blocks_per_tick
         # age > 0: never bounce a page demoted within the current tick (the
         # demote and promote copies would otherwise land in one device batch)
         cands = [(st, m) for st in self.procs.values()
                  for m in st.mappings_sorted()
-                 if m.tier == TIER_HOST
+                 if m.tier != TIER_HBM
                  and self._page_age_ticks(st.pid, m.logical_start) > 0]
         if not cands:
             return 0
@@ -373,20 +478,98 @@ class TieredMemoryManager(MemoryManager):
         for (st, m), d in zip(cands, decisions):
             if promoted >= budget:
                 break
-            if d == TIER_KEEP and self.promote_page(st.pid, m.logical_start):
-                promoted += order_blocks(m.order)
+            if d < m.tier:
+                was = m.tier
+                self.migrate_page(st.pid, m.logical_start, d)
+                if m.tier < was:            # moved up (even if short of d)
+                    promoted += order_blocks(m.order)
         return promoted
 
+    # -------------------------------------------- prefill-time tier placement
+    def _mapping_at(self, st: ProcessState, addr: int) -> PageMapping | None:
+        """The mapping covering logical block ``addr`` (None if unmapped)."""
+        for k in range(self.max_order + 1):
+            size = order_blocks(k)
+            m = st.page_table.get((addr // size) * size)
+            if m is not None and m.order == k:
+                return m
+        return None
+
+    def _place_prefill(self, reqs) -> None:
+        """Fold tier placement into the prefill path: ONE ``HOOK_TIER``
+        consult per prefill batch over the pages the batch touched, so
+        profiles can place cold prefixes directly in the far tiers instead
+        of defaulting to HBM.  Only demotions are applied here (promotion is
+        the background scan's job); with no program attached this is a no-op
+        — placement stays the zero-overhead HBM default."""
+        if not self.hooks.attached(HOOK_TIER):
+            return
+        seen: set[tuple[int, int]] = set()
+        cands: list[tuple[ProcessState, PageMapping]] = []
+        last: dict[int, PageMapping] = {}     # skip probes inside known spans
+        extent: dict[int, int] = {}           # pid -> prefill-span extent
+        for pid, addr, kind in reqs:
+            if int(kind) != int(FaultKind.PREFILL):
+                continue
+            st = self.procs.get(pid)
+            if st is None or addr not in st.mapped:
+                continue
+            extent[pid] = max(extent.get(pid, 0), addr + 1)
+            m = last.get(pid)
+            if m is not None and m.logical_start <= addr \
+                    < m.logical_start + order_blocks(m.order):
+                continue
+            m = self._mapping_at(st, addr)
+            if m is None or (pid, m.logical_start) in seen:
+                continue
+            seen.add((pid, m.logical_start))
+            last[pid] = m
+            cands.append((st, m))
+        if not cands:
+            return
+        decisions = self.tier_decisions(cands, kind=int(FaultKind.PREFILL),
+                                        force_batch=True, seq_lens=extent)
+        for (st, m), d in zip(cands, decisions):
+            if d > m.tier:
+                self.migrate_page(st.pid, m.logical_start, d)
+
+    def fault_batch(self, reqs):
+        results = super().fault_batch(reqs)
+        self._place_prefill(reqs)
+        return results
+
+    def ensure_range(self, pid: int, start: int, end: int):
+        results = super().ensure_range(pid, start, end)
+        self._place_prefill([(pid, a, FaultKind.PREFILL)
+                             for a in range(start, end)])
+        return results
+
     # ----------------------------------------------------------------- state
+    def resident_blocks(self, tier: int) -> int:
+        return sum(order_blocks(o)
+                   for o in self.pools[tier].allocated.values())
+
     def host_resident_blocks(self) -> int:
-        return sum(order_blocks(o) for o in self.host_buddy.allocated.values())
+        return self.resident_blocks(TIER_HOST)
 
     def tier_snapshot(self) -> dict:
-        hstats = self.host_buddy.stats()
-        return {
+        hstats = self.pools[TIER_HOST].stats()
+        out = {
             "host_blocks": self.host_blocks,
             "host_free_blocks": hstats.free_blocks,
             "host_resident_blocks": self.host_resident_blocks(),
             "host_utilization_milli": hstats.utilization_milli,
             "pcie_ns_per_block": self.cost.pcie_ns_per_block(),
+            "ntiers": self.ntiers,
+            "tiers": [],
         }
+        for t, (spec, pool) in enumerate(zip(("hbm",) + tuple(
+                s.name for s in self.tier_specs), self.pools)):
+            s = pool.stats()
+            out["tiers"].append({
+                "tier": t, "name": spec, "blocks": pool.num_blocks,
+                "free_blocks": s.free_blocks,
+                "resident_blocks": self.resident_blocks(t),
+                "utilization_milli": s.utilization_milli,
+            })
+        return out

@@ -67,13 +67,21 @@ def _helper_promotion_cost(regs, ctx, state: HelperState) -> int:
 
 
 def _helper_migrate_cost(regs, ctx, state: HelperState) -> int:
-    """bpf_mm_migrate_cost(order=r1) — full cost of one tier crossing for an
-    order-k page: fixed DMA setup + (PCIe + HBM-side) per block, matching
-    CostModel.migrate_ns exactly."""
-    from .context import CTX  # local import to avoid cycle at module load
+    """bpf_mm_migrate_cost(order=r1, src_tier=r2, dst_tier=r3) — full cost of
+    moving an order-k page between two tiers of the N-pool graph: the summed
+    fixed setup + per-block transfer of every edge on the src->dst path, read
+    from the cumulative ctx tables so it matches CostModel.migrate_ns
+    exactly.  A same-tier query costs 0."""
+    from .context import CTX, MAX_TIERS  # local import to avoid cycle
     order = max(0, min(3, int(regs[1])))
-    return (int(ctx[CTX.MIGRATE_SETUP_NS])
-            + int(ctx[CTX.MIGRATE_NS_PER_BLOCK]) * (4 ** order))
+    src = max(0, min(MAX_TIERS - 1, int(regs[2])))
+    dst = max(0, min(MAX_TIERS - 1, int(regs[3])))
+    lo, hi = (src, dst) if src <= dst else (dst, src)
+    setup = int(ctx[CTX.MIG_CUM_SETUP_T0 + hi]) \
+        - int(ctx[CTX.MIG_CUM_SETUP_T0 + lo])
+    per_block = int(ctx[CTX.MIG_CUM_NS_T0 + hi]) \
+        - int(ctx[CTX.MIG_CUM_NS_T0 + lo])
+    return setup + per_block * (4 ** order)
 
 
 HELPERS: dict[int, Callable] = {

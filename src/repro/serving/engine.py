@@ -27,8 +27,13 @@ Policies (``policy=``): "ebpf" (profile + Figure-1 program), "thp"
 hook overhead).  The Figure-2 benchmark sweeps these.  Orthogonally,
 ``tier_policy=`` selects the mm_tier program: "ebpf-tier" (DAMON-heat
 admission control), "lru-tier" (age-based demotion baseline), "never-tier"
-(veto all demotions -> preempt-only), or "default" (kernel-default path,
-no program attached).  The capacity-sweep benchmark sweeps these.
+(veto all demotions -> preempt-only), "heat-tier" (heat-banded N-tier
+placement incl. prefill-time cold-prefix placement), "edge-tier"
+(TierBPF-style single-hop per-edge admission control), or "default"
+(kernel-default path, no program attached).  The tier topology comes from
+``host_blocks`` (classic HBM + host-DRAM) or ``tier_blocks`` (a chain of
+spill-tier capacities: peer-HBM over ICI, host DRAM over PCIe, NVMe).  The
+capacity-sweep benchmark sweeps these.
 """
 
 from __future__ import annotations
@@ -44,9 +49,11 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import (MAX_PROFILE_REGIONS, FaultKind, HWSpec, Khugepaged,
                     KhugepagedConfig, MemoryManager, MMOutOfMemory, Profile,
-                    TieredMemoryManager, ebpf_mm_program, make_cost_model,
-                    never_program, reclaim_lru_program, thp_always_program,
-                    tier_damon_program, tier_lru_program, tier_never_program)
+                    TieredMemoryManager, default_tier_chain, ebpf_mm_program,
+                    make_cost_model, never_program, reclaim_lru_program,
+                    thp_always_program, tier_damon_program,
+                    tier_edge_admission_program, tier_heat_band_program,
+                    tier_lru_program, tier_never_program)
 from ..core.buddy import order_blocks
 from ..models.decode import PagedLayout, cache_init, decode_step, prefill_step
 from ..models.transformer import build_layer_plans
@@ -89,19 +96,43 @@ class EngineStats:
 
 
 class ServingEngine:
+    # tier_policy name -> mm_tier program factory (None = kernel default)
+    TIER_PROGRAMS = {
+        "ebpf-tier": tier_damon_program,
+        "lru-tier": tier_lru_program,
+        "never-tier": tier_never_program,
+        "heat-tier": tier_heat_band_program,
+        "edge-tier": tier_edge_admission_program,
+        "default": None,
+    }
+    # 2-tier baselines: their demote target never passes tier 1 (ebpf-tier
+    # additionally gates on tier-1 free space alone), so on a deeper chain
+    # they strand tiers 2.. and reclaim degrades back to preemption while
+    # deep capacity sits free — reject the pairing instead of livelocking.
+    TWO_TIER_POLICIES = frozenset({"ebpf-tier", "lru-tier"})
+
     def __init__(self, cfg: ModelConfig, params: Pytree, layout: PagedLayout,
                  *, max_batch: int = 4, policy: str = "ebpf",
                  profile: Profile | None = None, hw: HWSpec | None = None,
                  khugepaged: bool = True, seed: int = 0,
                  cache_dtype=jnp.bfloat16,
-                 host_blocks: int = 0, tier_policy: str = "ebpf-tier",
+                 host_blocks: int = 0, tier_blocks=None,
+                 tier_policy: str = "ebpf-tier",
                  batch_faults: bool = True):
         self.cfg = cfg
         self.params = params
         self.layout = layout
         self.max_batch = max_batch
         self.policy = policy
-        self.tier_policy = tier_policy if host_blocks > 0 else None
+        # tier_blocks: spill-tier capacities walking down the chain — 1 pool
+        # = (host-DRAM,), 2 = (peer-HBM, host-DRAM), 3 = (peer-HBM,
+        # host-DRAM, NVMe).  host_blocks is the classic 2-pool shorthand.
+        if tier_blocks is None and host_blocks > 0:
+            tier_blocks = (host_blocks,)
+        self.tier_blocks = tuple(int(b) for b in tier_blocks) \
+            if tier_blocks else ()
+        tiered = bool(self.tier_blocks)
+        self.tier_policy = tier_policy if tiered else None
         # batch_faults=False keeps the pre-batching scalar fault path (one
         # policy invocation per fault) — the hot-path benchmark's baseline
         self.batch_faults = batch_faults
@@ -118,25 +149,30 @@ class ServingEngine:
         cost.block_bytes = layout.block_tokens * slab * 2 * max(1, n_attn)
 
         default_mode = {"never": "never", "never-prog": "never"}.get(policy, "thp")
-        if host_blocks > 0:
-            # tiered pool: HBM buddy + host-DRAM buddy; the device cache below
-            # is materialized over the COMBINED index space so tier crossings
-            # are ordinary block_copy moves
+        if tiered:
+            # tiered pool: HBM buddy + one buddy per spill tier; the device
+            # cache below is materialized over the COMBINED index space so
+            # tier crossings are ordinary block_copy moves
             self.mm = TieredMemoryManager(
-                layout.num_blocks, cost, host_blocks=host_blocks,
+                layout.num_blocks, cost,
+                tiers=default_tier_chain(hw, self.tier_blocks),
                 default_mode=default_mode, damon_seed=seed)
-            if tier_policy == "ebpf-tier":
-                self.mm.attach_tier_program(tier_damon_program())
-            elif tier_policy == "lru-tier":
-                self.mm.attach_tier_program(tier_lru_program())
-            elif tier_policy == "never-tier":
-                self.mm.attach_tier_program(tier_never_program())
-            elif tier_policy != "default":
+            if tier_policy not in self.TIER_PROGRAMS:
                 raise ValueError(f"unknown tier_policy {tier_policy!r}")
+            if len(self.tier_blocks) > 1 \
+                    and tier_policy in self.TWO_TIER_POLICIES:
+                raise ValueError(
+                    f"tier_policy {tier_policy!r} is a 2-tier baseline that "
+                    f"can never demote past tier 1; use 'heat-tier' or "
+                    f"'edge-tier' for a {len(self.tier_blocks) + 1}-tier "
+                    f"chain")
+            prog = self.TIER_PROGRAMS[tier_policy]
+            if prog is not None:
+                self.mm.attach_tier_program(prog())
         else:
             self.mm = MemoryManager(layout.num_blocks, cost,
                                     default_mode=default_mode, damon_seed=seed)
-        self._pool_blocks = layout.num_blocks + max(0, host_blocks)
+        self._pool_blocks = layout.num_blocks + sum(self.tier_blocks)
         self.mm.attach_reclaim_program(reclaim_lru_program())
         if policy == "ebpf":
             if profile is None:
@@ -163,7 +199,7 @@ class ServingEngine:
 
         self.khugepaged = (Khugepaged(self.mm, KhugepagedConfig())
                            if (khugepaged and policy == "ebpf") else None)
-        pool_layout = layout if host_blocks <= 0 else PagedLayout(
+        pool_layout = layout if not tiered else PagedLayout(
             num_blocks=self._pool_blocks, block_tokens=layout.block_tokens,
             max_blocks=layout.max_blocks)
         self.cache = cache_init(cfg, pool_layout, max_batch, cache_dtype)

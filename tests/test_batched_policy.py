@@ -378,6 +378,88 @@ class TestEngineInvocationAccounting:
         assert outs[True] == outs[False]
 
 
+class TestPredicatedUnrollBoundary:
+    """ROADMAP regression guards for the predicated-executor unroll budget.
+
+    1. The default 64-region Fig-1 program exceeds PRED_MAX_UNROLL and its
+       batch route DELIBERATELY falls back to the while+switch JIT — if a
+       future segmented unroll changes that, these tests pin the decisions.
+    2. Executor parity at EXACTLY the 512-insn boundary (and one step over),
+       so the backend switch can never silently change decisions.
+    """
+
+    @staticmethod
+    def _boundary_program(body_n=100, trips=5, pad=0):
+        """Unrolls to exactly 2 + trips*(body_n+1) + pad + 5 insns: a
+        verifier-bounded counting loop plus a ctx-dependent tail so
+        decisions vary per row."""
+        from repro.core import Asm
+        a = Asm()
+        a.movi("r4", 0)
+        a.movi("r3", trips)
+        a.label("loop")
+        for _ in range(body_n):
+            a.addi("r4", 1)
+        a.jnzdec("r3", "loop")
+        for _ in range(pad):
+            a.movi("r6", 0)
+        a.ldctx("r5", CTX.ADDR)
+        a.andi("r5", 3)
+        a.add("r4", "r5")
+        a.mov("r0", "r4")
+        a.exit()
+        return a.build(f"boundary_pad{pad}")
+
+    def test_default_fig1_program_falls_back_to_jit(self):
+        from repro.core.hooks import HOOK_TIER, PRED_MAX_UNROLL, HookRegistry
+        from repro.core.predicate import unroll
+        maps = MapRegistry()
+        m = ArrayMap(64)
+        striped_profile(blocks=256, nreg=8).load_into(m)
+        maps.register(m)
+        prog = ebpf_mm_program()           # full 64-region search loop
+        assert len(unroll(prog, maps)) > PRED_MAX_UNROLL, \
+            "the default Fig-1 program now fits the predicated budget — " \
+            "update the ROADMAP item and these guards"
+        reg = HookRegistry()
+        reg.attach(HOOK_FAULT, prog, maps)
+        rng = np.random.default_rng(11)
+        mat = _random_ctx_batch(rng, 8, nregions=8)
+        out = reg.run_batch(HOOK_FAULT, mat)
+        ap = reg._hooks[HOOK_FAULT]
+        assert ap.pred is None and ap.pred_unfit, \
+            "batch route must (deliberately) fall back to the JIT today"
+        assert ap.jit is not None
+        vm = PolicyVM(prog, maps)
+        assert [vm.run(row).ret for row in mat] == list(out), \
+            "the JIT fallback changed decisions"
+
+    def test_executor_parity_at_unroll_boundary(self):
+        from repro.core.hooks import PRED_MAX_UNROLL, HookRegistry
+        from repro.core.predicate import unroll
+        maps = MapRegistry()
+        at = self._boundary_program(pad=0)
+        over = self._boundary_program(pad=2)
+        assert len(unroll(at, maps)) == PRED_MAX_UNROLL
+        assert len(unroll(over, maps)) == PRED_MAX_UNROLL + 2
+        rng = np.random.default_rng(12)
+        mat = _random_ctx_batch(rng, 8)
+        for prog, wants_pred in ((at, True), (over, False)):
+            reg = HookRegistry()
+            reg.attach(HOOK_FAULT, prog, maps)
+            out = reg.run_batch(HOOK_FAULT, mat)
+            ap = reg._hooks[HOOK_FAULT]
+            assert (ap.pred is not None) == wants_pred, \
+                f"{prog.name}: wrong batch backend at the 512-insn boundary"
+            assert ap.pred_unfit == (not wants_pred)
+            vm = PolicyVM(prog, maps)
+            host = [vm.run(row).ret for row in mat]
+            assert host == list(out), \
+                f"{prog.name}: boundary backend changed decisions"
+            assert host == list(JitPolicy(prog, maps).run_batch(mat)), \
+                f"{prog.name}: interpreter != JIT at the boundary"
+
+
 class TestTierCtxCache:
     def _mk(self):
         mm = mk_mm(num_blocks=64, default="never", tiered=True, host=64)

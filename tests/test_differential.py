@@ -1,0 +1,373 @@
+"""Differential / property harness for the fault + tiering fast paths.
+
+A seeded random workload script (admissions, decode steps, completions,
+pressure spikes, async collapses) is generated ONCE per seed — fully
+state-independent, so the identical op sequence replays against every
+manager variant — and driven through:
+
+  * scalar-vs-batched fault paths (``ensure_mapped``/``ensure_range`` vs
+    ``fault_batch``/``fault_range``), asserting the two replicas stay
+    STEP-FOR-STEP identical (page tables, mapped sets, tier occupancy,
+    stats);
+  * untiered vs 2-tier vs 4-tier managers, asserting end-state invariants
+    after every step:
+      - no double-mapped device block, and each tier's buddy ``allocated``
+        map exactly covers that tier's mapped pages;
+      - the incremental block table and the mapping-metadata arrays agree
+        with a from-scratch rebuild of the page table;
+      - KV bytes survive every migration / compaction / collapse: a modeled
+        device pool applies the drained move lists and every value written
+        through a block table read back unchanged forever after;
+      - with a fault program attached, the batched replica issues at most
+        ONE ``HOOK_FAULT`` batch invocation per workload step (plus one per
+        OOM-relief retry), and never a scalar invocation.
+
+Failures print the generating seed (it is also part of the test id);
+re-run one case with e.g.
+``pytest "tests/test_differential.py::test_scalar_vs_batched[2tier-1]"``.
+Extra seeds: ``DIFF_SEEDS=7,8,9 make test-diff``.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+import pytest
+
+from repro.core import (HWSpec, MemoryManager, MMOutOfMemory, Profile,
+                        ProfileRegion, TieredMemoryManager,
+                        default_tier_chain, ebpf_mm_program, make_cost_model,
+                        tier_damon_program, tier_heat_band_program)
+from repro.core.buddy import order_blocks
+from repro.core.context import FaultKind
+from repro.core.hooks import HOOK_FAULT
+
+SEEDS = [0, 1, 2]
+if os.environ.get("DIFF_SEEDS"):
+    SEEDS += [int(s) for s in os.environ["DIFF_SEEDS"].split(",") if s]
+TOPOLOGIES = ["untiered", "2tier", "4tier"]
+
+HBM_BLOCKS = {"untiered": 96, "2tier": 64, "4tier": 64}
+VMA_MAX = 24
+
+
+def _profile() -> Profile:
+    return Profile("app", [
+        ProfileRegion(0, 8, (0, 150_000, 600_000, 0)),
+        ProfileRegion(8, VMA_MAX, (0, 0, 0, 0)),
+    ])
+
+
+def mk_manager(topology: str) -> MemoryManager:
+    hw = HWSpec()
+    cost = make_cost_model(hw, kv_heads=4, head_dim=64)
+    if topology == "untiered":
+        mm = MemoryManager(HBM_BLOCKS[topology], cost, default_mode="thp")
+    elif topology == "2tier":
+        mm = TieredMemoryManager(HBM_BLOCKS[topology], cost, host_blocks=128,
+                                 default_mode="thp")
+        mm.attach_tier_program(tier_damon_program())
+    elif topology == "4tier":
+        mm = TieredMemoryManager(
+            HBM_BLOCKS[topology], cost,
+            tiers=default_tier_chain(hw, (32, 64, 32)), default_mode="thp")
+        mm.attach_tier_program(tier_heat_band_program())
+    else:  # pragma: no cover
+        raise ValueError(topology)
+    mm.load_profile(_profile())
+    mm.attach_fault_program(ebpf_mm_program(max_regions=8))
+    return mm
+
+
+# ---------------------------------------------------------------- workload
+@dataclass
+class Step:
+    admits: list = field(default_factory=list)     # [(pid, vma, prompt)]
+    completes: list = field(default_factory=list)  # [pid]
+    decodes: list = field(default_factory=list)    # [pid] faulting this step
+    heats: dict = field(default_factory=dict)      # pid -> per-block heat
+    collapses: list = field(default_factory=list)  # [(pid, addr, order)]
+    spike: int = 0                                 # blocks of pressure relief
+
+
+def make_script(seed: int, nsteps: int = 36) -> list[Step]:
+    """A state-independent op script: the same admissions/decodes/completions
+    replay against every manager variant, whatever its internal state."""
+    rng = np.random.default_rng(seed)
+    steps: list[Step] = []
+    live: dict[int, tuple[int, int]] = {}   # pid -> (vma, pos)
+    next_pid = 1
+    for _ in range(nsteps):
+        s = Step()
+        # completions: each live pid completes with small probability, or
+        # when it has filled its VMA
+        for pid, (vma, pos) in sorted(live.items()):
+            if pos >= vma or (pos > 2 and rng.random() < 0.06):
+                s.completes.append(pid)
+        for pid in s.completes:
+            del live[pid]
+        # admissions: keep up to 6 sequences live
+        while len(live) < 6 and rng.random() < 0.5:
+            vma = int(rng.integers(8, VMA_MAX + 1))
+            prompt = int(rng.integers(4, min(12, vma) + 1))
+            s.admits.append((next_pid, vma, prompt))
+            live[next_pid] = (vma, prompt)
+            next_pid += 1
+        # decode: every live pid that still has room crosses one boundary
+        for pid, (vma, pos) in sorted(live.items()):
+            if pos < vma:
+                s.decodes.append(pid)
+                live[pid] = (vma, pos + 1)
+        # per-pid attention heat over the blocks mapped so far (drives DAMON
+        # and therefore every tier decision — identical across replicas)
+        for pid, (vma, pos) in sorted(live.items()):
+            heat = rng.random(pos) * 3.0
+            heat[rng.random(pos) < 0.4] = 0.0
+            s.heats[pid] = heat
+        # occasional async collapse attempt (khugepaged analogue)
+        if live and rng.random() < 0.2:
+            pid = int(sorted(live)[int(rng.integers(0, len(live)))])
+            vma, pos = live[pid]
+            s.collapses.append((pid, int(rng.integers(0, vma)), 1))
+        # pressure spike: force a reclaim pass
+        if rng.random() < 0.15:
+            s.spike = int(rng.integers(4, 17))
+        steps.append(s)
+    return steps
+
+
+# ------------------------------------------------------------ replica state
+class Replica:
+    """One manager + a modeled device pool + the KV content oracle."""
+
+    def __init__(self, topology: str, batched: bool) -> None:
+        self.mm = mk_manager(topology)
+        self.batched = batched
+        self.tiered = isinstance(self.mm, TieredMemoryManager)
+        n = self.mm.device_pool_blocks if self.tiered \
+            else self.mm.buddy.num_blocks
+        self.pool = np.full(n, -1, dtype=np.int64)
+        self.expected: dict[tuple[int, int], int] = {}
+        self.vma: dict[int, int] = {}
+        self._stamp = 0
+        self.relief_events = 0
+
+    # ---- faults with deterministic OOM relief ----
+    def _relieve(self, need: int) -> None:
+        self.relief_events += 1
+        if self.tiered and self.mm.demote_cold_global(need) > 0:
+            return
+        # spill exhausted (or untiered): unmap the largest process's tail
+        victim = max(self.mm.procs,
+                     key=lambda p: (len(self.mm.procs[p].page_table), -p))
+        st = self.mm.procs[victim]
+        freed = 0
+        for lg in sorted(st.page_table, reverse=True):
+            if freed >= need:
+                break
+            freed += order_blocks(st.page_table[lg].order)
+            for b in range(lg, lg + order_blocks(st.page_table[lg].order)):
+                self.expected.pop((victim, b), None)
+            self.mm.unmap(victim, lg)
+
+    def _with_relief(self, fn, need: int) -> None:
+        for _ in range(12):
+            try:
+                fn()
+                return
+            except MMOutOfMemory:
+                self._relieve(need)
+        raise AssertionError("workload does not fit any tier combination")
+
+    def admit(self, pid: int, vma: int, prompt: int) -> None:
+        self.mm.create_process(pid, app="app", vma_blocks=vma)
+        self.vma[pid] = vma
+        if self.batched:
+            self._with_relief(
+                lambda: self.mm.fault_range(pid, 0, prompt), prompt)
+        else:
+            self._with_relief(
+                lambda: self.mm.ensure_range(pid, 0, prompt), prompt)
+
+    def decode(self, pids: list[int]) -> None:
+        reqs = []
+        for pid in pids:
+            st = self.mm.procs[pid]
+            unmapped = [a for a in range(st.vma_end)
+                        if a not in st.mapped]
+            if unmapped:
+                reqs.append((pid, unmapped[0], FaultKind.FIRST_TOUCH))
+        if not reqs:
+            return
+        if self.batched:
+            self._with_relief(lambda: self.mm.fault_batch(reqs), len(reqs))
+        else:
+            def scalar():
+                for pid, addr, kind in reqs:
+                    self.mm.ensure_mapped(pid, addr, kind)
+            self._with_relief(scalar, len(reqs))
+
+    def complete(self, pid: int) -> None:
+        self.mm.free_process(pid)
+        self.vma.pop(pid)
+        self.expected = {k: v for k, v in self.expected.items()
+                         if k[0] != pid}
+
+    # ---- device pool + KV oracle ----
+    def flush_and_write(self) -> None:
+        """Apply this step's drained moves (sequentially — the engine's
+        chain-safe batching is equivalent by construction), then write a
+        fresh sentinel into every newly mapped block."""
+        for s, d, o in self.mm.drain_moves():
+            n = order_blocks(o)
+            self.pool[d:d + n] = self.pool[s:s + n]
+        for pid in sorted(self.mm.procs):
+            table = self.mm.block_table(pid, self.vma[pid])
+            for lg in sorted(self.mm.procs[pid].mapped):
+                if (pid, lg) not in self.expected:
+                    self._stamp += 1
+                    val = self._stamp * 1000 + pid
+                    self.pool[table[lg]] = val
+                    self.expected[(pid, lg)] = val
+
+    # ---- invariants ----
+    def check_invariants(self, ctx: str) -> None:
+        mm = self.mm
+        pools = mm.pools if self.tiered else [mm.buddy]
+        base = [0]
+        for p in pools[:-1]:
+            base.append(base[-1] + p.num_blocks)
+        # 1) no double-mapped device block; buddy allocation maps exactly
+        #    cover the mapped pages of their tier
+        seen: set[int] = set()
+        per_tier: list[set] = [set() for _ in pools]
+        for pid, st in mm.procs.items():
+            for m in st.page_table.values():
+                n = order_blocks(m.order)
+                span = set(range(base[m.tier] + m.phys_start,
+                                 base[m.tier] + m.phys_start + n))
+                assert not (span & seen), \
+                    f"{ctx}: double-mapped device block(s) {span & seen}"
+                seen |= span
+                per_tier[m.tier].update(
+                    range(m.phys_start, m.phys_start + n))
+        for t, p in enumerate(pools):
+            allocd = set()
+            for start, order in p.allocated.items():
+                allocd.update(range(start, start + order_blocks(order)))
+            assert allocd == per_tier[t], \
+                f"{ctx}: tier {t} buddy/pagetable occupancy mismatch"
+            p.check_invariants()
+        # 2) incremental block table + metadata arrays == reference rebuild
+        for pid, st in mm.procs.items():
+            ref = np.full(self.vma[pid], -1, dtype=np.int32)
+            for m in st.page_table.values():
+                n = order_blocks(m.order)
+                hi = min(m.logical_start + n, self.vma[pid])
+                dev = mm._device_index(m)
+                for i in range(m.logical_start, hi):
+                    ref[i] = dev + (i - m.logical_start)
+            np.testing.assert_array_equal(
+                mm.block_table(pid, self.vma[pid]), ref,
+                err_msg=f"{ctx}: pid {pid} incremental table diverged")
+            starts, _sizes, orders, tiers, dev = mm._mapping_arrays(st)
+            ms = st.mappings_sorted()
+            assert list(starts) == [m.logical_start for m in ms], ctx
+            assert list(orders) == [m.order for m in ms], ctx
+            assert list(tiers) == [m.tier for m in ms], ctx
+            assert list(dev) == [mm._device_index(m) for m in ms], ctx
+        # 3) KV bytes survive every migration/compaction/collapse
+        for (pid, lg), val in self.expected.items():
+            table = self.mm.block_table(pid, self.vma[pid])
+            assert self.pool[table[lg]] == val, (
+                f"{ctx}: KV bytes lost for pid {pid} block {lg} "
+                f"(expected {val}, found {self.pool[table[lg]]})")
+
+    def state(self):
+        """Cross-replica comparable summary."""
+        tables = {pid: sorted((m.logical_start, m.phys_start, m.order, m.tier)
+                              for m in st.page_table.values())
+                  for pid, st in self.mm.procs.items()}
+        mapped = {pid: sorted(st.mapped)
+                  for pid, st in self.mm.procs.items()}
+        occ = [sorted(p.allocated.items())
+               for p in (self.mm.pools if self.tiered else [self.mm.buddy])]
+        return tables, mapped, occ
+
+
+def run_step(r: Replica, s: Step) -> None:
+    calls0 = r.mm.hooks.calls[HOOK_FAULT]
+    batch0 = r.mm.hooks.batch_calls[HOOK_FAULT]
+    relief0 = r.relief_events
+    for pid in s.completes:
+        if pid in r.vma:
+            r.complete(pid)
+    for pid, vma, prompt in s.admits:
+        r.admit(pid, vma, prompt)
+    r.decode([p for p in s.decodes if p in r.vma])
+    for pid, heat in s.heats.items():
+        if pid in r.vma:
+            r.mm.record_access(pid, heat)
+    for pid, addr, order in s.collapses:
+        if pid in r.vma and addr < r.vma[pid]:
+            r.mm.collapse(pid, addr, order)
+    if s.spike and r.tiered:
+        r.mm.demote_cold_global(s.spike)
+    if r.tiered:
+        r.mm.promotion_scan()
+    r.mm.tick()
+    r.flush_and_write()
+    if r.batched:
+        # every fault invocation this step was a batch one (never the scalar
+        # run() entry), and admissions + decode each used at most one batch
+        # per attempt (one extra attempt per OOM relief)
+        dcalls = r.mm.hooks.calls[HOOK_FAULT] - calls0
+        dbatch = r.mm.hooks.batch_calls[HOOK_FAULT] - batch0
+        attempts = 1 + len(s.admits) + (r.relief_events - relief0)
+        assert dcalls == dbatch, "scalar HOOK_FAULT invocation on batch path"
+        assert dbatch <= attempts, \
+            f"{dbatch} batch invocations for {attempts} fault entries"
+
+
+@pytest.mark.differential
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_scalar_vs_batched(topology, seed):
+    """The acceptance matrix: for every topology and seed, the batched fault
+    path replays the scalar reference path step-for-step, and both replicas
+    hold every structural + KV invariant after every step."""
+    script = make_script(seed)
+    scalar = Replica(topology, batched=False)
+    batched = Replica(topology, batched=True)
+    for i, s in enumerate(script):
+        tag = f"seed={seed} topology={topology} step={i}"
+        run_step(scalar, s)
+        run_step(batched, s)
+        scalar.check_invariants(f"{tag} scalar")
+        batched.check_invariants(f"{tag} batched")
+        assert scalar.state() == batched.state(), \
+            f"{tag}: scalar and batched replicas diverged"
+    assert scalar.mm.stats.snapshot() == batched.mm.stats.snapshot(), \
+        f"seed={seed} topology={topology}: stats diverged"
+    assert scalar.mm.stats.faults > 0
+
+
+@pytest.mark.differential
+@pytest.mark.parametrize("seed", SEEDS)
+def test_tier_topologies_complete_same_workload(seed):
+    """The same script must be satisfiable by every topology (reliefs differ,
+    data structures stay sound) — and deeper topologies must never need MORE
+    unmap-style relief than the untiered pool."""
+    script = make_script(seed)
+    reps = {t: Replica(t, batched=True) for t in TOPOLOGIES}
+    for i, s in enumerate(script):
+        for t, r in reps.items():
+            run_step(r, s)
+            r.check_invariants(f"seed={seed} topology={t} step={i}")
+    for t, r in reps.items():
+        assert r.mm.stats.faults > 0, f"{t}: workload never faulted"
+    # tiered replicas absorb pressure by demotion, not by dropping KV
+    assert reps["2tier"].mm.stats.demotions > 0
+    assert reps["4tier"].mm.stats.demotions > 0

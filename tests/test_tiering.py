@@ -118,7 +118,10 @@ class TestTierPrograms:
             page_tier=kw.get("tier", 0), page_order=kw.get("order", 0),
             page_age=kw.get("age", 0), page_heat=kw.get("heat", 0),
             migrate_setup_ns=kw.get("setup", 2000),
-            migrate_ns_per_block=kw.get("mig", 2208))
+            migrate_ns_per_block=kw.get("mig", 2208),
+            ntiers=kw.get("ntiers", 2),
+            mig_cum_setup=(0,) + (kw.get("setup", 2000),) * 3,
+            mig_cum_ns=(0,) + (kw.get("mig", 2208),) * 3)
         return fc.vector()
 
     def test_damon_admission_control(self):
@@ -172,10 +175,12 @@ class TestReclaimPaths:
 
     def test_demote_cold_global_spans_processes(self):
         mm = mk_tmm(hbm=32, host=64)
-        mm.attach_tier_program(tier_damon_program())
         for pid in (1, 2):
             mm.create_process(pid, vma_blocks=16)
             mm.ensure_range(pid, 0, 16)
+        # attach AFTER the prefill so prefill-time placement stays out of the
+        # picture and the scan alone relieves the pressure
+        mm.attach_tier_program(tier_damon_program())
         freed = mm.demote_cold_global(24, prefer_pid=1)
         assert freed >= 24
         # the preferred victim's pages go first
@@ -259,3 +264,17 @@ class TestEngineTiering:
                         max_steps=60)
         assert eng.mm.stats.demotions == 0
         assert eng.stats.preemptions > 0
+
+    def test_two_tier_baselines_rejected_on_deep_chains(self, setup):
+        """ebpf-tier / lru-tier demote targets never pass tier 1, so pairing
+        them with a deeper chain would strand tiers 2.. and fall back to
+        preemption with free deep capacity — the engine refuses the combo."""
+        cfg, params, layout = setup
+        for policy in ("ebpf-tier", "lru-tier"):
+            with pytest.raises(ValueError, match="2-tier baseline"):
+                ServingEngine(cfg, params, layout, policy="never",
+                              tier_blocks=(16, 96, 80), tier_policy=policy)
+        # the same capacities with an N-tier policy are accepted
+        eng = ServingEngine(cfg, params, layout, policy="never",
+                            tier_blocks=(16, 96, 80), tier_policy="heat-tier")
+        assert eng.mm.ntiers == 4
