@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-diff bench-smoke bench bench-json
+.PHONY: test test-diff bench-smoke bench bench-json clean-cache
 
 # tier-1 verify: the gate every PR must keep green (collects the
 # differential suite too — test-diff is the focused entry point)
@@ -32,3 +32,10 @@ bench:
 # policy and batch size) — the perf trajectory tracked from PR 2 onward
 bench-json:
 	$(PY) -m benchmarks.hotpath_bench --json BENCH_hotpath.json
+
+# drop the cross-session compiler-artifact cache (pickled lowering/unroll
+# artifacts + persisted XLA executables under .cache/); everything rebuilds
+# cold on the next run — use after suspicious cache behavior or to measure
+# cold-start costs.  REPRO_CACHE_DIR overrides the location; =off disables.
+clean-cache:
+	rm -rf .cache

@@ -24,6 +24,18 @@ policy-invocations/step, modeled mgmt_ns and wall_host_s.  ``--json`` writes
 scalar->batched speedup summary, so the perf trajectory is tracked from this
 PR onward.
 
+Two pipeline lanes ride along since the unified-compiler PR:
+
+  * ``executors`` — per-backend batch decision latency for the DEFAULT
+    64-region Fig-1 program (900 unrolled insns): host interpreter loop vs
+    while+switch JIT vs the segmented predicated chain the hook registry
+    now selects (this program used to overflow the 512-insn predicated
+    budget and fall back to the JIT);
+  * ``cache`` — engine-warmup cost with a cold vs warm cross-session
+    artifact cache (fresh HookRegistry + ArtifactCache over one directory,
+    twice): the warm session reuses the pickled unroll + the persisted XLA
+    executables.
+
 Run:  PYTHONPATH=src python -m benchmarks.hotpath_bench [--json FILE]
 """
 
@@ -238,6 +250,123 @@ class _Cell:
         }
 
 
+# ---------------------------------------------------------------------------
+# Pipeline lanes: executor selection + warm/cold artifact cache
+# ---------------------------------------------------------------------------
+
+EXEC_REPEATS = 30
+
+
+def _fig1_default_setup(max_regions: int = 64):
+    """The REALISTIC fault-hook load: the default 64-region Fig-1 program
+    over a loaded profile — the case that used to fall off the predicated
+    fast path (900 unrolled insns > 512).  ``max_regions`` shrinks the
+    verified search bound for quick (smoke) lanes."""
+    from repro.core import ArrayMap, MapRegistry, PolicyVM
+    maps = MapRegistry()
+    m = ArrayMap(64 * 6, name="profile:app")
+    _profile(256).load_into(m)
+    maps.register(m)
+    prog = ebpf_mm_program(max_regions=max_regions)
+    rng = np.random.default_rng(7)
+    mats = {}
+    for b in BATCH_SIZES:
+        rows = []
+        mm = _mk_mm("ebpf", 1, 256)
+        mm.ensure_range(1, 0, 8)
+        for addr in rng.integers(8, 256, b):
+            rows.append(mm._build_ctx(mm.procs[1], int(addr),
+                                      FaultKind.FIRST_TOUCH))
+        mats[b] = np.stack(rows)
+    return prog, maps, mats, PolicyVM(prog, maps)
+
+
+def _median_time(fn, repeats: int) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def collect_executors(*, smoke: bool = False) -> dict:
+    """Per-backend decision latency for the default Fig-1 program, plus
+    which backend the hook registry actually selects."""
+    from repro.core import JitPolicy
+    from repro.core.hooks import HOOK_FAULT, HookRegistry
+    from repro.core.predicate import PredicatedPolicy
+    prog, maps, mats, vm = _fig1_default_setup()
+    batch_sizes = (4,) if smoke else BATCH_SIZES
+    repeats = 8 if smoke else EXEC_REPEATS
+    reg = HookRegistry()
+    reg.attach(HOOK_FAULT, prog, maps)
+    reg.run_batch(HOOK_FAULT, mats[batch_sizes[0]])     # build + compile
+    ap = reg._hooks[HOOK_FAULT]
+    selected = (f"segmented-predicated({ap.pred.num_segments} segments)"
+                if ap.pred is not None else "jit")
+    seg = ap.pred
+    jit = JitPolicy(prog, maps)
+    out = {"program": "ebpf_mm(max_regions=64)",
+           "unrolled_insns": seg.unrolled_len if seg else None,
+           "selected_backend": selected, "lanes": []}
+    for b in batch_sizes:
+        mat = mats[b]
+        lanes = {
+            "interpreter": lambda: [vm.run(r).ret for r in mat],
+            "jit_while_switch": lambda: jit.run_batch(mat),
+        }
+        if seg is not None:
+            lanes["segmented_predicated"] = lambda: seg.run_batch(mat)
+        for name, fn in lanes.items():
+            fn()                                        # warm compile/caches
+            t = _median_time(fn, repeats)
+            out["lanes"].append({
+                "backend": name, "batch": b,
+                "us_per_batch": t * 1e6,
+                "us_per_decision": t * 1e6 / b,
+            })
+    return out
+
+
+def collect_cache(*, smoke: bool = False) -> dict:
+    """Warm vs cold engine-warmup: two 'sessions' (fresh HookRegistry +
+    ArtifactCache) over one cache directory; the build+first-batch time is
+    the engine-construction cost the cross-session cache amortizes.
+    Smoke mode shrinks the program's verified search bound so the cold
+    compile stays quick."""
+    import shutil
+    import tempfile
+    import jax
+    from repro.core.cache import ArtifactCache
+    from repro.core.hooks import HOOK_FAULT, HookRegistry
+    prog, maps, mats, _vm = _fig1_default_setup(
+        max_regions=16 if smoke else 64)
+    mat = mats[BATCH_SIZES[0]]
+    root = tempfile.mkdtemp(prefix="repro-bench-cache-")
+    # enable_xla_cache flips the PROCESS-GLOBAL jax compilation-cache dir;
+    # park it on the bench tmpdir only for the duration of the lane
+    prev_dir = jax.config.jax_compilation_cache_dir
+    try:
+        laps = []
+        for session in ("cold", "warm"):
+            cache = ArtifactCache(root)
+            reg = HookRegistry(cache=cache)
+            reg.attach(HOOK_FAULT, prog, maps)
+            t0 = time.perf_counter()
+            reg.run_batch(HOOK_FAULT, mat)
+            laps.append({"session": session,
+                         "build_plus_first_batch_s":
+                             time.perf_counter() - t0,
+                         "unroll_misses": cache.stats["unroll_misses"]})
+        cold, warm = (laps[0]["build_plus_first_batch_s"],
+                      laps[1]["build_plus_first_batch_s"])
+        return {"sessions": laps, "warm_speedup": cold / warm}
+    finally:
+        jax.config.update("jax_compilation_cache_dir", prev_dir)
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def collect(*, smoke: bool = False) -> dict:
     batch_sizes = (4,) if smoke else BATCH_SIZES
     steps = 48 if smoke else STEPS
@@ -263,7 +392,9 @@ def collect(*, smoke: bool = False) -> dict:
             speedup[f"{policy}_b{b}"] = (pr["batched"]["steps_per_s"]
                                          / pr["scalar"]["steps_per_s"])
     return {"bench": "hotpath", "steps_per_cell": steps, "cells": cells,
-            "speedup_batched_over_scalar": speedup}
+            "speedup_batched_over_scalar": speedup,
+            "executors": collect_executors(smoke=smoke),
+            "cache": collect_cache(smoke=smoke)}
 
 
 def main(smoke: bool = False) -> list[str]:
@@ -280,6 +411,13 @@ def main(smoke: bool = False) -> list[str]:
             f"mgmt_us={c['mgmt_ns'] / 1e3:.0f}")
     for key, s in out["speedup_batched_over_scalar"].items():
         lines.append(f"hotpath_speedup_{key},{s:.2f},batched_over_scalar")
+    for lane in out["executors"]["lanes"]:
+        lines.append(
+            f"executor_{lane['backend']}_b{lane['batch']},"
+            f"{lane['us_per_batch']:.1f},"
+            f"us_per_decision={lane['us_per_decision']:.1f}")
+    lines.append(f"cache_warm_speedup,{out['cache']['warm_speedup']:.2f},"
+                 f"build_plus_first_batch cold/warm")
     return lines
 
 
@@ -304,3 +442,12 @@ if __name__ == "__main__":
               f"inv_per_step={c['policy_invocations_per_step']:.2f}")
     for key, s in result["speedup_batched_over_scalar"].items():
         print(f"hotpath_speedup_{key},{s:.2f},batched_over_scalar")
+    ex = result["executors"]
+    print(f"# default Fig-1: {ex['unrolled_insns']} unrolled insns -> "
+          f"{ex['selected_backend']}")
+    for lane in ex["lanes"]:
+        print(f"executor_{lane['backend']}_b{lane['batch']},"
+              f"{lane['us_per_batch']:.1f},"
+              f"us_per_decision={lane['us_per_decision']:.1f}")
+    print(f"cache_warm_speedup,{result['cache']['warm_speedup']:.2f},"
+          f"build_plus_first_batch cold/warm")

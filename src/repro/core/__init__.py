@@ -2,9 +2,13 @@
 
 The paper's contribution as a composable library:
 
-  * :mod:`isa` / :mod:`verifier` / :mod:`vm` / :mod:`jit` — the eBPF-analogue
-    policy VM: restricted bytecode, load-time verifier, host interpreter and
-    an XLA-vectorized batch executor.
+  * :mod:`isa` / :mod:`verifier` / :mod:`lower` / :mod:`vm` / :mod:`jit` /
+    :mod:`predicate` — the eBPF-analogue policy pipeline: restricted
+    bytecode, load-time verifier, ONE shared lowering pass (flat IR with
+    absolute targets + resolved map slots) consumed by the host interpreter,
+    the while+switch XLA JIT and the segmented predicated batch executor.
+  * :mod:`cache` — cross-session compiler-artifact cache under ``.cache/``
+    (pickled lowering/unroll artifacts + persisted XLA executables).
   * :mod:`maps` / :mod:`profiles` — eBPF maps and the userspace profile format.
   * :mod:`damon` — access monitoring with adaptive regions (benefit signal).
   * :mod:`cost` — calibrated promotion cost (zeroing + compaction) and the
@@ -19,6 +23,7 @@ The paper's contribution as a composable library:
 """
 
 from .buddy import BuddyAllocator, BuddyError, BuddyStats, order_blocks
+from .cache import ArtifactCache, artifact_cache
 from .context import (CTX, CTX_LEN, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
                       POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP, FaultContext,
                       FaultKind)
@@ -29,6 +34,8 @@ from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
 from .isa import Asm, Insn, Op, Program
 from .jit import JitPolicy, compile_program
 from .khugepaged import Khugepaged, KhugepagedConfig
+from .lower import (LIns, LoweredProgram, lower, segment_code,
+                    unroll_lowered)
 from .maps import ArrayMap, MapRegistry
 from .mm import (FaultResult, MemoryManager, MMError, MMOutOfMemory, MMStats,
                  PageMapping, ProcessState)

@@ -1,0 +1,130 @@
+"""Cross-session compiler-artifact cache for the policy pipeline.
+
+Engine construction used to pay the full pipeline on every process start:
+re-verify, re-unroll (the 64-region Fig-1 flattening alone walks ~900
+lowered insns), re-trace and re-XLA-compile every batch bucket.  None of
+that work depends on anything but the program bytes and the compilation
+shapes, so it is cached across sessions under ``.cache/`` (gitignored;
+``make clean-cache`` wipes it):
+
+  * **lowering/unroll artifacts** — the flattened lowered IR + segment cut
+    points, pickled per :meth:`LoweredProgram.digest` — a key covering the
+    instruction stream, the map-registry shape contract (slot count +
+    capacities), the ctx layout width (``CTX_LEN`` — which is how a tier-
+    topology/struct change invalidates entries) and the IR version;
+  * **XLA executables** — jax's persistent compilation cache, pointed at
+    ``.cache/xla``.  Its fingerprint covers the traced computation, which
+    is where the remaining key axes live: the BATCH BUCKET (each padded
+    batch shape is its own entry) and the map capacities.
+
+Environment: ``REPRO_CACHE_DIR`` overrides the root (default ``.cache`` in
+the working directory); ``REPRO_CACHE_DIR=0`` (or ``off``) disables disk
+persistence entirely — everything still works, just cold every session.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import tempfile
+from pathlib import Path
+
+from .lower import LoweredProgram, unroll_lowered
+
+_DISABLED = ("0", "off", "none", "")
+
+
+class ArtifactCache:
+    """Two-level (in-process dict, on-disk pickle) cache for lowered and
+    unrolled program artifacts, plus the XLA persistent-cache hookup."""
+
+    def __init__(self, root: str | os.PathLike | None = None) -> None:
+        if root is None:
+            env = os.environ.get("REPRO_CACHE_DIR")
+            if env is not None and env.lower() in _DISABLED:
+                root = None
+            else:
+                root = env or ".cache"
+        self.root = Path(root) if root else None
+        self._unrolled: dict[str, tuple] = {}   # in-proc, by program digest
+        self._xla_enabled = False
+        self.stats = {"unroll_disk_hits": 0, "unroll_hits": 0,
+                      "unroll_misses": 0}
+
+    @property
+    def enabled(self) -> bool:
+        return self.root is not None
+
+    # ------------------------------------------------------------- xla cache
+    def enable_xla_cache(self) -> None:
+        """Point jax's persistent compilation cache at ``<root>/xla`` so the
+        compiled policy executables (per program x batch bucket) survive the
+        process.  Idempotent; silently a no-op when persistence is disabled
+        or the jax build lacks the knobs."""
+        if not self.enabled or self._xla_enabled:
+            return
+        self._xla_enabled = True
+        try:
+            import jax
+            (self.root / "xla").mkdir(parents=True, exist_ok=True)
+            jax.config.update("jax_compilation_cache_dir",
+                              str(self.root / "xla"))
+            # policy programs are tiny and compile fast — cache them anyway
+            jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+            jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+        except Exception:       # pragma: no cover - older jax knobs
+            pass
+
+    # ------------------------------------------------------------ lowering
+    def unrolled(self, lp: LoweredProgram) -> tuple:
+        """``(code, cuts)`` for ``lp`` — memoized in-process and persisted
+        on disk keyed by the program digest.  Raises ``ValueError`` (not
+        cached) when the flattened form exceeds the pipeline limit."""
+        key = lp.digest()
+        hit = self._unrolled.get(key)
+        if hit is not None:
+            self.stats["unroll_hits"] += 1
+            return hit
+        art = self._read(f"unroll-{key}")
+        if art is not None:
+            self.stats["unroll_hits"] += 1
+            self.stats["unroll_disk_hits"] += 1
+            self._unrolled[key] = art
+            return art
+        self.stats["unroll_misses"] += 1
+        art = unroll_lowered(lp)
+        self._unrolled[key] = art
+        self._write(f"unroll-{key}", art)
+        return art
+
+    # ---------------------------------------------------------------- disk
+    def _path(self, name: str) -> Path:
+        return self.root / "ebpf" / f"{name}.pkl"
+
+    def _read(self, name: str):
+        if not self.enabled:
+            return None
+        try:
+            with open(self._path(name), "rb") as f:
+                return pickle.load(f)
+        except (OSError, pickle.UnpicklingError, EOFError, AttributeError,
+                ImportError, IndexError):
+            return None     # missing/corrupt/stale artifact -> recompute
+
+    def _write(self, name: str, obj) -> None:
+        if not self.enabled:
+            return
+        try:
+            path = self._path(name)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(obj, f)
+            os.replace(tmp, path)   # atomic: readers never see partials
+        except OSError:             # read-only fs etc: stay in-memory only
+            pass
+
+
+# The process-wide default instance every HookRegistry uses unless handed a
+# private one (the warm/cold benchmark lanes do, to isolate directories).
+artifact_cache = ArtifactCache()

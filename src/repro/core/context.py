@@ -94,7 +94,14 @@ class CTX(enum.IntEnum):
     MIG_CUM_NS_T1 = 52
     MIG_CUM_NS_T2 = 53
     MIG_CUM_NS_T3 = 54
-    CTX_LEN = 55             # number of fields; keep last
+    # Within-batch free-list reservation: base blocks the EARLIER rows of the
+    # same fault batch may consume (upper bound: each earlier pending fault
+    # takes at most 4^fault_max_order blocks).  Budget-aware programs subtract
+    # this from FREE_BLOCKS_* / add it to MEM_PRESSURE reasoning so they see
+    # within-batch grants instead of batch-start buddy state.  Always 0 on the
+    # scalar path (a scalar fault has no earlier grants to account for).
+    BATCH_RESERVED = 55
+    CTX_LEN = 56             # number of fields; keep last
 
 
 CTX_LEN = int(CTX.CTX_LEN)
@@ -143,6 +150,7 @@ class FaultContext:
     tier_total: tuple[int, int, int, int] = (0, 0, 0, 0)
     mig_cum_setup: tuple[int, int, int, int] = (0, 0, 0, 0)
     mig_cum_ns: tuple[int, int, int, int] = (0, 0, 0, 0)
+    batch_reserved: int = 0
 
     def vector(self) -> np.ndarray:
         v = np.zeros(CTX_LEN, dtype=np.int64)
@@ -181,6 +189,7 @@ class FaultContext:
         v[CTX.MIG_CUM_SETUP_T0:CTX.MIG_CUM_SETUP_T0 + MAX_TIERS] = \
             self.mig_cum_setup
         v[CTX.MIG_CUM_NS_T0:CTX.MIG_CUM_NS_T0 + MAX_TIERS] = self.mig_cum_ns
+        v[CTX.BATCH_RESERVED] = self.batch_reserved
         return v
 
 

@@ -14,6 +14,7 @@ from typing import Callable
 
 import numpy as np
 
+from .context import CTX_LEN
 from .isa import Program
 from .maps import MapRegistry
 from .vm import PolicyVM
@@ -28,8 +29,13 @@ KNOWN_HOOKS = (HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER)
 # Batch-execution backend selection: the predicated compiler (unroll +
 # if-conversion, straight-line masked vector ops) dispatches in O(unrolled
 # length) with NO per-step control flow — far cheaper than the while+switch
-# JIT for the small batches a decode step produces — but its compile time
-# grows with the unroll, so it is only used when the unrolled program fits.
+# JIT for the small batches a decode step produces.  XLA compile time grows
+# superlinearly with straight-line length, so programs whose unroll exceeds
+# this budget are SPLIT into predicated segments of at most this many insns
+# chained by a dispatch loop (see core.predicate) — the 64-region Fig-1
+# profile (900 insns) takes the fast path as 2 segments instead of falling
+# back to the while+switch JIT.  The JIT remains only for programs whose
+# flattening exceeds core.lower.MAX_UNROLLED entirely.
 PRED_MAX_UNROLL = 512
 
 # Batches are padded up to power-of-two buckets so XLA compiles one variant
@@ -41,13 +47,16 @@ PAD_MIN = 4
 class AttachedProgram:
     program: Program
     vm: PolicyVM
-    jit: object | None = None       # JitPolicy, lazily built for batch paths
-    pred: object | None = None      # PredicatedPolicy, preferred when small
-    pred_unfit: bool = False
+    jit: object | None = None       # JitPolicy, the deep-fallback batch path
+    pred: object | None = None      # PredicatedPolicy (segmented), default
+    pred_unfit: bool = False        # flattening exceeded lower.MAX_UNROLLED
 
 
 class HookRegistry:
-    def __init__(self) -> None:
+    def __init__(self, cache=None) -> None:
+        # compiler-artifact cache (cross-session lowering/unroll pickles +
+        # the XLA persistent cache); None = the process-wide default
+        self.cache = cache
         self._hooks: dict[str, AttachedProgram | None] = {h: None for h in KNOWN_HOOKS}
         # decisions evaluated (one per ctx row — a batch of N counts N)
         self.invocations: dict[str, int] = {h: 0 for h in KNOWN_HOOKS}
@@ -81,32 +90,59 @@ class HookRegistry:
         self.calls[hook] += 1
         return ap.vm.run(ctx_vec).ret
 
+    def _artifact_cache(self):
+        if self.cache is None:
+            from .cache import artifact_cache
+            self.cache = artifact_cache
+        return self.cache
+
     def _batch_backend(self, ap: AttachedProgram):
         if ap.pred is None and not ap.pred_unfit:
+            cache = self._artifact_cache()
+            cache.enable_xla_cache()
             try:
-                from .predicate import PredicatedPolicy, unroll
-                code = unroll(ap.program, ap.vm.maps)
-                if len(code) <= PRED_MAX_UNROLL:
-                    ap.pred = PredicatedPolicy(ap.program, ap.vm.maps, code)
-                else:
-                    ap.pred_unfit = True
+                from .predicate import PredicatedPolicy
+                code, cuts = cache.unrolled(ap.vm.lowered)
+                ap.pred = PredicatedPolicy(ap.vm.lowered, ap.vm.maps,
+                                           code=code, cuts=cuts,
+                                           seg_limit=PRED_MAX_UNROLL)
             except ValueError:      # unroll over MAX_UNROLLED -> JIT fallback
                 ap.pred_unfit = True
         if ap.pred is not None:
             return ap.pred
         if ap.jit is None:
             from .jit import JitPolicy
-            ap.jit = JitPolicy(ap.program, ap.vm.maps)
+            ap.jit = JitPolicy(ap.vm.lowered, ap.vm.maps)
         return ap.jit
+
+    def warm(self, hook: str, max_batch: int = PAD_MIN) -> None:
+        """Eagerly build (and compile) the batch backend for ``hook`` up to
+        the ``max_batch`` bucket — engine construction calls this so the
+        first decode step is not the one paying tracing/compilation, and so
+        a warm artifact cache is consumed at startup rather than mid-serve.
+        No-op when nothing is attached."""
+        ap = self._hooks.get(hook)
+        if ap is None:
+            return
+        backend = self._batch_backend(ap)
+        pad = PAD_MIN
+        while True:
+            backend.run_batch(np.zeros((pad, CTX_LEN), dtype=np.int64))
+            if pad >= max_batch:
+                break
+            pad *= 2
 
     def run_batch(self, hook: str, ctx_mat: np.ndarray) -> np.ndarray | None:
         """Vectorized decision for a batch of faults.
 
         One call = ONE program invocation regardless of batch size — the
         amortization the batched fault path is built on.  Uses the
-        predicated (unrolled straight-line) executor when the program's
-        unroll is small, the while+switch JIT otherwise; the batch is padded
-        to power-of-two buckets so varying batch sizes reuse compilations.
+        predicated straight-line executor (split into chained segments when
+        the unroll exceeds the per-segment budget), falling back to the
+        while+switch JIT only for programs whose flattening exceeds
+        lower.MAX_UNROLLED entirely; the batch is padded to power-of-two
+        buckets so varying batch sizes reuse compilations, and compiled
+        artifacts persist across sessions via the artifact cache.
         """
         ap = self._hooks.get(hook)
         if ap is None:

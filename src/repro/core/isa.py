@@ -78,6 +78,10 @@ class Op(enum.IntEnum):
     MAPSZ = 34   # rd = len(map[imm])
     LDMAPX = 35  # rd = map[clamp(r_src2=imm reg)][clamp(rs)] — indirect map id
                  # (map-in-map analogue; both indices runtime-clamped)
+    LDCTXR = 36  # rd = ctx[clamp(rs)] — REGISTER-indexed ctx load.  The
+                 # verifier requires rs to be initialized and rejects a
+                 # const-tracked index outside [0, CTX_LEN); every backend
+                 # lowers the residual dynamic case with the same clamp.
     # Control flow — conditional jumps compare rs against rt (reg) or imm.
     JA = 48      # unconditional forward jump by +imm
     JEQ = 49
@@ -225,6 +229,7 @@ class Asm:
 
     # -- loads ------------------------------------------------------------
     def ldctx(self, d, off: int): return self._emit(Op.LDCTX, d, 0, int(off))
+    def ldctxr(self, d, idx_reg): return self._emit(Op.LDCTXR, d, self._reg(idx_reg))
     def ldmap(self, d, map_id: int, idx_reg): return self._emit(Op.LDMAP, d, self._reg(idx_reg), 0, int(map_id))
     def ldmapx(self, d, map_reg, idx_reg):
         return self._emit(Op.LDMAPX, d, self._reg(idx_reg), 0,

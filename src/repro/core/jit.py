@@ -17,100 +17,53 @@ terminate within ``max_steps``, so fuel gives a hard bound that also lets
 ``vmap`` batch lanes with divergent control flow (lanes that finish early
 spin on EXIT until all are done).
 
+Since the unified pipeline, this backend consumes the shared lowered IR
+(:mod:`repro.core.lower`): one verifier pass, absolute branch targets,
+resolved map slots — and the per-op LDCTX/LDCTXR/helper/map-op bodies are
+the SAME functions the predicated compiler lowers through (``alu_jnp``,
+``helper_jnp``, ``map_lookup``...), so the two compiled executors cannot
+drift apart opcode by opcode.
+
 Maps are passed in as padded int64 arrays (capacity-sized), so profile
 updates from userspace do NOT trigger recompilation — only reloading data.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .context import CTX, MAX_TIERS
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
-                  NUM_REGS, Insn, Op, Program)
+                  NUM_REGS, Op, Program)
+from .lower import (LIns, LoweredProgram, VecCtx, alu_jnp as _alu_jnp,
+                    cmp_jnp as _cmp_jnp, helper_jnp, ldctx_dyn, lower,
+                    map_lookup, map_lookup_dyn)
 from .maps import MapRegistry
-from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,
-                 HELPER_PROMOTION_COST, HELPER_TRACE, _IMM2REG, _JIMM2REG)
-from .verifier import verify
+from .vm import _IMM2REG, _JIMM2REG
 
 I64 = jnp.int64
 
 
-def _alu_jnp(op: Op, a, b):
-    if op == Op.MOV:
-        return b
-    if op == Op.ADD:
-        return a + b
-    if op == Op.SUB:
-        return a - b
-    if op == Op.MUL:
-        return a * b
-    if op == Op.DIV:
-        # truncated signed division toward zero, x/0 == 0
-        q = jnp.where(b == 0, 0, jnp.abs(a) // jnp.where(b == 0, 1, jnp.abs(b)))
-        return jnp.where((a < 0) != (b < 0), -q, q).astype(a.dtype)
-    if op == Op.MOD:
-        r = jnp.abs(a) % jnp.where(b == 0, 1, jnp.abs(b))
-        r = jnp.where(a < 0, -r, r).astype(a.dtype)
-        return jnp.where(b == 0, a, r)
-    if op == Op.AND:
-        return a & b
-    if op == Op.OR:
-        return a | b
-    if op == Op.XOR:
-        return a ^ b
-    if op == Op.LSH:
-        return a << (b & 63)
-    if op == Op.RSH:
-        ua = a.astype(jnp.uint64)
-        return (ua >> (b.astype(jnp.uint64) & 63)).astype(a.dtype)
-    if op == Op.MIN:
-        return jnp.minimum(a, b)
-    if op == Op.MAX:
-        return jnp.maximum(a, b)
-    raise ValueError(f"bad ALU op {op}")
-
-
-def _cmp_jnp(op: Op, a, b):
-    if op == Op.JEQ:
-        return a == b
-    if op == Op.JNE:
-        return a != b
-    if op == Op.JLT:
-        return a < b
-    if op == Op.JLE:
-        return a <= b
-    if op == Op.JGT:
-        return a > b
-    if op == Op.JGE:
-        return a >= b
-    if op == Op.JSET:
-        return (a & b) != 0
-    raise ValueError(f"bad cmp op {op}")
-
-
-def compile_program(program: Program, maps: MapRegistry):
+def compile_program(program: Program | LoweredProgram, maps: MapRegistry):
     """Compile to ``fn(ctx_vec, map_arrays, map_lens) -> r0`` (all jnp).
 
     The returned function is jit/vmap-compatible.  ``map_arrays`` is a tuple
     of capacity-padded int64 arrays, ``map_lens`` an int64 vector of live
     lengths (dynamic, so userspace can reload profiles without recompiling).
     """
-    facts = verify(program, num_maps=len(maps), map_lens=maps.lens(),
-                   helper_ids=HELPER_IDS)
-    insns = list(program.insns)
+    lp = program if isinstance(program, LoweredProgram) else \
+        lower(program, maps)
+    insns = list(lp.insns)
     n = len(insns)
     exit_pc = n  # virtual halt pc
 
-    def make_step(pc: int, insn: Insn):
+    def make_step(pc: int, insn: LIns):
         op = insn.op
 
         def step(state, ctx, map_arrays, map_lens):
             regs = state["regs"]
+            cv = VecCtx(ctx)
             if op in ALU_REG_OPS:
                 val = _alu_jnp(op, regs[insn.dst], regs[insn.src])
                 regs = regs.at[insn.dst].set(val)
@@ -127,77 +80,41 @@ def compile_program(program: Program, maps: MapRegistry):
                 regs = regs.at[insn.dst].set(-regs[insn.dst])
                 return dict(state, regs=regs, pc=jnp.int32(pc + 1))
             if op == Op.LDCTX:
-                regs = regs.at[insn.dst].set(ctx[insn.imm])
+                regs = regs.at[insn.dst].set(cv.col(insn.imm))
+                return dict(state, regs=regs, pc=jnp.int32(pc + 1))
+            if op == Op.LDCTXR:
+                regs = regs.at[insn.dst].set(ldctx_dyn(cv, regs[insn.src]))
                 return dict(state, regs=regs, pc=jnp.int32(pc + 1))
             if op == Op.LDMAP:
-                arr = map_arrays[insn.src2]
-                idx = regs[insn.src]
-                ok = (idx >= 0) & (idx < map_lens[insn.src2])
-                safe = jnp.clip(idx, 0, arr.shape[0] - 1)
-                val = jnp.where(ok, arr[safe], 0)
+                val = map_lookup(map_arrays, map_lens, insn.imm,
+                                 regs[insn.src])
                 regs = regs.at[insn.dst].set(val)
                 return dict(state, regs=regs, pc=jnp.int32(pc + 1))
             if op == Op.LDMAPX:
-                nmaps = len(map_arrays)
-                mid = jnp.clip(regs[insn.src2], 0, nmaps - 1).astype(jnp.int32)
-                idx = regs[insn.src]
-
-                def mk(arr, j):
-                    def br(_):
-                        ok = (idx >= 0) & (idx < map_lens[j])
-                        safe = jnp.clip(idx, 0, arr.shape[0] - 1)
-                        return jnp.where(ok, arr[safe], 0)
-                    return br
-                val = jax.lax.switch(
-                    mid, [mk(a, j) for j, a in enumerate(map_arrays)], 0)
+                val = map_lookup_dyn(map_arrays, map_lens, regs[insn.src2],
+                                     regs[insn.src], cv.zeros_like_lane())
                 regs = regs.at[insn.dst].set(val)
                 return dict(state, regs=regs, pc=jnp.int32(pc + 1))
             if op == Op.MAPSZ:
                 regs = regs.at[insn.dst].set(map_lens[insn.imm])
                 return dict(state, regs=regs, pc=jnp.int32(pc + 1))
             if op == Op.JA:
-                return dict(state, pc=jnp.int32(pc + 1 + insn.imm))
+                return dict(state, pc=jnp.int32(insn.target))
             if op in COND_JUMP_REG or op in COND_JUMP_IMM:
                 if op in COND_JUMP_REG:
                     taken = _cmp_jnp(op, regs[insn.dst], regs[insn.src])
                 else:
                     taken = _cmp_jnp(_JIMM2REG[op], regs[insn.dst],
                                      jnp.asarray(insn.src2, I64))
-                nxt = jnp.where(taken, pc + 1 + insn.imm, pc + 1).astype(jnp.int32)
+                nxt = jnp.where(taken, insn.target, pc + 1).astype(jnp.int32)
                 return dict(state, pc=nxt)
             if op == Op.JNZDEC:
                 newv = regs[insn.dst] - 1
                 regs = regs.at[insn.dst].set(newv)
-                nxt = jnp.where(newv != 0, pc + 1 + insn.imm, pc + 1).astype(jnp.int32)
+                nxt = jnp.where(newv != 0, insn.target, pc + 1).astype(jnp.int32)
                 return dict(state, regs=regs, pc=nxt)
             if op == Op.CALL:
-                if insn.imm == HELPER_KTIME:
-                    r0 = ctx[CTX.KTIME_NS]
-                elif insn.imm == HELPER_PROMOTION_COST:
-                    order = jnp.clip(regs[1], 0, 3)
-                    nblocks = jnp.asarray(4, I64) ** order
-                    zero = ctx[CTX.ZERO_NS_PER_BLOCK] * nblocks
-                    free = _dyn(ctx, CTX.FREE_BLOCKS_O0, order)
-                    frag = _dyn(ctx, CTX.FRAG_O0, order)
-                    compact = (ctx[CTX.COMPACT_NS_PER_BLOCK] * nblocks
-                               * (1000 + frag) // 1000)
-                    r0 = zero + jnp.where(free > 0, 0, compact)
-                elif insn.imm == HELPER_MIGRATE_COST:
-                    order = jnp.clip(regs[1], 0, 3)
-                    nblocks = jnp.asarray(4, I64) ** order
-                    src = jnp.clip(regs[2], 0, MAX_TIERS - 1)
-                    dst = jnp.clip(regs[3], 0, MAX_TIERS - 1)
-                    lo = jnp.minimum(src, dst)
-                    hi = jnp.maximum(src, dst)
-                    setup = (_dyn(ctx, CTX.MIG_CUM_SETUP_T0, hi)
-                             - _dyn(ctx, CTX.MIG_CUM_SETUP_T0, lo))
-                    per = (_dyn(ctx, CTX.MIG_CUM_NS_T0, hi)
-                           - _dyn(ctx, CTX.MIG_CUM_NS_T0, lo))
-                    r0 = setup + per * nblocks
-                elif insn.imm == HELPER_TRACE:
-                    r0 = jnp.asarray(0, I64)  # trace is a host-only facility
-                else:  # pragma: no cover - verifier rejects unknown helpers
-                    raise ValueError(f"unknown helper {insn.imm}")
+                r0 = helper_jnp(insn.imm, lambda i: regs[i], cv)
                 regs = regs.at[0].set(r0)
                 return dict(state, regs=regs, pc=jnp.int32(pc + 1))
             if op == Op.EXIT:
@@ -213,7 +130,7 @@ def compile_program(program: Program, maps: MapRegistry):
 
     branches = steps + [halt_step]
 
-    fuel0 = facts["max_steps"] + 8
+    fuel0 = lp.facts["max_steps"] + 8
 
     def run(ctx, map_arrays, map_lens):
         ctx = jnp.asarray(ctx, I64)
@@ -235,19 +152,14 @@ def compile_program(program: Program, maps: MapRegistry):
         final = jax.lax.while_loop(cond, body, state)
         return final["regs"][0]
 
-    return run, facts
-
-
-def _dyn(ctx, base: int, order):
-    """ctx[base + order] with a traced order."""
-    return jax.lax.dynamic_index_in_dim(ctx, jnp.int32(base) + order.astype(jnp.int32),
-                                        keepdims=False)
+    return run, lp.facts
 
 
 class JitPolicy:
     """Convenience wrapper: compiled program + its maps, batched execution."""
 
-    def __init__(self, program: Program, maps: MapRegistry) -> None:
+    def __init__(self, program: Program | LoweredProgram,
+                 maps: MapRegistry) -> None:
         self.maps = maps
         self._fn, self.facts = compile_program(program, maps)
         self._batched = jax.jit(jax.vmap(self._fn, in_axes=(0, None, None)))

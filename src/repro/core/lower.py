@@ -1,0 +1,394 @@
+"""Shared lowering pass: verified bytecode -> one flat IR for every executor.
+
+Before this module, the three executors (host interpreter in :mod:`vm`,
+while+switch XLA JIT in :mod:`jit`, predicated straight-line compiler in
+:mod:`predicate`) each re-derived the same facts from the raw instruction
+stream — relative branch offsets, which field of an ``Insn`` holds the map
+slot, how LDCTX / the ``bpf_mm_*`` helpers / the map ops read the context —
+three hand-kept-consistent copies of the per-op semantics.  The real eBPF
+stack does not work that way: ONE verifier accepts the program and one
+lowering feeds every JIT backend ("Cache is King"'s verified-once,
+compiled-anywhere split).
+
+This module is that single stage:
+
+  * :func:`lower` runs the verifier ONCE and emits a :class:`LoweredProgram`
+    of :class:`LIns` — branch targets resolved to ABSOLUTE pcs, map slots
+    normalized into ``imm``, ctx offsets validated — the only program form
+    the executors consume;
+  * :func:`unroll_lowered` expands the verifier-bounded loops (trip counts
+    come from the verifier facts, not a re-analysis) into forward-only
+    straight-line code, recording the loop-copy boundaries the segmented
+    predicated compiler cuts at;
+  * the jnp per-op bodies (`alu_jnp`, `cmp_jnp`, :func:`ldctx_dyn`,
+    :func:`map_lookup`, :func:`map_lookup_dyn`, :func:`helper_jnp`) are
+    written once against a :class:`CtxView` so the vmapped JIT (vector ctx)
+    and the predicated compiler (batched ctx) lower every opcode — including
+    the register-indexed ``LDCTXR`` — through literally the same code.
+
+The host interpreter shares the IR (absolute targets, resolved slots) and
+keeps its scalar Python helper bodies in :mod:`vm`; the two XLA backends
+share both the IR and the jnp lowering bodies here.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .context import CTX, CTX_LEN, MAX_TIERS
+from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
+                  JUMP_OPS, Insn, Op, Program)
+from .verifier import verify
+
+I64 = jnp.int64
+
+# Hard cap on the flattened (all loops expanded) program length — a backstop
+# far above any real policy, mirrored from the old predicate-module limit.
+MAX_UNROLLED = 20_000
+
+# Bump when the IR layout or any lowering semantics change: the artifact
+# cache (core.cache) folds this into every digest so stale on-disk pickles
+# can never be misread by a newer pipeline.
+IR_VERSION = 1
+
+
+@dataclass(frozen=True)
+class LIns:
+    """One lowered instruction.
+
+    Field use per op class (everything irrelevant is 0 / -1):
+
+    ======================  ====================================================
+    ALU reg/imm, NEG        ``dst``, ``src`` / ``imm``
+    LDCTX                   ``dst``, ``imm`` = validated ctx offset
+    LDCTXR                  ``dst``, ``src`` = index register
+    LDMAP                   ``dst``, ``src`` = index reg, ``imm`` = map SLOT
+    LDMAPX                  ``dst``, ``src`` = index reg, ``src2`` = map-id reg
+    MAPSZ                   ``dst``, ``imm`` = map SLOT
+    JA                      ``target`` (absolute)
+    cond jumps              ``dst``(lhs), ``src``(rhs reg) / ``src2``(rhs imm),
+                            ``target`` = absolute taken-pc
+    JNZDEC                  ``dst`` = counter, ``target`` = absolute loop head
+    CALL                    ``imm`` = helper id
+    EXIT                    —
+    ======================  ====================================================
+    """
+    op: Op
+    dst: int = 0
+    src: int = 0
+    imm: int = 0
+    src2: int = 0
+    target: int = -1
+
+
+@dataclass(frozen=True)
+class LoweredProgram:
+    """The verified, resolved program every backend consumes."""
+    name: str
+    insns: tuple[LIns, ...]
+    facts: dict            # verifier facts; loop_trips keyed by lowered pc
+    num_maps: int
+    map_caps: tuple[int, ...]     # registered map capacities (shape contract)
+    source_len: int
+
+    def digest(self) -> str:
+        """Stable content hash — the artifact-cache key component.
+
+        Covers the instruction stream, the map-registry SHAPE contract
+        (slot count + capacities; map *contents* are runtime data), the ctx
+        layout width (so a ctx-struct change invalidates old artifacts) and
+        the IR version."""
+        h = hashlib.sha256()
+        h.update(f"ir{IR_VERSION}:ctx{CTX_LEN}:tiers{MAX_TIERS}:"
+                 f"maps{self.num_maps}:{self.map_caps}:".encode())
+        for i in self.insns:
+            h.update(f"{int(i.op)},{i.dst},{i.src},{i.imm},{i.src2},"
+                     f"{i.target};".encode())
+        return h.hexdigest()
+
+
+def lower(program: Program, maps, *, helper_ids=None) -> LoweredProgram:
+    """Verify ``program`` once and lower it to the shared flat IR."""
+    if helper_ids is None:
+        from .vm import HELPER_IDS      # late: vm imports verifier only
+        helper_ids = HELPER_IDS
+    facts = verify(program, num_maps=len(maps), map_lens=maps.lens(),
+                   helper_ids=helper_ids)
+    out: list[LIns] = []
+    for pc, insn in enumerate(program.insns):
+        op = insn.op
+        if op in JUMP_OPS or op == Op.JNZDEC:
+            out.append(LIns(op, insn.dst, insn.src, 0, insn.src2,
+                            target=pc + 1 + insn.imm))
+        elif op == Op.LDMAP:
+            # raw form carries the map id in src2; normalize into imm so the
+            # backends read one field for the resolved slot
+            out.append(LIns(op, insn.dst, insn.src, imm=insn.src2))
+        else:
+            out.append(LIns(op, insn.dst, insn.src, insn.imm, insn.src2))
+    caps = tuple(maps[i].capacity for i in range(len(maps)))
+    return LoweredProgram(name=program.name, insns=tuple(out), facts=facts,
+                          num_maps=len(maps), map_caps=caps,
+                          source_len=len(program.insns))
+
+
+# ---------------------------------------------------------------------------
+# Loop flattening (verifier-bounded unroll) over the lowered IR
+# ---------------------------------------------------------------------------
+
+def _retarget(ins: LIns, tgt: int) -> LIns:
+    return LIns(ins.op, ins.dst, ins.src, ins.imm, ins.src2, tgt)
+
+
+def _expand_one(insns: list[LIns], cuts: list[int], t: int, j: int,
+                trips: int) -> tuple[list[LIns], list[int]]:
+    """Expand the JNZDEC loop body ``[t, j)`` (back edge at ``j``) into
+    ``trips`` copies, each closed by the faithful counter SUBI; remap every
+    absolute target; shift the recorded cut points past the loop."""
+    body = insns[t:j]
+    counter = insns[j].dst
+    blen = len(body) + 1
+    shift = trips * blen - (j - t + 1)
+
+    def remap(tgt: int, copy: int) -> int:
+        if tgt < t:
+            return tgt
+        if t <= tgt < j:
+            return t + copy * blen + (tgt - t)
+        if tgt == j:        # "continue": this copy's counter SUBI
+            return t + copy * blen + len(body)
+        return tgt + shift  # past the loop
+
+    out: list[LIns] = []
+    for ins in insns[:t]:
+        out.append(_retarget(ins, remap(ins.target, 0))
+                   if ins.target >= 0 else ins)
+    for copy in range(trips):
+        for ins in body:
+            out.append(_retarget(ins, remap(ins.target, copy))
+                       if ins.target >= 0 else ins)
+        out.append(LIns(Op.SUBI, counter, 0, 1))
+    for ins in insns[j + 1:]:
+        out.append(_retarget(ins, remap(ins.target, 0))
+                   if ins.target >= 0 else ins)
+    # cut points: every copy boundary of this loop is a legal segment cut
+    # (the original back-edge positions); prior cuts past the loop shift
+    new_cuts = [c if c <= t else c + shift for c in cuts]
+    new_cuts.extend(t + copy * blen for copy in range(trips + 1))
+    return out, sorted(set(new_cuts))
+
+
+def unroll_lowered(lp: LoweredProgram) -> tuple[tuple[LIns, ...],
+                                                tuple[int, ...]]:
+    """Flatten every verifier-bounded loop; returns ``(code, cut_points)``.
+
+    ``code`` is forward-jump-only straight-line IR; ``cut_points`` are the
+    loop-copy (back-edge) boundaries, the positions the segmented predicated
+    compiler prefers to split at.  Trip counts come from the verifier facts
+    of the SINGLE :func:`lower` pass — no re-verification per expansion.
+    Raises ``ValueError`` when the flattened form exceeds ``MAX_UNROLLED``.
+    """
+    insns = list(lp.insns)
+    trips_by_pc = dict(lp.facts.get("loop_trips", {}))
+    # expand LAST loop first: earlier loop positions (and their trip keys)
+    # stay valid because nothing before the expanded span moves
+    loops = sorted((pc for pc, ins in enumerate(insns)
+                    if ins.op == Op.JNZDEC), reverse=True)
+    cuts: list[int] = []
+    for j in loops:
+        t = insns[j].target
+        trips = trips_by_pc[j]
+        insns, cuts = _expand_one(insns, cuts, t, j, trips)
+        if len(insns) > MAX_UNROLLED:
+            raise ValueError(f"unrolled program too long ({len(insns)})")
+    return tuple(insns), tuple(cuts)
+
+
+def segment_code(code: tuple[LIns, ...], cuts: tuple[int, ...],
+                 limit: int) -> list[tuple[int, int]]:
+    """Partition straight-line ``code`` into ``[start, end)`` spans of at most
+    ``limit`` insns, cutting at loop-copy boundaries when one is in reach
+    (straight-line code may be cut anywhere, so a hard cut is the fallback).
+    """
+    n = len(code)
+    segs: list[tuple[int, int]] = []
+    pos = 0
+    while pos < n:
+        hard = pos + limit
+        if n <= hard:
+            end = n
+        else:
+            prefer = [c for c in cuts if pos < c <= hard]
+            end = max(prefer) if prefer else hard
+        segs.append((pos, end))
+        pos = end
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Shared jnp per-op lowering (consumed by jit.py AND predicate.py)
+# ---------------------------------------------------------------------------
+
+def alu_jnp(op: Op, a, b):
+    """64-bit ALU body, identical across the XLA backends (the interpreter's
+    scalar twin lives in vm._alu; test_core_vm fuzzes their agreement)."""
+    if op == Op.MOV:
+        return b
+    if op == Op.ADD:
+        return a + b
+    if op == Op.SUB:
+        return a - b
+    if op == Op.MUL:
+        return a * b
+    if op == Op.DIV:
+        # truncated signed division toward zero, x/0 == 0
+        q = jnp.where(b == 0, 0, jnp.abs(a) // jnp.where(b == 0, 1, jnp.abs(b)))
+        return jnp.where((a < 0) != (b < 0), -q, q).astype(a.dtype)
+    if op == Op.MOD:
+        r = jnp.abs(a) % jnp.where(b == 0, 1, jnp.abs(b))
+        r = jnp.where(a < 0, -r, r).astype(a.dtype)
+        return jnp.where(b == 0, a, r)
+    if op == Op.AND:
+        return a & b
+    if op == Op.OR:
+        return a | b
+    if op == Op.XOR:
+        return a ^ b
+    if op == Op.LSH:
+        return a << (b & 63)
+    if op == Op.RSH:
+        ua = a.astype(jnp.uint64)
+        return (ua >> (b.astype(jnp.uint64) & 63)).astype(a.dtype)
+    if op == Op.MIN:
+        return jnp.minimum(a, b)
+    if op == Op.MAX:
+        return jnp.maximum(a, b)
+    raise ValueError(f"bad ALU op {op}")
+
+
+def cmp_jnp(op: Op, a, b):
+    if op == Op.JEQ:
+        return a == b
+    if op == Op.JNE:
+        return a != b
+    if op == Op.JLT:
+        return a < b
+    if op == Op.JLE:
+        return a <= b
+    if op == Op.JGT:
+        return a > b
+    if op == Op.JGE:
+        return a >= b
+    if op == Op.JSET:
+        return (a & b) != 0
+    raise ValueError(f"bad cmp op {op}")
+
+
+class VecCtx:
+    """Ctx view over one ``[CTX_LEN]`` vector (the vmapped JIT's lane)."""
+    __slots__ = ("ctx",)
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+
+    def col(self, off: int):
+        return self.ctx[off]
+
+    def col_dyn(self, idx):
+        """ctx[idx] with a traced scalar index (callers clamp)."""
+        return jax.lax.dynamic_index_in_dim(self.ctx, idx.astype(jnp.int32),
+                                            keepdims=False)
+
+    def zeros_like_lane(self):
+        return jnp.asarray(0, I64)
+
+
+class BatchCtx:
+    """Ctx view over a ``[B, CTX_LEN]`` matrix (the predicated compiler)."""
+    __slots__ = ("ctx",)
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+
+    def col(self, off: int):
+        return self.ctx[:, off]
+
+    def col_dyn(self, idx):
+        """ctx[i, idx_i] with a traced ``[B]`` index vector (callers clamp)."""
+        return jnp.take_along_axis(
+            self.ctx, idx[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+    def zeros_like_lane(self):
+        return jnp.zeros(self.ctx.shape[0], I64)
+
+
+def ldctx_dyn(cv, idx):
+    """The LDCTXR body: bounds-clamped register-indexed ctx read.  The
+    verifier already rejected provably-OOB indices; the clamp covers the
+    residual dynamic range exactly like the map-op loads do."""
+    return cv.col_dyn(jnp.clip(idx, 0, CTX_LEN - 1))
+
+
+def map_lookup(map_arrays, map_lens, slot: int, idx):
+    """LDMAP body (static, lowering-resolved slot): bounds-checked lookup,
+    out-of-range reads return 0 (missing key).  ``idx`` may be a scalar (JIT
+    lane) or a ``[B]`` vector (predicated batch) — the same expression
+    serves both."""
+    arr = map_arrays[slot]
+    ok = (idx >= 0) & (idx < map_lens[slot])
+    safe = jnp.clip(idx, 0, arr.shape[0] - 1)
+    return jnp.where(ok, arr[safe], 0)
+
+
+def map_lookup_dyn(map_arrays, map_lens, mid, idx, zero):
+    """LDMAPX body (map-in-map): the map id is a runtime-clamped register.
+    Lowered as a masked accumulation over the registered maps — the one
+    shape that vectorizes identically for scalar lanes and batches."""
+    mid = jnp.clip(mid, 0, len(map_arrays) - 1).astype(jnp.int32)
+    val = zero
+    for k, arr in enumerate(map_arrays):
+        ok = (idx >= 0) & (idx < map_lens[k]) & (mid == k)
+        safe = jnp.clip(idx, 0, arr.shape[0] - 1)
+        val = jnp.where(ok, arr[safe], val)
+    return val
+
+
+def helper_jnp(helper_id: int, reg, cv):
+    """Helper-call lowering shared by the XLA backends.
+
+    ``reg(i)`` reads register ``i`` in the caller's representation (scalar
+    for the vmapped JIT, ``[B]`` for the predicated compiler); ``cv`` is the
+    matching :class:`VecCtx`/:class:`BatchCtx`.  Must mirror the scalar
+    bodies in :mod:`vm` bit for bit — this is the ONE copy the two compiled
+    backends share, replacing the per-backend CALL switch arms."""
+    from .vm import (HELPER_KTIME, HELPER_MIGRATE_COST,
+                     HELPER_PROMOTION_COST)
+    if helper_id == HELPER_KTIME:
+        return cv.col(CTX.KTIME_NS)
+    if helper_id == HELPER_PROMOTION_COST:
+        order = jnp.clip(reg(1), 0, 3)
+        nblocks = jnp.asarray(4, I64) ** order
+        zero = cv.col(CTX.ZERO_NS_PER_BLOCK) * nblocks
+        free = cv.col_dyn(jnp.int32(CTX.FREE_BLOCKS_O0) + order.astype(jnp.int32))
+        frag = cv.col_dyn(jnp.int32(CTX.FRAG_O0) + order.astype(jnp.int32))
+        compact = (cv.col(CTX.COMPACT_NS_PER_BLOCK) * nblocks
+                   * (1000 + frag) // 1000)
+        return zero + jnp.where(free > 0, 0, compact)
+    if helper_id == HELPER_MIGRATE_COST:
+        order = jnp.clip(reg(1), 0, 3)
+        nblocks = jnp.asarray(4, I64) ** order
+        src = jnp.clip(reg(2), 0, MAX_TIERS - 1)
+        dst = jnp.clip(reg(3), 0, MAX_TIERS - 1)
+        lo = jnp.minimum(src, dst).astype(jnp.int32)
+        hi = jnp.maximum(src, dst).astype(jnp.int32)
+        setup = (cv.col_dyn(jnp.int32(CTX.MIG_CUM_SETUP_T0) + hi)
+                 - cv.col_dyn(jnp.int32(CTX.MIG_CUM_SETUP_T0) + lo))
+        per = (cv.col_dyn(jnp.int32(CTX.MIG_CUM_NS_T0) + hi)
+               - cv.col_dyn(jnp.int32(CTX.MIG_CUM_NS_T0) + lo))
+        return setup + per * nblocks
+    # HELPER_TRACE and any future host-only facility: no-op on device
+    return cv.zeros_like_lane()

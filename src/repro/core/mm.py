@@ -513,6 +513,15 @@ class MemoryManager:
         ok = (af + fsizes <= row_ve) & (span_free == fsizes)
         mat[:, CTX.FAULT_MAX_ORDER] = \
             (ok * np.arange(ks, dtype=np.int64)).max(axis=1)
+        # Within-batch free-list reservation: every row of a batch shares the
+        # batch-start buddy snapshot, so a budget-aware program could commit
+        # the same free blocks N times over.  Row i's BATCH_RESERVED is an
+        # upper bound on what rows 0..i-1 can consume (each grant is clamped
+        # to its fault_max_order, i.e. at most 4^fmax base blocks) — programs
+        # subtract it from the FREE_BLOCKS_* columns to see within-batch
+        # grants.  Optimality only: installs already clamp on the live buddy.
+        grants = sizes[mat[:, CTX.FAULT_MAX_ORDER]]
+        mat[1:, CTX.BATCH_RESERVED] = np.cumsum(grants[:-1])
         return mat
 
     _ORDER_SIZES = RADIX ** np.arange(NUM_ORDERS, dtype=np.int64)

@@ -5,17 +5,30 @@ no faster than the host interpreter (lax.switch under vmap executes every
 branch each step).  The verifier's guarantees enable the classic fix:
 
   1. bounded-loop UNROLLING — JNZDEC trip counts are verifier-proven exact
-     constants (const-tracked counter the body cannot write), so each loop
-     expands to exactly `trips` copies of its body with jump targets
-     remapped; the result has only FORWARD jumps;
+     constants, so every loop expands to exactly `trips` copies of its body
+     (the flattening lives in :func:`repro.core.lower.unroll_lowered`, over
+     the shared lowered IR); the result has only FORWARD jumps;
   2. IF-CONVERSION — forward-jump-only code executes as one straight line
      with a per-lane active mask: conditional jumps move lanes into a
      pending-mask at their target, register writes are `where(active, ...)`.
 
-The compiled function is fully vectorized over a fault batch: one XLA
-program of ~unrolled-length fused vector ops, no control flow at all —
-exactly the shape TPUs (and CPUs) like.  `PredicatedPolicy` is the drop-in
-batch executor the engine uses for prefill fault storms.
+SEGMENTED UNROLL (the unified-pipeline addition): the XLA compile time of
+one straight-line program grows superlinearly with its length, which used
+to cap this backend at 512 unrolled insns and push the default 64-region
+Fig-1 program (900 insns) onto the slow while+switch JIT.  Instead, the
+flattened code is now SPLIT at loop-copy (back-edge) boundaries into
+predicated segments of at most ``seg_limit`` insns, each compiled as its
+own small XLA program, chained by a host dispatch loop that threads
+``(regs, active, done, r0)`` plus the cross-segment pending masks from one
+segment to the next.  Because the flattened code is forward-only, ONE pass
+over the segments in order is exact — a jump out of segment *i* lands in a
+pending mask that segment *j > i* ORs into its active lanes when the pc
+walks over the target.  Per-segment artifacts are exactly the unit the
+cross-session cache (:mod:`repro.core.cache`) persists.
+
+The compiled function is fully vectorized over a fault batch — within a
+segment there is no control flow at all, exactly the shape TPUs (and CPUs)
+like.  `PredicatedPolicy` is the drop-in batch executor the engine uses.
 """
 
 from __future__ import annotations
@@ -26,138 +39,92 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .context import CTX, MAX_TIERS
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
-                  NUM_REGS, Insn, Op, Program)
-from .jit import _alu_jnp, _cmp_jnp
+                  NUM_REGS, Op, Program)
+from .lower import (LIns, LoweredProgram, BatchCtx, MAX_UNROLLED,
+                    alu_jnp as _alu_jnp, cmp_jnp as _cmp_jnp, helper_jnp,
+                    ldctx_dyn, lower, map_lookup, map_lookup_dyn,
+                    segment_code, unroll_lowered)
 from .maps import MapRegistry
-from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,
-                 HELPER_PROMOTION_COST, HELPER_TRACE, _IMM2REG, _JIMM2REG)
-from .verifier import verify
+from .vm import _IMM2REG, _JIMM2REG
 
 I64 = jnp.int64
-MAX_UNROLLED = 20_000
+
+# Per-SEGMENT predicated-compile budget: one straight-line XLA program never
+# exceeds this many lowered insns; longer programs chain segments.
+SEG_LIMIT = 512
 
 
-class _Jump:
-    """Unrolled-form instruction wrapper with an ABSOLUTE target."""
-    __slots__ = ("insn", "target")
+def unroll(program: Program | LoweredProgram, maps: MapRegistry
+           ) -> tuple[LIns, ...]:
+    """Flatten all bounded loops; returns the forward-only lowered code.
 
-    def __init__(self, insn: Insn, target: int | None):
-        self.insn = insn
-        self.target = target
-
-
-def _find_loop(insns: list[Insn]) -> tuple[int, int] | None:
-    for pc, insn in enumerate(insns):
-        if insn.op == Op.JNZDEC:
-            return pc + 1 + insn.imm, pc      # (target, jnzdec_pc)
-    return None
+    Thin wrapper over the shared pipeline (lower once, expand from verifier
+    trip counts) kept as the public sizing entry point — ``len(unroll(p,
+    maps))`` is the number the segment planner budgets against."""
+    lp = program if isinstance(program, LoweredProgram) else \
+        lower(program, maps)
+    code, _cuts = unroll_lowered(lp)
+    return code
 
 
-def unroll(program: Program, maps: MapRegistry) -> list[_Jump]:
-    """Expand all bounded loops; return instructions with absolute targets."""
-    insns = list(program.insns)
-    while True:
-        facts = verify(Program(insns, program.name), num_maps=len(maps),
-                       map_lens=maps.lens(), helper_ids=HELPER_IDS)
-        loop = _find_loop(insns)
-        if loop is None:
-            break
-        t, jpc = loop
-        trips = facts["loop_trips"][jpc]
-        body = insns[t:jpc]
-        counter = insns[jpc].dst
-        # positions: prefix [0,t) | trips * (body + SUBI) | suffix
-        blen = len(body) + 1
-        new_pos: dict[int, int] = {}
-        for pc in range(t):
-            new_pos[pc] = pc
-        for pc in range(jpc + 1, len(insns)):
-            new_pos[pc] = t + trips * blen + (pc - jpc - 1)
-        end_pos = t + trips * blen
+class _Segment:
+    """Static plan for one predicated segment of the flattened program."""
+    __slots__ = ("start", "end", "entry_targets", "exit_targets", "fn")
 
-        def map_target(old_tgt: int, copy: int) -> int:
-            if old_tgt < t:
-                return new_pos.get(old_tgt, old_tgt)
-            if t <= old_tgt < jpc:                 # inside body
-                return t + copy * blen + (old_tgt - t)
-            if old_tgt == jpc:                     # "continue": copy's SUBI
-                return t + copy * blen + len(body)
-            return new_pos[old_tgt]                # past the loop
-
-        out: list[Insn] = list(insns[:t])
-        for copy in range(trips):
-            for j, b in enumerate(body):
-                if b.op in (Op.JA,) or b.op in COND_JUMP_REG \
-                        or b.op in COND_JUMP_IMM:
-                    old_tgt = (t + j) + 1 + b.imm
-                    new_tgt = map_target(old_tgt, copy)
-                    here = t + copy * blen + j
-                    out.append(Insn(b.op, b.dst, b.src, new_tgt - here - 1,
-                                    b.src2))
-                else:
-                    out.append(b)
-            out.append(Insn(Op.SUBI, counter, 0, 1))      # faithful counter
-        # suffix with remapped targets
-        for pc in range(jpc + 1, len(insns)):
-            b = insns[pc]
-            if b.op in (Op.JA,) or b.op in COND_JUMP_REG \
-                    or b.op in COND_JUMP_IMM:
-                old_tgt = pc + 1 + b.imm
-                new_tgt = map_target(old_tgt, 0)
-                here = new_pos[pc]
-                out.append(Insn(b.op, b.dst, b.src, new_tgt - here - 1,
-                                b.src2))
-            else:
-                out.append(b)
-        # prefix jumps may cross into/over the loop: remap them too
-        fixed: list[Insn] = []
-        for pc in range(t):
-            b = out[pc]
-            if b.op in (Op.JA,) or b.op in COND_JUMP_REG \
-                    or b.op in COND_JUMP_IMM:
-                old_tgt = pc + 1 + b.imm
-                new_tgt = map_target(old_tgt, 0)
-                fixed.append(Insn(b.op, b.dst, b.src, new_tgt - pc - 1,
-                                  b.src2))
-            else:
-                fixed.append(b)
-        insns = fixed + out[t:]
-        if len(insns) > MAX_UNROLLED:
-            raise ValueError(f"unrolled program too long ({len(insns)})")
-    return [_Jump(i, (pc + 1 + i.imm) if (
-        i.op in (Op.JA,) or i.op in COND_JUMP_REG or i.op in COND_JUMP_IMM)
-        else None) for pc, i in enumerate(insns)]
+    def __init__(self, start: int, end: int, entry_targets: tuple[int, ...],
+                 exit_targets: tuple[int, ...], fn: Callable):
+        self.start = start
+        self.end = end
+        self.entry_targets = entry_targets
+        self.exit_targets = exit_targets
+        self.fn = fn
 
 
-def compile_predicated(program: Program, maps: MapRegistry,
-                       code: list[_Jump] | None = None) -> Callable:
-    """Returns fn(ctx [B, CTX_LEN], map_arrays, map_lens) -> r0 [B].
+def _plan_segments(code: tuple[LIns, ...], cuts: tuple[int, ...],
+                   seg_limit: int) -> list[tuple[int, int, tuple, tuple]]:
+    """Split ``code`` into spans and compute each span's cross-segment
+    interface: the targets it must accept masks FOR (jumps from earlier
+    segments landing inside it) and the targets it emits masks TO (its own
+    jumps landing at/after its end)."""
+    spans = segment_code(code, cuts, seg_limit)
+    plans = []
+    for start, end in spans:
+        entry = sorted({ins.target for pc, ins in enumerate(code[:start])
+                        if ins.target is not None and ins.target >= 0
+                        and start <= ins.target < end})
+        exits = sorted({ins.target for ins in code[start:end]
+                        if ins.target is not None and ins.target >= end})
+        plans.append((start, end, tuple(entry), tuple(exits)))
+    return plans
 
-    ``code`` lets a caller that already unrolled the program (e.g. to size
-    it) pass the result in instead of unrolling twice."""
-    if code is None:
-        code = unroll(program, maps)
-    n = len(code)
 
-    def run(ctx, map_arrays, map_lens):
+def _make_segment_fn(code: tuple[LIns, ...], start: int, end: int,
+                     entry_targets: tuple[int, ...],
+                     exit_targets: tuple[int, ...]) -> Callable:
+    """Build the traced body of one segment.
+
+    Signature: ``(ctx[B,C], map_arrays, map_lens, regs[R,B], active[B],
+    done[B], r0[B], entry_masks tuple) -> (regs, active, done, r0,
+    exit_masks tuple)`` — ``active`` out is the fall-through mask into the
+    next segment."""
+
+    def seg(ctx, map_arrays, map_lens, regs_in, active, done, r0_final,
+            entry_masks):
         B = ctx.shape[0]
-        regs = [jnp.zeros(B, I64) for _ in range(NUM_REGS)]
-        active = jnp.ones(B, bool)
-        done = jnp.zeros(B, bool)
-        r0_final = jnp.zeros(B, I64)
-        pending: dict[int, jax.Array] = {}
+        cv = BatchCtx(ctx)
+        regs = [regs_in[i] for i in range(NUM_REGS)]
+        pending: dict[int, jax.Array] = dict(zip(entry_targets, entry_masks))
 
         def write(regs, dst, val, active):
             regs = list(regs)
             regs[dst] = jnp.where(active, val, regs[dst])
             return regs
 
-        for pc, j in enumerate(code):
+        for pc in range(start, end):
             if pc in pending:
                 active = active | pending.pop(pc)
-            insn = j.insn
+            insn = code[pc]
             op = insn.op
             if op in ALU_REG_OPS:
                 val = _alu_jnp(op, regs[insn.dst], regs[insn.src])
@@ -170,27 +137,25 @@ def compile_predicated(program: Program, maps: MapRegistry,
             elif op == Op.NEG:
                 regs = write(regs, insn.dst, -regs[insn.dst], active)
             elif op == Op.LDCTX:
-                regs = write(regs, insn.dst, ctx[:, insn.imm], active)
-            elif op in (Op.LDMAP, Op.LDMAPX):
-                if op == Op.LDMAP:
-                    mids = jnp.full((B,), insn.src2, jnp.int32)
-                else:
-                    mids = jnp.clip(regs[insn.src2], 0,
-                                    len(map_arrays) - 1).astype(jnp.int32)
-                idx = regs[insn.src]
-                val = jnp.zeros(B, I64)
-                for k, arr in enumerate(map_arrays):
-                    ok = (idx >= 0) & (idx < map_lens[k]) & (mids == k)
-                    safe = jnp.clip(idx, 0, arr.shape[0] - 1)
-                    val = jnp.where(ok, arr[safe], val)
+                regs = write(regs, insn.dst, cv.col(insn.imm), active)
+            elif op == Op.LDCTXR:
+                regs = write(regs, insn.dst, ldctx_dyn(cv, regs[insn.src]),
+                             active)
+            elif op == Op.LDMAP:
+                val = map_lookup(map_arrays, map_lens, insn.imm,
+                                 regs[insn.src])
+                regs = write(regs, insn.dst, val, active)
+            elif op == Op.LDMAPX:
+                val = map_lookup_dyn(map_arrays, map_lens, regs[insn.src2],
+                                     regs[insn.src], cv.zeros_like_lane())
                 regs = write(regs, insn.dst, val, active)
             elif op == Op.MAPSZ:
                 regs = write(regs, insn.dst,
                              jnp.broadcast_to(map_lens[insn.imm], (B,)),
                              active)
             elif op == Op.JA:
-                pending[j.target] = pending.get(j.target,
-                                                jnp.zeros(B, bool)) | active
+                pending[insn.target] = pending.get(
+                    insn.target, jnp.zeros(B, bool)) | active
                 active = jnp.zeros(B, bool)
             elif op in COND_JUMP_REG or op in COND_JUMP_IMM:
                 if op in COND_JUMP_REG:
@@ -199,42 +164,11 @@ def compile_predicated(program: Program, maps: MapRegistry,
                     taken = _cmp_jnp(_JIMM2REG[op], regs[insn.dst],
                                      jnp.asarray(insn.src2, I64))
                 taken = taken & active
-                pending[j.target] = pending.get(j.target,
-                                                jnp.zeros(B, bool)) | taken
+                pending[insn.target] = pending.get(
+                    insn.target, jnp.zeros(B, bool)) | taken
                 active = active & ~taken
             elif op == Op.CALL:
-                if insn.imm == HELPER_KTIME:
-                    r0 = ctx[:, CTX.KTIME_NS]
-                elif insn.imm == HELPER_PROMOTION_COST:
-                    order = jnp.clip(regs[1], 0, 3)
-                    nblocks = jnp.asarray(4, I64) ** order
-                    zero = ctx[:, CTX.ZERO_NS_PER_BLOCK] * nblocks
-                    oi = jnp.int32(CTX.FREE_BLOCKS_O0) + order.astype(jnp.int32)
-                    free = jnp.take_along_axis(ctx, oi[:, None], axis=1)[:, 0]
-                    fi = jnp.int32(CTX.FRAG_O0) + order.astype(jnp.int32)
-                    frag = jnp.take_along_axis(ctx, fi[:, None], axis=1)[:, 0]
-                    compact = (ctx[:, CTX.COMPACT_NS_PER_BLOCK] * nblocks
-                               * (1000 + frag) // 1000)
-                    r0 = zero + jnp.where(free > 0, 0, compact)
-                elif insn.imm == HELPER_MIGRATE_COST:
-                    order = jnp.clip(regs[1], 0, 3)
-                    nblocks = jnp.asarray(4, I64) ** order
-                    src = jnp.clip(regs[2], 0, MAX_TIERS - 1)
-                    dst = jnp.clip(regs[3], 0, MAX_TIERS - 1)
-                    lo = jnp.minimum(src, dst).astype(jnp.int32)
-                    hi = jnp.maximum(src, dst).astype(jnp.int32)
-
-                    def gather(base, idx):
-                        cols = jnp.int32(base) + idx
-                        return jnp.take_along_axis(
-                            ctx, cols[:, None], axis=1)[:, 0]
-                    setup = (gather(CTX.MIG_CUM_SETUP_T0, hi)
-                             - gather(CTX.MIG_CUM_SETUP_T0, lo))
-                    per = (gather(CTX.MIG_CUM_NS_T0, hi)
-                           - gather(CTX.MIG_CUM_NS_T0, lo))
-                    r0 = setup + per * nblocks
-                else:   # HELPER_TRACE and friends: host-only, no-op
-                    r0 = jnp.zeros(B, I64)
+                r0 = helper_jnp(insn.imm, lambda i: regs[i], cv)
                 regs = write(regs, 0, r0, active)
             elif op == Op.EXIT:
                 r0_final = jnp.where(active & ~done, regs[0], r0_final)
@@ -242,19 +176,66 @@ def compile_predicated(program: Program, maps: MapRegistry,
                 active = jnp.zeros(B, bool)
             else:   # pragma: no cover
                 raise ValueError(f"unhandled opcode {op}")
-        return r0_final
+        exit_masks = tuple(pending.pop(t, jnp.zeros(B, bool))
+                           for t in exit_targets)
+        # forward-only code: anything still pending must be an exit target
+        assert not pending, f"unconsumed jump targets {sorted(pending)}"
+        return jnp.stack(regs), active, done, r0_final, exit_masks
+
+    return seg
+
+
+def compile_predicated(program: Program | LoweredProgram, maps: MapRegistry,
+                       code=None) -> Callable:
+    """Returns fn(ctx [B, CTX_LEN], map_arrays, map_lens) -> r0 [B].
+
+    Single-segment convenience entry (the pre-segmentation surface, kept for
+    direct use and tests): the whole flattened program compiles as ONE
+    straight-line XLA function.  ``code`` lets a caller that already
+    unrolled the program pass the result in instead of unrolling twice."""
+    pol = PredicatedPolicy(program, maps, code=code,
+                           seg_limit=MAX_UNROLLED)
+
+    def run(ctx, map_arrays, map_lens):
+        return pol._run_segments(ctx, map_arrays, map_lens)
 
     return run
 
 
 class PredicatedPolicy:
-    """Batch fault-decision executor (drop-in for JitPolicy.run_batch)."""
+    """Batch fault-decision executor (drop-in for JitPolicy.run_batch).
 
-    def __init__(self, program: Program, maps: MapRegistry,
-                 code: list[_Jump] | None = None) -> None:
+    Compiles the flattened program as a chain of ≤ ``seg_limit``-insn
+    predicated segments; a 512-insn-or-smaller program is exactly the old
+    single-segment compile."""
+
+    def __init__(self, program: Program | LoweredProgram, maps: MapRegistry,
+                 code=None, cuts: tuple[int, ...] | None = None,
+                 seg_limit: int = SEG_LIMIT) -> None:
         self.maps = maps
-        self._fn = jax.jit(compile_predicated(program, maps, code))
+        lp = program if isinstance(program, LoweredProgram) else \
+            lower(program, maps)
+        if code is None:
+            code, cuts = unroll_lowered(lp)
+        elif code and not isinstance(code[0], LIns):
+            raise TypeError("code must be lowered-IR (see core.lower)")
+        self.unrolled_len = len(code)
+        self.seg_limit = seg_limit
+        self.segments: list[_Segment] = []
+        for start, end, entry, exits in _plan_segments(
+                tuple(code), tuple(cuts or ()), seg_limit):
+            fn = jax.jit(_make_segment_fn(tuple(code), start, end,
+                                          entry, exits))
+            self.segments.append(_Segment(start, end, entry, exits, fn))
         self._map_cache: tuple | None = None   # (version, arrays, lens)
+        # per-batch-size initial machine state, built once: jnp constants are
+        # immutable, and re-allocating five tiny device arrays per dispatch
+        # dominated the per-call cost at decode-sized batches
+        self._state_cache: dict[int, tuple] = {}
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
 
     def _map_args(self):
         ver = self.maps.version()
@@ -268,8 +249,29 @@ class PredicatedPolicy:
             self._map_cache = (ver, arrays, lens)
         return self._map_cache[1], self._map_cache[2]
 
+    def _init_state(self, B: int) -> tuple:
+        st = self._state_cache.get(B)
+        if st is None:
+            st = (jnp.zeros((NUM_REGS, B), I64), jnp.ones(B, bool),
+                  jnp.zeros(B, bool), jnp.zeros(B, I64))
+            self._state_cache[B] = st
+        return st
+
+    def _run_segments(self, ctx, map_arrays, map_lens):
+        B = ctx.shape[0]
+        regs, active, done, r0 = self._init_state(B)
+        zeros = done
+        pending: dict[int, jax.Array] = {}
+        for seg in self.segments:
+            entry = tuple(pending.pop(t, zeros) for t in seg.entry_targets)
+            regs, active, done, r0, exits = seg.fn(
+                ctx, map_arrays, map_lens, regs, active, done, r0, entry)
+            for t, m in zip(seg.exit_targets, exits):
+                pending[t] = (pending[t] | m) if t in pending else m
+        return r0
+
     def run_batch(self, ctx_mat: np.ndarray) -> np.ndarray:
         with jax.experimental.enable_x64():
             arrays, lens = self._map_args()
-            return np.asarray(self._fn(jnp.asarray(ctx_mat, I64), arrays,
-                                       lens))
+            return np.asarray(self._run_segments(
+                jnp.asarray(ctx_mat, I64), arrays, lens))

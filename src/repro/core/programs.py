@@ -313,6 +313,14 @@ def tier_edge_admission_program(promote_horizon: int = 4,
     (>= 990 milli) admits demotion unconditionally, and prefill placements
     (heat 0) admit one hop down under pressure — cold prompts enter the
     spill chain at tier 1 and sink edge by edge.
+
+    Promotions additionally gate on the TARGET pool's ACTUAL free list: the
+    register-indexed ``LDCTXR`` reads ``TIER_FREE_T{t-1}`` for the page's
+    own up-edge and vetoes the hop unless the pool can back the page
+    (4^order base blocks) — before the ISA grew a register-indexed ctx
+    load, this program could only gate on global HBM pressure, so a hop
+    toward a full intermediate pool was approved and then stalled or hopped
+    over in the migration engine (the ROADMAP per-tier free-gating item).
     """
     a = Asm()
     a.ldctx("r8", CTX.PAGE_TIER)
@@ -331,6 +339,16 @@ def tier_edge_admission_program(promote_horizon: int = 4,
     # ---- spill page: promote admission over edge (t, t-1) ----
     a.ldctx("r6", CTX.MEM_PRESSURE)
     a.jgei("r6", 900, "demote_side")         # no HBM headroom -> consider down
+    # free-list gate on the TARGET pool: TIER_FREE_T{t-1}, read through the
+    # register-indexed ctx load, must cover the page's 4^order base blocks
+    a.mov("r4", "r8")
+    a.addi("r4", int(CTX.TIER_FREE_T0) - 1)  # ctx offset of TIER_FREE_T{t-1}
+    a.ldctxr("r5", "r4")
+    a.ldctx("r1", CTX.PAGE_ORDER)
+    a.muli("r1", 2)
+    a.movi("r4", 1)
+    a.lsh("r4", "r1")                        # 4^order == 1 << 2*order
+    a.jlt("r5", "r4", "demote_side")         # target pool cannot back it
     a.ldctx("r1", CTX.PAGE_ORDER)
     a.mov("r2", "r8")
     a.mov("r3", "r8")

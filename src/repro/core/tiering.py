@@ -55,6 +55,29 @@ from .mm import MemoryManager, PageMapping, ProcessState
 TIER_HBM = 0
 TIER_HOST = 1     # the first spill tier of the classic 2-pool topology
 
+# tier_snapshot() keys that pre-date the N-pool generalization: they name
+# tier 1, which on a deeper chain is peer-HBM rather than host DRAM.
+_LEGACY_SNAPSHOT_KEYS = frozenset({
+    "host_blocks", "host_free_blocks", "host_resident_blocks",
+    "host_utilization_milli"})
+
+
+class _TierSnapshot(dict):
+    """tier_snapshot() return type: a dict whose deprecated ``host_*`` keys
+    warn on read (iteration/serialization stay silent, so JSON-dumping the
+    snapshot does not spam — only code that still ADDRESSES the 2-pool keys
+    hears about it)."""
+
+    def __getitem__(self, key):
+        if key in _LEGACY_SNAPSHOT_KEYS:
+            import warnings
+            warnings.warn(
+                f"tier_snapshot()[{key!r}] is deprecated: it names tier 1, "
+                f"which is peer-HBM (not host DRAM) on chains deeper than 2 "
+                f"pools; use tier_snapshot()['tiers'][t] instead",
+                DeprecationWarning, stacklevel=2)
+        return dict.__getitem__(self, key)
+
 
 @dataclass
 class TierConfig:
@@ -553,16 +576,26 @@ class TieredMemoryManager(MemoryManager):
         return self.resident_blocks(TIER_HOST)
 
     def tier_snapshot(self) -> dict:
+        """Pool-state snapshot: the per-tier ``tiers`` list is the API.
+
+        The legacy ``host_*`` keys are DEPRECATED: they hard-code "the spill
+        tier" as tier 1, which on a 4-tier chain is peer-HBM, not host DRAM
+        — silently the wrong pool.  They still resolve (reading one emits a
+        ``DeprecationWarning``) so old dashboards keep working; consumers
+        should index ``snapshot["tiers"][t]`` instead."""
         hstats = self.pools[TIER_HOST].stats()
-        out = {
+        out = _TierSnapshot({
+            "pcie_ns_per_block": self.cost.pcie_ns_per_block(),
+            "ntiers": self.ntiers,
+            "tiers": [],
+        })
+        legacy = {
             "host_blocks": self.host_blocks,
             "host_free_blocks": hstats.free_blocks,
             "host_resident_blocks": self.host_resident_blocks(),
             "host_utilization_milli": hstats.utilization_milli,
-            "pcie_ns_per_block": self.cost.pcie_ns_per_block(),
-            "ntiers": self.ntiers,
-            "tiers": [],
         }
+        dict.update(out, legacy)
         for t, (spec, pool) in enumerate(zip(("hbm",) + tuple(
                 s.name for s in self.tier_specs), self.pools)):
             s = pool.stats()

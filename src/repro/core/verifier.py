@@ -89,6 +89,9 @@ def verify(program: Program, *, num_maps: int = 0, map_lens: list[int] | None = 
         elif insn.op == Op.LDCTX:
             if not (0 <= insn.imm < CTX_LEN):
                 raise VerifierError(f"{pc}: ctx offset {insn.imm} out of bounds [0,{CTX_LEN})")
+        elif insn.op == Op.LDCTXR:
+            if not (0 <= insn.src < NUM_REGS):
+                raise VerifierError(f"{pc}: bad index register in LDCTXR")
         elif insn.op == Op.LDMAP:
             if not (0 <= insn.src2 < num_maps):
                 raise VerifierError(f"{pc}: map id {insn.src2} not registered")
@@ -174,6 +177,19 @@ def verify(program: Program, *, num_maps: int = 0, map_lens: list[int] | None = 
             read(insn.src)
             st.vals[insn.dst] = INIT
             succs = [pc + 1]
+        elif op == Op.LDCTXR:
+            # the index register must be provably initialized, and a
+            # verifier-tracked constant index must be inside the ctx struct
+            # (the analogue of the kernel verifier's ctx bounds check); a
+            # non-const index is runtime-clamped identically by every backend
+            read(insn.src)
+            v = st.vals[insn.src]
+            if isinstance(v, tuple) and v[0] == "const" \
+                    and not (0 <= v[1] < CTX_LEN):
+                raise VerifierError(
+                    f"{pc}: LDCTXR index {v[1]} out of ctx bounds [0,{CTX_LEN})")
+            st.vals[insn.dst] = INIT
+            succs = [pc + 1]
         elif op == Op.LDMAPX:
             read(insn.src)
             read(insn.src2)
@@ -247,7 +263,7 @@ def verify(program: Program, *, num_maps: int = 0, map_lens: list[int] | None = 
 
 def _written_reg(insn: Insn) -> int | None:
     if insn.op in ALU_REG_OPS or insn.op in ALU_IMM_OPS or insn.op in (
-            Op.NEG, Op.LDCTX, Op.LDMAP, Op.LDMAPX, Op.MAPSZ):
+            Op.NEG, Op.LDCTX, Op.LDCTXR, Op.LDMAP, Op.LDMAPX, Op.MAPSZ):
         return insn.dst
     if insn.op == Op.CALL:
         return 0

@@ -2,8 +2,12 @@
 
 Page-fault handling in the framework happens on the host (the serving
 scheduler decides block allocation before dispatching a device step), so the
-common path runs here.  The batched/vectorized jnp path lives in
-:mod:`repro.core.jit`.
+common path runs here.  The batched/vectorized jnp paths live in
+:mod:`repro.core.jit` and :mod:`repro.core.predicate`; since the unified
+pipeline, all three executors consume the SAME lowered IR from
+:mod:`repro.core.lower` (one verifier pass, absolute branch targets,
+resolved map slots) instead of re-deriving it from the raw instruction
+stream each.
 """
 
 from __future__ import annotations
@@ -13,10 +17,10 @@ from typing import Callable
 
 import numpy as np
 
+from .context import CTX_LEN
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Op, Program, _wrap64)
 from .maps import MapRegistry
-from .verifier import verify
 
 # ---------------------------------------------------------------------------
 # Helper (bpf_* analogue) registry
@@ -105,22 +109,28 @@ class RunResult:
 
 
 class PolicyVM:
-    """Executes a verified Program against a ctx vector + map registry."""
+    """Executes a verified Program against a ctx vector + map registry.
+
+    The program is lowered ONCE at attach time (:func:`repro.core.lower.
+    lower` — the same pass the compiled backends consume), so the run loop
+    walks absolute branch targets and resolved map slots."""
 
     def __init__(self, program: Program, maps: MapRegistry | None = None) -> None:
+        from .lower import lower    # late: lower imports jax lazily-heavy deps
         self.maps = maps if maps is not None else MapRegistry()
-        self.facts = verify(program, num_maps=len(self.maps),
-                            map_lens=self.maps.lens(), helper_ids=HELPER_IDS)
+        self.lowered = lower(program, self.maps, helper_ids=HELPER_IDS)
+        self.facts = self.lowered.facts
         self.program = program
         self.helper_state = HelperState()
 
     def run(self, ctx: np.ndarray) -> RunResult:
-        insns = self.program.insns
+        insns = self.lowered.insns
         regs = [0] * NUM_REGS
         pc = 0
         fuel = self.facts["max_steps"] + 8
         steps = 0
         n = len(insns)
+        ctx_hi = CTX_LEN - 1
         while True:
             if steps >= fuel:
                 raise VMFault("fuel exhausted — verifier bound violated (bug)")
@@ -146,8 +156,11 @@ class PolicyVM:
             elif op == Op.LDCTX:
                 regs[insn.dst] = int(ctx[insn.imm])
                 pc += 1
+            elif op == Op.LDCTXR:
+                regs[insn.dst] = int(ctx[max(0, min(regs[insn.src], ctx_hi))])
+                pc += 1
             elif op == Op.LDMAP:
-                regs[insn.dst] = self.maps[insn.src2].lookup(regs[insn.src])
+                regs[insn.dst] = self.maps[insn.imm].lookup(regs[insn.src])
                 pc += 1
             elif op == Op.LDMAPX:
                 mid = max(0, min(regs[insn.src2], len(self.maps) - 1))
@@ -157,16 +170,16 @@ class PolicyVM:
                 regs[insn.dst] = len(self.maps[insn.imm])
                 pc += 1
             elif op == Op.JA:
-                pc += 1 + insn.imm
+                pc = insn.target
             elif op in COND_JUMP_REG:
                 taken = _cmp(op, regs[insn.dst], regs[insn.src])
-                pc += 1 + (insn.imm if taken else 0)
+                pc = insn.target if taken else pc + 1
             elif op in COND_JUMP_IMM:
                 taken = _cmp(_JIMM2REG[op], regs[insn.dst], insn.src2)
-                pc += 1 + (insn.imm if taken else 0)
+                pc = insn.target if taken else pc + 1
             elif op == Op.JNZDEC:
                 regs[insn.dst] = _wrap64(regs[insn.dst] - 1)
-                pc += 1 + (insn.imm if regs[insn.dst] != 0 else 0)
+                pc = insn.target if regs[insn.dst] != 0 else pc + 1
             elif op == Op.CALL:
                 regs[0] = _wrap64(int(HELPERS[insn.imm](regs, ctx, self.helper_state)))
                 pc += 1

@@ -15,6 +15,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kernel(src_ref, dst_ref, in_ref, out_ref):
     out_ref[...] = in_ref[...]
@@ -42,6 +45,6 @@ def block_copy(pool, src, dst, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((NB, E), pool.dtype),
         input_output_aliases={2: 0},    # pool (after the 2 scalar args) -> out
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(src, dst, pool)

@@ -27,6 +27,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 F32 = jnp.float32
 NEG_INF = -1e30
 
@@ -140,7 +143,7 @@ def paged_class_partials(q, pool_k, pool_v, page_table, logical_idx, lengths,
         grid_spec=grid_spec,
         out_shape=out_shapes,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
     )(page_table, logical_idx, lengths, q, pool_k, pool_v)
     return acc, m, l, heat

@@ -55,6 +55,7 @@ from ..core import (MAX_PROFILE_REGIONS, FaultKind, HWSpec, Khugepaged,
                     tier_edge_admission_program, tier_heat_band_program,
                     tier_lru_program, tier_never_program)
 from ..core.buddy import order_blocks
+from ..core.hooks import HOOK_FAULT, HOOK_TIER
 from ..models.decode import PagedLayout, cache_init, decode_step, prefill_step
 from ..models.transformer import build_layer_plans
 from .sampler import Sampler
@@ -196,6 +197,15 @@ class ServingEngine:
             self.mm.attach_fault_program(never_program())
         elif policy not in ("thp", "never"):
             raise ValueError(f"unknown policy {policy!r}")
+        if self.batch_faults:
+            # Build + compile the hook batch backends NOW (decode-sized
+            # bucket), not on the first faulting step or the first batched
+            # tier placement: warmup consults the cross-session artifact
+            # cache (.cache/), so a process that has seen these programs
+            # before skips the unroll and the XLA compile instead of
+            # re-paying them mid-serve.
+            self.mm.hooks.warm(HOOK_FAULT, max_batch=max_batch)
+            self.mm.hooks.warm(HOOK_TIER, max_batch=max_batch)
 
         self.khugepaged = (Khugepaged(self.mm, KhugepagedConfig())
                            if (khugepaged and policy == "ebpf") else None)

@@ -85,7 +85,16 @@ class TestCtxBatchParity:
         assert mat.shape == (len(reqs), CTX_LEN)
         for row, (pid, addr, kind) in zip(mat, reqs):
             ref = mm._build_ctx(mm.procs[pid], addr, kind)
+            # scalar builder has no batch, so its reservation column is 0;
+            # every other column must match bit for bit
+            row = row.copy()
+            row[CTX.BATCH_RESERVED] = 0
             np.testing.assert_array_equal(row, ref)
+        # the reservation column is the exclusive running sum of the worst
+        # case grant (4^fault_max_order base blocks) of the earlier rows
+        grants = 4 ** mat[:, CTX.FAULT_MAX_ORDER]
+        expect = np.concatenate([[0], np.cumsum(grants)[:-1]])
+        np.testing.assert_array_equal(mat[:, CTX.BATCH_RESERVED], expect)
 
     @pytest.mark.parametrize("max_order", [1, 2, 3])
     def test_vectorized_fault_max_orders(self, max_order):
@@ -379,13 +388,19 @@ class TestEngineInvocationAccounting:
 
 
 class TestPredicatedUnrollBoundary:
-    """ROADMAP regression guards for the predicated-executor unroll budget.
+    """Regression guards at the predicated-executor segment budget.
 
-    1. The default 64-region Fig-1 program exceeds PRED_MAX_UNROLL and its
-       batch route DELIBERATELY falls back to the while+switch JIT — if a
-       future segmented unroll changes that, these tests pin the decisions.
-    2. Executor parity at EXACTLY the 512-insn boundary (and one step over),
-       so the backend switch can never silently change decisions.
+    Since the unified pipeline's SEGMENTED unroll, a program over the
+    512-insn budget no longer falls back to the while+switch JIT: its
+    flattened code splits into predicated segments chained by the dispatch
+    loop.  These guards pin that routing AND the decisions:
+
+    1. The default 64-region Fig-1 program (900 unrolled insns) routes
+       through the segmented predicated executor — multiple segments, no
+       JIT fallback — with decisions identical to interpreter and JIT.
+    2. At EXACTLY the 512-insn boundary the compile is a single segment;
+       one insn over becomes two segments; decisions never change across
+       the cut.
     """
 
     @staticmethod
@@ -410,8 +425,8 @@ class TestPredicatedUnrollBoundary:
         a.exit()
         return a.build(f"boundary_pad{pad}")
 
-    def test_default_fig1_program_falls_back_to_jit(self):
-        from repro.core.hooks import HOOK_TIER, PRED_MAX_UNROLL, HookRegistry
+    def test_default_fig1_program_routes_segmented(self):
+        from repro.core.hooks import PRED_MAX_UNROLL, HookRegistry
         from repro.core.predicate import unroll
         maps = MapRegistry()
         m = ArrayMap(64)
@@ -419,20 +434,24 @@ class TestPredicatedUnrollBoundary:
         maps.register(m)
         prog = ebpf_mm_program()           # full 64-region search loop
         assert len(unroll(prog, maps)) > PRED_MAX_UNROLL, \
-            "the default Fig-1 program now fits the predicated budget — " \
-            "update the ROADMAP item and these guards"
+            "the default Fig-1 program now fits one predicated segment — " \
+            "update these guards"
         reg = HookRegistry()
         reg.attach(HOOK_FAULT, prog, maps)
         rng = np.random.default_rng(11)
         mat = _random_ctx_batch(rng, 8, nregions=8)
         out = reg.run_batch(HOOK_FAULT, mat)
         ap = reg._hooks[HOOK_FAULT]
-        assert ap.pred is None and ap.pred_unfit, \
-            "batch route must (deliberately) fall back to the JIT today"
-        assert ap.jit is not None
+        assert ap.pred is not None and not ap.pred_unfit, \
+            "the realistic Fig-1 profile must take the segmented fast path"
+        assert ap.pred.num_segments >= 2, \
+            "over-budget program must be split into chained segments"
+        assert ap.jit is None, "no JIT fallback for the default profile"
         vm = PolicyVM(prog, maps)
-        assert [vm.run(row).ret for row in mat] == list(out), \
-            "the JIT fallback changed decisions"
+        host = [vm.run(row).ret for row in mat]
+        assert host == list(out), "segmented executor changed decisions"
+        assert host == list(JitPolicy(prog, maps).run_batch(mat)), \
+            "segmented != JIT for the default Fig-1 program"
 
     def test_executor_parity_at_unroll_boundary(self):
         from repro.core.hooks import PRED_MAX_UNROLL, HookRegistry
@@ -444,14 +463,15 @@ class TestPredicatedUnrollBoundary:
         assert len(unroll(over, maps)) == PRED_MAX_UNROLL + 2
         rng = np.random.default_rng(12)
         mat = _random_ctx_batch(rng, 8)
-        for prog, wants_pred in ((at, True), (over, False)):
+        for prog, want_segments in ((at, 1), (over, 2)):
             reg = HookRegistry()
             reg.attach(HOOK_FAULT, prog, maps)
             out = reg.run_batch(HOOK_FAULT, mat)
             ap = reg._hooks[HOOK_FAULT]
-            assert (ap.pred is not None) == wants_pred, \
-                f"{prog.name}: wrong batch backend at the 512-insn boundary"
-            assert ap.pred_unfit == (not wants_pred)
+            assert ap.pred is not None and not ap.pred_unfit, \
+                f"{prog.name}: predicated route must serve both sides"
+            assert ap.pred.num_segments == want_segments, \
+                f"{prog.name}: wrong segment count at the 512-insn boundary"
             vm = PolicyVM(prog, maps)
             host = [vm.run(row).ret for row in mat]
             assert host == list(out), \

@@ -354,6 +354,61 @@ def test_scalar_vs_batched(topology, seed):
     assert scalar.mm.stats.faults > 0
 
 
+EXECUTORS = ["interp", "jit", "segmented"]
+
+
+def _force_executor(mm, mode, monkeypatch):
+    """Pin which executor the hook registry's batch route uses.
+
+    ``interp`` is expressed by the scalar replica (one ``vm.run`` per fault);
+    ``jit`` marks every attached program predicate-unfit so ``run_batch``
+    takes the while+switch JIT; ``segmented`` shrinks the per-segment budget
+    so even the right-sized Fig-1 search loop splits into chained predicated
+    segments — the full pipeline, exercised on a real workload."""
+    if mode == "jit":
+        for ap in mm.hooks._hooks.values():
+            if ap is not None:
+                ap.pred_unfit = True
+    elif mode == "segmented":
+        import repro.core.hooks as hooks_mod
+        monkeypatch.setattr(hooks_mod, "PRED_MAX_UNROLL", 64)
+
+
+@pytest.mark.differential
+@pytest.mark.parametrize("topology", ["untiered", "4tier"])
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_executor_axis(topology, seed, monkeypatch):
+    """The executor axis of the harness: the same seeded workload replayed
+    through interpreter (scalar path), while+switch JIT and SEGMENTED
+    predicated batch executors must produce identical decisions — page
+    tables, tier occupancy, stats — step for step."""
+    script = make_script(seed)
+    reps = {}
+    for mode in EXECUTORS:
+        reps[mode] = Replica(topology, batched=(mode != "interp"))
+        _force_executor(reps[mode].mm, mode, monkeypatch)
+    for i, s in enumerate(script):
+        for mode, r in reps.items():
+            run_step(r, s)
+            r.check_invariants(f"seed={seed} {topology} {mode} step={i}")
+        for mode in EXECUTORS[1:]:
+            assert reps[mode].state() == reps["interp"].state(), \
+                f"seed={seed} {topology} step={i}: {mode} diverged from " \
+                f"the interpreter"
+    for mode in EXECUTORS[1:]:
+        assert reps[mode].mm.stats.snapshot() == \
+            reps["interp"].mm.stats.snapshot(), \
+            f"seed={seed} {topology}: {mode} stats diverged"
+    # the segmented replica really did run chained segments
+    ap = reps["segmented"].mm.hooks._hooks[HOOK_FAULT]
+    assert ap.pred is not None and ap.pred.num_segments >= 2, \
+        "segmented replica compiled a single segment — budget patch inert"
+    jap = reps["jit"].mm.hooks._hooks[HOOK_FAULT]
+    assert jap.jit is not None and jap.pred is None, \
+        "jit replica did not route through the while+switch JIT"
+    assert reps["interp"].mm.stats.faults > 0
+
+
 @pytest.mark.differential
 @pytest.mark.parametrize("seed", SEEDS)
 def test_tier_topologies_complete_same_workload(seed):
