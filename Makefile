@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-diff bench-smoke bench bench-json clean-cache
+.PHONY: test test-diff bench-smoke bench bench-json trace-demo clean-cache
 
 # tier-1 verify: the gate every PR must keep green (collects the
 # differential suite too — test-diff is the focused entry point)
@@ -32,6 +32,15 @@ bench:
 # policy and batch size) — the perf trajectory tracked from PR 2 onward
 bench-json:
 	$(PY) -m benchmarks.hotpath_bench --json BENCH_hotpath.json
+
+# telemetry demo: serve a tiered smoke workload with tracing on and write
+# out/trace_demo.json (load in ui.perfetto.dev) + a Prometheus-style
+# metrics snapshot — the artifacts CI uploads per run
+trace-demo:
+	mkdir -p out
+	$(PY) examples/serve_paged.py --requests 4 --hbm-blocks 64 \
+		--host-blocks 128 --trace out/trace_demo.json \
+		--metrics out/metrics_demo.txt
 
 # drop the cross-session compiler-artifact cache (pickled lowering/unroll
 # artifacts + persisted XLA executables under .cache/); everything rebuilds

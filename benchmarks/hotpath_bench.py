@@ -19,10 +19,12 @@ Two per-step routes are measured in the same file:
     invocation), incremental block tables, segment-sum access accounting.
 
 Per (policy, max_batch, mode) cell we report steps/s, faults/s,
-policy-invocations/step, modeled mgmt_ns and wall_host_s.  ``--json`` writes
-``BENCH_hotpath.json`` (the ``make bench-json`` artifact) including the
-scalar->batched speedup summary, so the perf trajectory is tracked from this
-PR onward.
+policy-invocations/step, MEASURED per-step management wall time (p50/p99
+from a log2-bucketed latency histogram — ``repro.obs.Log2Hist``, the same
+structure the serving telemetry uses) plus the modeled mgmt_ns for
+reference.  ``--json`` writes ``BENCH_hotpath.json`` (the ``make
+bench-json`` artifact) including the scalar->batched speedup summary, so
+the perf trajectory is tracked from this PR onward.
 
 Two pipeline lanes ride along since the unified-compiler PR:
 
@@ -34,7 +36,12 @@ Two pipeline lanes ride along since the unified-compiler PR:
   * ``cache`` — engine-warmup cost with a cold vs warm cross-session
     artifact cache (fresh HookRegistry + ArtifactCache over one directory,
     twice): the warm session reuses the pickled unroll + the persisted XLA
-    executables.
+    executables;
+  * ``telemetry`` — the observability overhead lane: the same batched
+    workload with telemetry absent vs constructed-but-disabled vs fully on
+    (ring + histograms + tracepoints).  The disabled lane is the one the
+    CI gate (benchmarks.telemetry_gate) holds within 2% of the absent
+    baseline — tracing off must cost ~nothing.
 
 Run:  PYTHONPATH=src python -m benchmarks.hotpath_bench [--json FILE]
 """
@@ -54,6 +61,7 @@ from repro.core.buddy import order_blocks
 from repro.core.context import FaultKind
 from repro.core.damon import Damon, Region
 from repro.core.hooks import HOOK_FAULT
+from repro.obs import Log2Hist, Telemetry
 
 POLICIES = ("ebpf", "thp", "never")
 BATCH_SIZES = (4, 16)
@@ -79,10 +87,12 @@ def _profile(vma_blocks: int) -> Profile:
     return Profile("app", regions)
 
 
-def _mk_mm(policy: str, nprocs: int, vma_blocks: int) -> MemoryManager:
+def _mk_mm(policy: str, nprocs: int, vma_blocks: int,
+           telemetry=None) -> MemoryManager:
     cost = make_cost_model(HWSpec(), kv_heads=8, head_dim=128, block_tokens=4)
     mm = MemoryManager(nprocs * vma_blocks + 64, cost,
-                       default_mode="never" if policy == "never" else "thp")
+                       default_mode="never" if policy == "never" else "thp",
+                       telemetry=telemetry)
     app = None
     if policy == "ebpf":
         mm.load_profile(_profile(vma_blocks))
@@ -166,15 +176,18 @@ def _legacy_record_access(mm: MemoryManager, pid: int,
 
 def _drive(mm: MemoryManager, pids: list[int], start: int, steps: int,
            vma_blocks: int, *, batched: bool,
-           legacy_rng: _pyrandom.Random | None = None) -> None:
+           legacy_rng: _pyrandom.Random | None = None,
+           step_hist: Log2Hist | None = None) -> None:
     """``steps`` engine-step analogues: fault the next boundary for every
-    sequence, feed DAMON, capture block tables."""
+    sequence, feed DAMON, capture block tables.  ``step_hist`` (when given)
+    observes the measured wall time of every individual step."""
     # sub-integer heat: the access accounting and DAMON stay exercised but
     # the live-heat bonus does not override the profile's size choices
     heat = np.full(vma_blocks, 0.5)
     if not batched and legacy_rng is None:
         legacy_rng = _pyrandom.Random(0)
     for step in range(start, start + steps):
+        t0 = time.perf_counter_ns() if step_hist is not None else 0
         if batched:
             mm.fault_batch([(pid, step, FaultKind.FIRST_TOUCH)
                             for pid in pids])
@@ -190,6 +203,8 @@ def _drive(mm: MemoryManager, pids: list[int], start: int, steps: int,
                 _legacy_block_table(mm, pid, vma_blocks)
         mm.drain_moves()
         mm.tick()
+        if step_hist is not None:
+            step_hist.observe(time.perf_counter_ns() - t0)
 
 
 N_WINDOWS = 3     # per mode, interleaved scalar/batched; median reported
@@ -199,15 +214,18 @@ class _Cell:
     """One (policy, max_batch, mode) measurement lane with its own mm."""
 
     def __init__(self, policy: str, max_batch: int, *, batched: bool,
-                 steps: int, warmup: int):
+                 steps: int, warmup: int, telemetry=None):
         self.policy, self.max_batch, self.batched = policy, max_batch, batched
         self.steps = steps
         self.vma_blocks = N_WINDOWS * steps + warmup + 8
-        self.mm = _mk_mm(policy, max_batch, self.vma_blocks)
+        self.mm = _mk_mm(policy, max_batch, self.vma_blocks,
+                         telemetry=telemetry)
         self.pids = list(range(1, max_batch + 1))
         self.pos = 0
         self.windows: list[dict] = []
         self.legacy_rng = _pyrandom.Random(0)   # hermetic per cell
+        # measured per-step management wall time across all timed windows
+        self.mgmt_hist = Log2Hist()
         # warmup: first faults, compile of the batched policy, damon spin-up
         self._advance(warmup, timed=False)
 
@@ -217,7 +235,8 @@ class _Cell:
         calls0 = mm.hooks.calls[HOOK_FAULT]
         t0 = time.perf_counter()
         _drive(mm, self.pids, self.pos, steps, self.vma_blocks,
-               batched=self.batched, legacy_rng=self.legacy_rng)
+               batched=self.batched, legacy_rng=self.legacy_rng,
+               step_hist=self.mgmt_hist if timed else None)
         wall = time.perf_counter() - t0
         self.pos += steps
         if timed:
@@ -245,7 +264,12 @@ class _Cell:
             "faults_per_s": mid["faults"] / mid["wall"],
             "faults": mid["faults"],
             "policy_invocations_per_step": mid["calls"] / self.steps,
-            "mgmt_ns": mid["mgmt_ns"],
+            # MEASURED per-step management wall time (log2-hist percentiles
+            # over every timed step) — replaces the constant modeled lane
+            "mgmt_wall_p50_ns": self.mgmt_hist.percentile(50),
+            "mgmt_wall_p99_ns": self.mgmt_hist.percentile(99),
+            # the cost-model's modeled charge for the window, for reference
+            "modeled_mgmt_ns": mid["mgmt_ns"],
             "wall_host_s": mid["wall"],
         }
 
@@ -367,6 +391,44 @@ def collect_cache(*, smoke: bool = False) -> dict:
         shutil.rmtree(root, ignore_errors=True)
 
 
+TELEMETRY_LANES = ("none", "off", "on")
+
+
+def collect_telemetry(*, smoke: bool = False) -> dict:
+    """Observability-overhead lane: the batched ebpf workload with
+    (a) no telemetry object at all, (b) a constructed-but-DISABLED
+    Telemetry (what a binary linking the subsystem but not tracing pays),
+    (c) telemetry fully on (ring + histograms + every tracepoint).
+
+    Windows interleave across the three lanes so host drift hits them
+    alike; median steps/s per lane.  ``off_over_none`` is the number the
+    CI overhead gate holds >= 0.98 (tracing off costs ~nothing)."""
+    steps = 48 if smoke else 96
+    warmup = 8 if smoke else WARMUP
+    b = 4
+    tels = {"none": None, "off": Telemetry(enabled=False), "on": Telemetry()}
+    cells = {lane: _Cell("ebpf", b, batched=True, steps=steps, warmup=warmup,
+                         telemetry=tels[lane])
+             for lane in TELEMETRY_LANES}
+    for _ in range(N_WINDOWS):
+        for lane in TELEMETRY_LANES:
+            cells[lane].window()
+    out = {"steps_per_lane": steps, "lanes": {}}
+    for lane in TELEMETRY_LANES:
+        r = cells[lane].result()
+        out["lanes"][lane] = {
+            "steps_per_s": r["steps_per_s"],
+            "mgmt_wall_p50_ns": r["mgmt_wall_p50_ns"],
+            "mgmt_wall_p99_ns": r["mgmt_wall_p99_ns"],
+        }
+    base = out["lanes"]["none"]["steps_per_s"]
+    out["off_over_none"] = out["lanes"]["off"]["steps_per_s"] / base
+    out["on_over_none"] = out["lanes"]["on"]["steps_per_s"] / base
+    tel_on = tels["on"]
+    out["on_ring"] = tel_on.ring.snapshot()
+    return out
+
+
 def collect(*, smoke: bool = False) -> dict:
     batch_sizes = (4,) if smoke else BATCH_SIZES
     steps = 48 if smoke else STEPS
@@ -394,7 +456,8 @@ def collect(*, smoke: bool = False) -> dict:
     return {"bench": "hotpath", "steps_per_cell": steps, "cells": cells,
             "speedup_batched_over_scalar": speedup,
             "executors": collect_executors(smoke=smoke),
-            "cache": collect_cache(smoke=smoke)}
+            "cache": collect_cache(smoke=smoke),
+            "telemetry": collect_telemetry(smoke=smoke)}
 
 
 def main(smoke: bool = False) -> list[str]:
@@ -408,7 +471,8 @@ def main(smoke: bool = False) -> list[str]:
             f"steps_per_s={c['steps_per_s']:.1f};"
             f"faults_per_s={c['faults_per_s']:.0f};"
             f"inv_per_step={c['policy_invocations_per_step']:.2f};"
-            f"mgmt_us={c['mgmt_ns'] / 1e3:.0f}")
+            f"mgmt_wall_p50_us={c['mgmt_wall_p50_ns'] / 1e3:.0f};"
+            f"mgmt_wall_p99_us={c['mgmt_wall_p99_ns'] / 1e3:.0f}")
     for key, s in out["speedup_batched_over_scalar"].items():
         lines.append(f"hotpath_speedup_{key},{s:.2f},batched_over_scalar")
     for lane in out["executors"]["lanes"]:
@@ -418,6 +482,11 @@ def main(smoke: bool = False) -> list[str]:
             f"us_per_decision={lane['us_per_decision']:.1f}")
     lines.append(f"cache_warm_speedup,{out['cache']['warm_speedup']:.2f},"
                  f"build_plus_first_batch cold/warm")
+    tl = out["telemetry"]
+    lines.append(f"telemetry_off_over_none,{tl['off_over_none']:.3f},"
+                 f"steps_per_s ratio (gate >= 0.98)")
+    lines.append(f"telemetry_on_over_none,{tl['on_over_none']:.3f},"
+                 f"steps_per_s ratio, full tracing")
     return lines
 
 
@@ -451,3 +520,8 @@ if __name__ == "__main__":
               f"us_per_decision={lane['us_per_decision']:.1f}")
     print(f"cache_warm_speedup,{result['cache']['warm_speedup']:.2f},"
           f"build_plus_first_batch cold/warm")
+    tl = result["telemetry"]
+    print(f"telemetry_off_over_none,{tl['off_over_none']:.3f},"
+          f"steps_per_s ratio (gate >= 0.98)")
+    print(f"telemetry_on_over_none,{tl['on_over_none']:.3f},"
+          f"steps_per_s ratio, full tracing")

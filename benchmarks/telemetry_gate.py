@@ -1,0 +1,42 @@
+"""CI gate: telemetry disabled must cost (almost) nothing.
+
+Runs the hotpath bench's telemetry-overhead lane in smoke mode and requires
+the constructed-but-disabled Telemetry lane to stay within 2% steps/s of
+the no-telemetry baseline (``off_over_none >= 0.98``).  Host jitter on
+shared CI runners can flip a marginal run, so the gate takes the BEST of
+up to three attempts — a real regression (a tracepoint doing work on the
+disabled path) fails all three.
+
+Run:  PYTHONPATH=src python -m benchmarks.telemetry_gate
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.hotpath_bench import collect_telemetry
+
+THRESHOLD = 0.98
+ATTEMPTS = 3
+
+
+def main() -> int:
+    best = None
+    for attempt in range(1, ATTEMPTS + 1):
+        out = collect_telemetry(smoke=True)
+        ratio = out["off_over_none"]
+        print(f"attempt {attempt}: off_over_none={ratio:.3f} "
+              f"(on_over_none={out['on_over_none']:.3f})")
+        if best is None or ratio > best:
+            best = ratio
+        if ratio >= THRESHOLD:
+            print(f"PASS: telemetry-disabled overhead within "
+                  f"{(1 - THRESHOLD) * 100:.0f}% of baseline")
+            return 0
+    print(f"FAIL: off_over_none={best:.3f} < {THRESHOLD} on every attempt "
+          f"— the disabled-telemetry path is doing real work")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,9 @@ Run:  PYTHONPATH=src python examples/serve_paged.py [--arch gemma3_27b]
       PYTHONPATH=src python examples/serve_paged.py \
           --hbm-blocks 48 --tier-blocks 32,160,64 \
           --tier heat-tier                     # 4-tier: +peer-HBM, +NVMe
+      PYTHONPATH=src python examples/serve_paged.py \
+          --trace out/trace.json --metrics out/metrics.txt  # telemetry:
+          # Chrome trace (load in Perfetto) + Prometheus-style metrics
 """
 
 import argparse
@@ -44,6 +47,12 @@ ap.add_argument("--tier", default="ebpf-tier",
 ap.add_argument("--scalar-faults", action="store_true",
                 help="pre-batching fault path: one policy invocation per "
                      "fault instead of one per engine step")
+ap.add_argument("--trace", default="", metavar="FILE",
+                help="enable telemetry and write a Chrome trace-event JSON "
+                     "(engine spans + mm/program ring events) to FILE")
+ap.add_argument("--metrics", nargs="?", const="-", default="", metavar="FILE",
+                help="enable telemetry and dump a Prometheus-style metrics "
+                     "snapshot to FILE (default: stdout)")
 args = ap.parse_args()
 
 cfg = get_smoke_config(args.arch)
@@ -61,10 +70,12 @@ profile = Profile("chat", [
     ProfileRegion(8, 32, (0, 0, 0, 0)),                      # cold tail
 ]) if args.policy == "ebpf" else None
 
+telemetry = True if (args.trace or args.metrics) else None
 engine = ServingEngine(cfg, params, layout, max_batch=4, policy=args.policy,
                        profile=profile, host_blocks=args.host_blocks,
                        tier_blocks=tier_blocks, tier_policy=args.tier,
-                       batch_faults=not args.scalar_faults)
+                       batch_faults=not args.scalar_faults,
+                       telemetry=telemetry, trace=bool(args.trace))
 rng = np.random.default_rng(0)
 for r in range(args.requests):
     plen = int(rng.integers(16, 48))
@@ -76,3 +87,15 @@ out = engine.run()
 print(json.dumps(out, indent=1, default=float))
 for rid in sorted(engine.finished)[:3]:
     print(f"request {rid}: generated {engine.finished[rid][:10]}...")
+
+if args.trace:
+    engine.write_trace(args.trace)
+    print(f"wrote Chrome trace to {args.trace} (open in ui.perfetto.dev)")
+if args.metrics:
+    text = engine.metrics_text()
+    if args.metrics == "-":
+        print(text, end="")
+    else:
+        with open(args.metrics, "w") as f:
+            f.write(text)
+        print(f"wrote metrics snapshot to {args.metrics}")

@@ -49,7 +49,7 @@ from .programs import (ebpf_mm_program, never_program, reclaim_lru_program,
 from .tiering import (TIER_HBM, TIER_HOST, TierConfig, TieredMemoryManager)
 from .verifier import VerifierError, verify
 from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,
-                 HELPER_PROMOTION_COST, HELPER_TRACE, PolicyVM, RunResult,
-                 VMFault)
+                 HELPER_PROMOTION_COST, HELPER_RINGBUF_OUTPUT, HELPER_TRACE,
+                 PolicyVM, RunResult, VMFault)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

@@ -20,6 +20,9 @@ shapes, so it is cached across sessions under ``.cache/`` (gitignored;
 Environment: ``REPRO_CACHE_DIR`` overrides the root (default ``.cache`` in
 the working directory); ``REPRO_CACHE_DIR=0`` (or ``off``) disables disk
 persistence entirely — everything still works, just cold every session.
+``REPRO_CACHE_MAX_BYTES`` caps the on-disk artifact directory: when a write
+pushes the total over the cap, the least-recently-USED pickles (read hits
+refresh mtime) are evicted oldest-first until it fits.
 """
 
 from __future__ import annotations
@@ -33,23 +36,34 @@ from .lower import LoweredProgram, unroll_lowered
 
 _DISABLED = ("0", "off", "none", "")
 
+# Default on-disk artifact budget — far above a normal session's handful of
+# unroll pickles, small enough that a long-lived CI cache can't grow without
+# bound across program-shape churn.
+DEFAULT_MAX_BYTES = 256 * 1024 * 1024
+
 
 class ArtifactCache:
     """Two-level (in-process dict, on-disk pickle) cache for lowered and
-    unrolled program artifacts, plus the XLA persistent-cache hookup."""
+    unrolled program artifacts, plus the XLA persistent-cache hookup.
+    On-disk entries are LRU-evicted by last-used time under a size cap."""
 
-    def __init__(self, root: str | os.PathLike | None = None) -> None:
+    def __init__(self, root: str | os.PathLike | None = None,
+                 max_bytes: int | None = None) -> None:
         if root is None:
             env = os.environ.get("REPRO_CACHE_DIR")
             if env is not None and env.lower() in _DISABLED:
                 root = None
             else:
                 root = env or ".cache"
+        if max_bytes is None:
+            max_bytes = int(os.environ.get("REPRO_CACHE_MAX_BYTES",
+                                           DEFAULT_MAX_BYTES))
         self.root = Path(root) if root else None
+        self.max_bytes = max_bytes
         self._unrolled: dict[str, tuple] = {}   # in-proc, by program digest
         self._xla_enabled = False
         self.stats = {"unroll_disk_hits": 0, "unroll_hits": 0,
-                      "unroll_misses": 0}
+                      "unroll_misses": 0, "evictions": 0}
 
     @property
     def enabled(self) -> bool:
@@ -105,8 +119,11 @@ class ArtifactCache:
         if not self.enabled:
             return None
         try:
-            with open(self._path(name), "rb") as f:
-                return pickle.load(f)
+            path = self._path(name)
+            with open(path, "rb") as f:
+                obj = pickle.load(f)
+            os.utime(path)          # LRU: a read hit refreshes last-used
+            return obj
         except (OSError, pickle.UnpicklingError, EOFError, AttributeError,
                 ImportError, IndexError):
             return None     # missing/corrupt/stale artifact -> recompute
@@ -121,8 +138,36 @@ class ArtifactCache:
             with os.fdopen(fd, "wb") as f:
                 pickle.dump(obj, f)
             os.replace(tmp, path)   # atomic: readers never see partials
+            self._evict_lru(keep=path)
         except OSError:             # read-only fs etc: stay in-memory only
             pass
+
+    def _evict_lru(self, keep: Path | None = None) -> None:
+        """Drop the oldest-used artifact pickles until the directory fits
+        ``max_bytes``.  The just-written entry is exempt so a single
+        oversized artifact does not evict itself into a write loop."""
+        if not self.enabled or self.max_bytes <= 0:
+            return
+        try:
+            entries = []
+            for p in (self.root / "ebpf").glob("*.pkl"):
+                st = p.stat()
+                entries.append((st.st_mtime, st.st_size, p))
+        except OSError:
+            return
+        total = sum(size for _, size, _ in entries)
+        entries.sort()              # oldest last-used first
+        for _, size, p in entries:
+            if total <= self.max_bytes:
+                break
+            if keep is not None and p == keep:
+                continue
+            try:
+                p.unlink()
+            except OSError:
+                continue
+            total -= size
+            self.stats["evictions"] += 1
 
 
 # The process-wide default instance every HookRegistry uses unless handed a

@@ -9,11 +9,13 @@ overhead on non-hinted faults" property.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable
 
 import numpy as np
 
+from ..obs.ringbuf import EV_CACHE, EV_COMPILE, EV_HOOK
 from .context import CTX_LEN
 from .isa import Program
 from .maps import MapRegistry
@@ -24,6 +26,7 @@ HOOK_RECLAIM = "mm_reclaim"        # victim selection under memory pressure
 HOOK_TIER = "mm_tier"              # page placement for tiering (future work in paper)
 
 KNOWN_HOOKS = (HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER)
+HOOK_INDEX = {h: i for i, h in enumerate(KNOWN_HOOKS)}
 
 
 # Batch-execution backend selection: the predicated compiler (unroll +
@@ -53,10 +56,14 @@ class AttachedProgram:
 
 
 class HookRegistry:
-    def __init__(self, cache=None) -> None:
+    def __init__(self, cache=None, telemetry=None) -> None:
         # compiler-artifact cache (cross-session lowering/unroll pickles +
         # the XLA persistent cache); None = the process-wide default
         self.cache = cache
+        # telemetry hub (repro.obs.Telemetry) or None; every tracepoint in
+        # the dispatch paths below guards on it so the default (no
+        # telemetry) configuration pays one is-None check per dispatch
+        self.telemetry = telemetry
         self._hooks: dict[str, AttachedProgram | None] = {h: None for h in KNOWN_HOOKS}
         # decisions evaluated (one per ctx row — a batch of N counts N)
         self.invocations: dict[str, int] = {h: 0 for h in KNOWN_HOOKS}
@@ -88,7 +95,18 @@ class HookRegistry:
             return None
         self.invocations[hook] += 1
         self.calls[hook] += 1
-        return ap.vm.run(ctx_vec).ret
+        tel = self.telemetry
+        if tel is None or not tel.enabled:
+            return ap.vm.run(ctx_vec).ret
+        t0 = time.perf_counter_ns()
+        res = ap.vm.run(ctx_vec)
+        dt = time.perf_counter_ns() - t0
+        tel.observe_hook(hook, dt, 1)
+        tel.emit(EV_HOOK, HOOK_INDEX[hook], 1, dt)
+        for e in res.events:
+            tel.ring.push(*e)
+        tel.prog_lane_drops += res.dropped
+        return res.ret
 
     def _artifact_cache(self):
         if self.cache is None:
@@ -97,23 +115,34 @@ class HookRegistry:
         return self.cache
 
     def _batch_backend(self, ap: AttachedProgram):
+        tel = self.telemetry
+        built = None        # (segments or -1, wall ns) when a backend is built
         if ap.pred is None and not ap.pred_unfit:
             cache = self._artifact_cache()
             cache.enable_xla_cache()
+            t0 = time.perf_counter_ns()
             try:
                 from .predicate import PredicatedPolicy
                 code, cuts = cache.unrolled(ap.vm.lowered)
                 ap.pred = PredicatedPolicy(ap.vm.lowered, ap.vm.maps,
                                            code=code, cuts=cuts,
                                            seg_limit=PRED_MAX_UNROLL)
+                built = (ap.pred.num_segments, time.perf_counter_ns() - t0)
             except ValueError:      # unroll over MAX_UNROLLED -> JIT fallback
                 ap.pred_unfit = True
-        if ap.pred is not None:
-            return ap.pred
-        if ap.jit is None:
+        if ap.pred is None and ap.jit is None:
             from .jit import JitPolicy
+            t0 = time.perf_counter_ns()
             ap.jit = JitPolicy(ap.vm.lowered, ap.vm.maps)
-        return ap.jit
+            built = (-1, time.perf_counter_ns() - t0)
+        if built is not None and tel is not None and tel.enabled:
+            hook = next((h for h, a in self._hooks.items() if a is ap), "?")
+            tel.emit(EV_COMPILE, HOOK_INDEX.get(hook, -1), built[0], built[1])
+            cs = self._artifact_cache().stats
+            tel.emit(EV_CACHE, cs.get("unroll_hits", 0),
+                     cs.get("unroll_misses", 0), cs.get("unroll_disk_hits", 0))
+            tel.inc("backend_builds")
+        return ap.pred if ap.pred is not None else ap.jit
 
     def warm(self, hook: str, max_batch: int = PAD_MIN) -> None:
         """Eagerly build (and compile) the batch backend for ``hook`` up to
@@ -158,4 +187,20 @@ class HookRegistry:
         if pad > n:
             ctx_mat = np.concatenate(
                 [ctx_mat, np.repeat(ctx_mat[:1], pad - n, axis=0)])
-        return backend.run_batch(ctx_mat)[:n]
+        tel = self.telemetry
+        if tel is None or not tel.enabled:
+            return backend.run_batch(ctx_mat)[:n]
+        t0 = time.perf_counter_ns()
+        out = backend.run_batch(ctx_mat)[:n]
+        dt = time.perf_counter_ns() - t0
+        tel.observe_hook(hook, dt, n)
+        tel.emit(EV_HOOK, HOOK_INDEX[hook], n, dt)
+        if getattr(backend, "rb_cap", 0):
+            # drain the device event buffers: only the n real lanes — the
+            # power-of-two padding rows are repeats of row 0 and their
+            # emissions (like their decisions) are discarded
+            events, drops = backend.take_events(n)
+            for e in events:
+                tel.ring.push(*e)
+            tel.prog_lane_drops += drops
+        return out

@@ -36,11 +36,12 @@ import numpy as np
 
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Op, Program)
-from .lower import (LIns, LoweredProgram, VecCtx, alu_jnp as _alu_jnp,
-                    cmp_jnp as _cmp_jnp, helper_jnp, ldctx_dyn, lower,
-                    map_lookup, map_lookup_dyn)
+from .lower import (LIns, LoweredProgram, RB_FIELDS, VecCtx,
+                    alu_jnp as _alu_jnp, cmp_jnp as _cmp_jnp,
+                    collect_rb_events, helper_jnp, ldctx_dyn, lower,
+                    map_lookup, map_lookup_dyn, rb_words)
 from .maps import MapRegistry
-from .vm import _IMM2REG, _JIMM2REG
+from .vm import _IMM2REG, _JIMM2REG, RB_HELPERS
 
 I64 = jnp.int64
 
@@ -51,12 +52,19 @@ def compile_program(program: Program | LoweredProgram, maps: MapRegistry):
     The returned function is jit/vmap-compatible.  ``map_arrays`` is a tuple
     of capacity-padded int64 arrays, ``map_lens`` an int64 vector of live
     lengths (dynamic, so userspace can reload profiles without recompiling).
+
+    Programs that call a ring-buffer helper (``facts["rb_cap"] > 0``) thread
+    a per-lane event-slot buffer through the machine state, and the compiled
+    function returns ``(r0, events [rb_cap, 5], count, drops)`` instead of
+    bare ``r0`` — callers drain the extra outputs host-side.  Programs that
+    never emit keep the original state/signature exactly.
     """
     lp = program if isinstance(program, LoweredProgram) else \
         lower(program, maps)
     insns = list(lp.insns)
     n = len(insns)
     exit_pc = n  # virtual halt pc
+    rb_cap = int(lp.facts.get("rb_cap", 0))
 
     def make_step(pc: int, insn: LIns):
         op = insn.op
@@ -114,6 +122,14 @@ def compile_program(program: Program | LoweredProgram, maps: MapRegistry):
                 nxt = jnp.where(newv != 0, insn.target, pc + 1).astype(jnp.int32)
                 return dict(state, regs=regs, pc=nxt)
             if op == Op.CALL:
+                if rb_cap and insn.imm in RB_HELPERS:
+                    words = rb_words(insn.imm, lambda i: regs[i], cv)
+                    ev, cnt, dr, r0 = cv.event_write(
+                        state["ev"], state["ecnt"], state["edrop"], words,
+                        True)
+                    regs = regs.at[0].set(r0)
+                    return dict(state, regs=regs, ev=ev, ecnt=cnt, edrop=dr,
+                                pc=jnp.int32(pc + 1))
                 r0 = helper_jnp(insn.imm, lambda i: regs[i], cv)
                 regs = regs.at[0].set(r0)
                 return dict(state, regs=regs, pc=jnp.int32(pc + 1))
@@ -139,6 +155,10 @@ def compile_program(program: Program | LoweredProgram, maps: MapRegistry):
             "regs": jnp.zeros(NUM_REGS, I64),
             "fuel": jnp.int32(fuel0),
         }
+        if rb_cap:
+            state["ev"] = jnp.zeros((rb_cap, RB_FIELDS), I64)
+            state["ecnt"] = jnp.zeros((), I64)
+            state["edrop"] = jnp.zeros((), I64)
 
         def cond(state):
             return (state["pc"] != exit_pc) & (state["fuel"] > 0)
@@ -150,6 +170,9 @@ def compile_program(program: Program | LoweredProgram, maps: MapRegistry):
             return new
 
         final = jax.lax.while_loop(cond, body, state)
+        if rb_cap:
+            return (final["regs"][0], final["ev"], final["ecnt"],
+                    final["edrop"])
         return final["regs"][0]
 
     return run, lp.facts
@@ -165,6 +188,8 @@ class JitPolicy:
         self._batched = jax.jit(jax.vmap(self._fn, in_axes=(0, None, None)))
         self._single = jax.jit(self._fn)
         self._map_cache: tuple | None = None   # (version, arrays, lens)
+        self.rb_cap = int(self.facts.get("rb_cap", 0))
+        self._last_rb: tuple | None = None     # (ev, cnt, drops) device arrays
 
     def _map_args(self):
         ver = self.maps.version()
@@ -183,10 +208,29 @@ class JitPolicy:
         # flipping global dtype promotion for the rest of the framework.
         with jax.experimental.enable_x64():
             arrays, lens = self._map_args()
-            return int(self._single(jnp.asarray(ctx_vec, I64), arrays, lens))
+            out = self._single(jnp.asarray(ctx_vec, I64), arrays, lens)
+            if self.rb_cap:
+                r0, ev, cnt, dr = out
+                self._last_rb = (ev[None], cnt[None], dr[None])
+                return int(r0)
+            return int(out)
 
     def run_batch(self, ctx_mat: np.ndarray) -> np.ndarray:
         """ctx_mat: [batch, CTX_LEN] -> int64[batch] decisions."""
         with jax.experimental.enable_x64():
             arrays, lens = self._map_args()
-            return np.asarray(self._batched(jnp.asarray(ctx_mat, I64), arrays, lens))
+            out = self._batched(jnp.asarray(ctx_mat, I64), arrays, lens)
+            if self.rb_cap:
+                r0, ev, cnt, dr = out
+                self._last_rb = (ev, cnt, dr)
+                return np.asarray(r0)
+            return np.asarray(out)
+
+    def take_events(self, n: int) -> tuple[list, int]:
+        """Drain the last run's ring-buffer records for the first ``n``
+        lanes (and their slot-drop count); empty until the next run."""
+        if self._last_rb is None:
+            return [], 0
+        ev, cnt, dr = self._last_rb
+        self._last_rb = None
+        return collect_rb_events(ev, cnt, dr, n)

@@ -38,7 +38,9 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..obs.ringbuf import EV_PROG_TRACE
 from .context import CTX, CTX_LEN, MAX_TIERS
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   JUMP_OPS, Insn, Op, Program)
@@ -53,7 +55,18 @@ MAX_UNROLLED = 20_000
 # Bump when the IR layout or any lowering semantics change: the artifact
 # cache (core.cache) folds this into every digest so stale on-disk pickles
 # can never be misread by a newer pipeline.
-IR_VERSION = 1
+# v2: ring-buffer helpers (HELPER_TRACE / bpf_ringbuf_output) lower to real
+# per-lane event-slot writes instead of a device no-op.
+IR_VERSION = 2
+
+# Ring-buffer event record width: (ts, tag, a0, a1, a2), all int64.
+RB_FIELDS = 5
+
+# Hard per-invocation per-lane event-slot budget.  The exact worst case is
+# computed from the verifier's loop trip counts per program; this clamp
+# bounds the threaded device buffer for emit-heavy loops (drops past it are
+# counted, identically on every executor).
+RB_MAX_PER_RUN = 64
 
 
 @dataclass(frozen=True)
@@ -111,6 +124,30 @@ class LoweredProgram:
         return h.hexdigest()
 
 
+def _rb_capacity(program: Program, facts: dict) -> int:
+    """Worst-case ring-buffer emissions of ONE invocation: every CALL to an
+    emitting helper weighted by its loop's verifier-proven trip count (loops
+    are non-nested, so one weight per site), clamped to RB_MAX_PER_RUN.
+    This is the static size of the per-lane slot buffer each executor
+    threads — and 0 for the (default) programs that never emit, which is
+    what keeps the no-telemetry fast path's traced computations unchanged."""
+    from .vm import RB_HELPERS          # late: vm imports this module's peer
+    insns = program.insns
+    loops = [(pc + 1 + insn.imm, pc, trips)      # (body start, back edge, n)
+             for pc, insn in enumerate(insns) if insn.op == Op.JNZDEC
+             for trips in (facts.get("loop_trips", {}).get(pc, 1),)]
+    total = 0
+    for pc, insn in enumerate(insns):
+        if insn.op == Op.CALL and insn.imm in RB_HELPERS:
+            weight = 1
+            for t, j, trips in loops:
+                if t <= pc < j:
+                    weight = trips
+                    break
+            total += weight
+    return min(total, RB_MAX_PER_RUN)
+
+
 def lower(program: Program, maps, *, helper_ids=None) -> LoweredProgram:
     """Verify ``program`` once and lower it to the shared flat IR."""
     if helper_ids is None:
@@ -118,6 +155,7 @@ def lower(program: Program, maps, *, helper_ids=None) -> LoweredProgram:
         helper_ids = HELPER_IDS
     facts = verify(program, num_maps=len(maps), map_lens=maps.lens(),
                    helper_ids=helper_ids)
+    facts["rb_cap"] = _rb_capacity(program, facts)
     out: list[LIns] = []
     for pc, insn in enumerate(program.insns):
         op = insn.op
@@ -306,6 +344,32 @@ class VecCtx:
     def zeros_like_lane(self):
         return jnp.asarray(0, I64)
 
+    def lane(self, v: int):
+        """Broadcast a python constant to the lane shape."""
+        return jnp.asarray(v, I64)
+
+    def event_write(self, events, count, drops, words, fire):
+        """One ``bpf_ringbuf_output`` emission into this lane's slot buffer.
+
+        ``events [cap, RB_FIELDS]``, ``count``/``drops`` scalars, ``words``
+        the 5 record scalars, ``fire`` whether the call executes (always
+        True on the per-lane JIT — reaching the CALL means it runs).
+        Returns ``(events, count, drops, r0)``: r0 = 0 on success, -1 when
+        the slot budget is spent (then drops increments) — bit-identical to
+        the interpreter helper."""
+        cap = events.shape[0]
+        fire = jnp.asarray(fire)
+        ok = fire & (count < cap)
+        idx = jnp.clip(count, 0, cap - 1).astype(jnp.int32)
+        row = jnp.stack([jnp.asarray(w, I64) for w in words])
+        cur = jax.lax.dynamic_slice_in_dim(events, idx, 1, axis=0)
+        events = jax.lax.dynamic_update_slice_in_dim(
+            events, jnp.where(ok, row[None], cur), idx, axis=0)
+        count = count + ok.astype(count.dtype)
+        drops = drops + (fire & ~ok).astype(drops.dtype)
+        r0 = jnp.where(ok, jnp.asarray(0, I64), jnp.asarray(-1, I64))
+        return events, count, drops, r0
+
 
 class BatchCtx:
     """Ctx view over a ``[B, CTX_LEN]`` matrix (the predicated compiler)."""
@@ -324,6 +388,27 @@ class BatchCtx:
 
     def zeros_like_lane(self):
         return jnp.zeros(self.ctx.shape[0], I64)
+
+    def lane(self, v: int):
+        """Broadcast a python constant to the lane shape."""
+        return jnp.full(self.ctx.shape[0], v, I64)
+
+    def event_write(self, events, count, drops, words, fire):
+        """Batched twin of :meth:`VecCtx.event_write`: ``events [B, cap,
+        RB_FIELDS]``, ``count``/``drops`` ``[B]``, ``words`` five ``[B]``
+        vectors, ``fire`` the predicated compiler's per-lane active mask
+        (inactive lanes write nothing, count nothing, drop nothing)."""
+        B, cap = events.shape[0], events.shape[1]
+        ok = fire & (count < cap)
+        idx = jnp.clip(count, 0, cap - 1).astype(jnp.int32)
+        lanes = jnp.arange(B)
+        row = jnp.stack([jnp.asarray(w, I64) for w in words], axis=-1)
+        cur = events[lanes, idx]
+        events = events.at[lanes, idx].set(jnp.where(ok[:, None], row, cur))
+        count = count + ok.astype(count.dtype)
+        drops = drops + (fire & ~ok).astype(drops.dtype)
+        r0 = jnp.where(ok, 0, -1).astype(I64)
+        return events, count, drops, r0
 
 
 def ldctx_dyn(cv, idx):
@@ -366,7 +451,7 @@ def helper_jnp(helper_id: int, reg, cv):
     bodies in :mod:`vm` bit for bit — this is the ONE copy the two compiled
     backends share, replacing the per-backend CALL switch arms."""
     from .vm import (HELPER_KTIME, HELPER_MIGRATE_COST,
-                     HELPER_PROMOTION_COST)
+                     HELPER_PROMOTION_COST, RB_HELPERS)
     if helper_id == HELPER_KTIME:
         return cv.col(CTX.KTIME_NS)
     if helper_id == HELPER_PROMOTION_COST:
@@ -390,5 +475,40 @@ def helper_jnp(helper_id: int, reg, cv):
         per = (cv.col_dyn(jnp.int32(CTX.MIG_CUM_NS_T0) + hi)
                - cv.col_dyn(jnp.int32(CTX.MIG_CUM_NS_T0) + lo))
         return setup + per * nblocks
-    # HELPER_TRACE and any future host-only facility: no-op on device
+    if helper_id in RB_HELPERS:
+        # the backends' CALL arms route these through CtxView.event_write
+        # (they mutate the threaded event buffers, not just r0) — landing
+        # here means a backend was miswired
+        raise ValueError(f"ring-buffer helper {helper_id} must lower "
+                         f"through event_write, not helper_jnp")
+    # any future host-only facility: no-op on device
     return cv.zeros_like_lane()
+
+
+def rb_words(helper_id: int, reg, cv):
+    """The 5-word event record of a ring-buffer helper call, shared by both
+    compiled backends: ``(ts, tag, a0, a1, a2)`` in the caller's lane shape.
+    ``ts`` is the modeled clock from ctx — NOT wall time — so the record is
+    bit-identical to the interpreter helper's."""
+    from .vm import HELPER_TRACE
+    ts = cv.col(CTX.KTIME_NS)
+    if helper_id == HELPER_TRACE:
+        return (ts, cv.lane(EV_PROG_TRACE), reg(1), cv.lane(0), cv.lane(0))
+    return (ts, reg(1), reg(2), reg(3), reg(4))
+
+
+def collect_rb_events(ev, cnt, drop, n: int) -> tuple[list, int]:
+    """Host-side drain of a backend's per-lane event buffers: the records of
+    the first ``n`` lanes (lane-major, slot order — exactly the order a
+    scalar interpreter loop over the same rows appends) plus their summed
+    slot-drop count.  ``ev [B, cap, RB_FIELDS]``, ``cnt``/``drop`` ``[B]``.
+    """
+    ev = np.asarray(ev)
+    cnt = np.asarray(cnt)
+    drop = np.asarray(drop)
+    out: list = []
+    for lane in range(min(n, ev.shape[0])):
+        k = int(cnt[lane])
+        for s in range(k):
+            out.append(tuple(int(x) for x in ev[lane, s]))
+    return out, int(drop[:n].sum())

@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..obs.ringbuf import (EV_COLLAPSE, EV_COMPACT, EV_FAULT, EV_RECLAIM)
 from .buddy import RADIX, BuddyAllocator, BuddyError, order_blocks
 from .context import (CTX, CTX_LEN, MAX_TIERS, NUM_ORDERS, POLICY_FALLBACK,
                       FaultContext, FaultKind, ctx_batch, fill_system_columns)
@@ -132,14 +133,20 @@ class FaultResult:
 class MemoryManager:
     def __init__(self, num_blocks: int, cost: CostModel, *,
                  default_mode: str = "thp", max_order: int = NUM_ORDERS - 1,
-                 damon_seed: int = 0) -> None:
+                 damon_seed: int = 0, telemetry=None) -> None:
         if default_mode not in ("thp", "never"):
             raise ValueError("default_mode must be 'thp' or 'never'")
         self.buddy = BuddyAllocator(num_blocks, max_order=max_order)
         self.cost = cost
         self.default_mode = default_mode
         self.max_order = max_order
-        self.hooks = HookRegistry()
+        # telemetry hub (repro.obs.Telemetry) or None (default, zero cost):
+        # tracepoints below fire framework events with the MODELED clock so
+        # streams stay deterministic; wall-time observations never land in
+        # MMStats (the differential harness asserts snapshot equality
+        # across replicas — telemetry keeps its own books).
+        self.telemetry = telemetry
+        self.hooks = HookRegistry(telemetry=telemetry)
         self.maps = MapRegistry()
         self.procs: dict[int, ProcessState] = {}
         self.profiles: dict[str, tuple[Profile, int]] = {}   # app -> (profile, map_id)
@@ -562,6 +569,10 @@ class MemoryManager:
         self.stats.pages_per_order[order] += 1
         self.stats.blocks_zeroed += size
         self.stats.mgmt_ns += self.cost.zero_ns_per_block() * size
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.emit(EV_FAULT, st.pid, a, order | (int(hinted) << 8),
+                     ts=self.ktime_ns)
         return FaultResult(order=order, phys_start=phys, hinted=hinted,
                            compacted=compacted, moves=moves)
 
@@ -584,6 +595,11 @@ class MemoryManager:
         self.stats.mgmt_ns += self.cost.compact_ns_per_block() * blocks
         self._move_log.extend((device_offset + s, device_offset + d, o)
                               for s, d, o in plan)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.emit(EV_COMPACT, tier, blocks,
+                     self.cost.compact_ns_per_block() * blocks,
+                     ts=self.ktime_ns)
 
     # ---------------------------------------------------------- khugepaged
     def collapse(self, pid: int, addr: int, to_order: int) -> FaultResult | None:
@@ -637,6 +653,9 @@ class MemoryManager:
         self.stats.mgmt_ns += (self.cost.compact_ns_per_block() * copied
                                + self.cost.zero_ns_per_block() * (size - copied))
         self._move_log.extend(moves)
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.emit(EV_COLLAPSE, pid, a, to_order, ts=self.ktime_ns)
         return FaultResult(order=to_order, phys_start=phys, hinted=True,
                            compacted=False, moves=moves)
 
@@ -662,6 +681,10 @@ class MemoryManager:
     def evict_process(self, pid: int) -> None:
         self.free_process(pid)
         self.stats.evictions += 1
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.emit(EV_RECLAIM, pid, 0, 0, ts=self.ktime_ns)
+            tel.inc("evictions")
 
     # -------------------------------------------------------------- access
     def _access_ns_tables(self) -> np.ndarray:
@@ -748,6 +771,15 @@ class MemoryManager:
 
     # ------------------------------------------------------------- misc
     def tick(self, ns: int = 1_000_000) -> None:
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            # per-(tier, order) residency sample, one block-tick per mapped
+            # block per tick — the occupancy matrix behind the metrics
+            # snapshot's residency_block_ticks
+            for st in self.procs.values():
+                _starts, sizes, orders, tiers, _dev = self._mapping_arrays(st)
+                if sizes.size:
+                    tel.observe_residency(tiers, orders, sizes)
         self.ktime_ns += ns
 
     def hugepage_block_fraction(self) -> float:

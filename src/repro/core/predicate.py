@@ -41,12 +41,13 @@ import numpy as np
 
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Op, Program)
-from .lower import (LIns, LoweredProgram, BatchCtx, MAX_UNROLLED,
-                    alu_jnp as _alu_jnp, cmp_jnp as _cmp_jnp, helper_jnp,
-                    ldctx_dyn, lower, map_lookup, map_lookup_dyn,
-                    segment_code, unroll_lowered)
+from .lower import (LIns, LoweredProgram, BatchCtx, MAX_UNROLLED, RB_FIELDS,
+                    alu_jnp as _alu_jnp, cmp_jnp as _cmp_jnp,
+                    collect_rb_events, helper_jnp, ldctx_dyn, lower,
+                    map_lookup, map_lookup_dyn, rb_words, segment_code,
+                    unroll_lowered)
 from .maps import MapRegistry
-from .vm import _IMM2REG, _JIMM2REG
+from .vm import _IMM2REG, _JIMM2REG, RB_HELPERS
 
 I64 = jnp.int64
 
@@ -101,16 +102,21 @@ def _plan_segments(code: tuple[LIns, ...], cuts: tuple[int, ...],
 
 def _make_segment_fn(code: tuple[LIns, ...], start: int, end: int,
                      entry_targets: tuple[int, ...],
-                     exit_targets: tuple[int, ...]) -> Callable:
+                     exit_targets: tuple[int, ...],
+                     rb_cap: int = 0) -> Callable:
     """Build the traced body of one segment.
 
     Signature: ``(ctx[B,C], map_arrays, map_lens, regs[R,B], active[B],
     done[B], r0[B], entry_masks tuple) -> (regs, active, done, r0,
     exit_masks tuple)`` — ``active`` out is the fall-through mask into the
-    next segment."""
+    next segment.  When the program emits ring-buffer events (``rb_cap >
+    0``) the per-lane event buffers ``(ev[B,cap,5], ecnt[B], edrop[B])``
+    are threaded through as three extra leading-state params/results;
+    emit-free programs keep the original signature (and thus their cached
+    XLA executables) exactly."""
 
     def seg(ctx, map_arrays, map_lens, regs_in, active, done, r0_final,
-            entry_masks):
+            entry_masks, ev=None, ecnt=None, edrop=None):
         B = ctx.shape[0]
         cv = BatchCtx(ctx)
         regs = [regs_in[i] for i in range(NUM_REGS)]
@@ -168,7 +174,12 @@ def _make_segment_fn(code: tuple[LIns, ...], start: int, end: int,
                     insn.target, jnp.zeros(B, bool)) | taken
                 active = active & ~taken
             elif op == Op.CALL:
-                r0 = helper_jnp(insn.imm, lambda i: regs[i], cv)
+                if rb_cap and insn.imm in RB_HELPERS:
+                    words = rb_words(insn.imm, lambda i: regs[i], cv)
+                    ev, ecnt, edrop, r0 = cv.event_write(
+                        ev, ecnt, edrop, words, active)
+                else:
+                    r0 = helper_jnp(insn.imm, lambda i: regs[i], cv)
                 regs = write(regs, 0, r0, active)
             elif op == Op.EXIT:
                 r0_final = jnp.where(active & ~done, regs[0], r0_final)
@@ -180,6 +191,9 @@ def _make_segment_fn(code: tuple[LIns, ...], start: int, end: int,
                            for t in exit_targets)
         # forward-only code: anything still pending must be an exit target
         assert not pending, f"unconsumed jump targets {sorted(pending)}"
+        if rb_cap:
+            return (jnp.stack(regs), active, done, r0_final, exit_masks,
+                    ev, ecnt, edrop)
         return jnp.stack(regs), active, done, r0_final, exit_masks
 
     return seg
@@ -221,11 +235,13 @@ class PredicatedPolicy:
             raise TypeError("code must be lowered-IR (see core.lower)")
         self.unrolled_len = len(code)
         self.seg_limit = seg_limit
+        self.rb_cap = int(lp.facts.get("rb_cap", 0))
+        self._last_rb: tuple | None = None     # (ev, cnt, drops) device arrays
         self.segments: list[_Segment] = []
         for start, end, entry, exits in _plan_segments(
                 tuple(code), tuple(cuts or ()), seg_limit):
             fn = jax.jit(_make_segment_fn(tuple(code), start, end,
-                                          entry, exits))
+                                          entry, exits, rb_cap=self.rb_cap))
             self.segments.append(_Segment(start, end, entry, exits, fn))
         self._map_cache: tuple | None = None   # (version, arrays, lens)
         # per-batch-size initial machine state, built once: jnp constants are
@@ -254,20 +270,33 @@ class PredicatedPolicy:
         if st is None:
             st = (jnp.zeros((NUM_REGS, B), I64), jnp.ones(B, bool),
                   jnp.zeros(B, bool), jnp.zeros(B, I64))
+            if self.rb_cap:
+                st += (jnp.zeros((B, self.rb_cap, RB_FIELDS), I64),
+                       jnp.zeros(B, I64), jnp.zeros(B, I64))
             self._state_cache[B] = st
         return st
 
     def _run_segments(self, ctx, map_arrays, map_lens):
         B = ctx.shape[0]
-        regs, active, done, r0 = self._init_state(B)
+        if self.rb_cap:
+            regs, active, done, r0, ev, ecnt, edrop = self._init_state(B)
+        else:
+            regs, active, done, r0 = self._init_state(B)
         zeros = done
         pending: dict[int, jax.Array] = {}
         for seg in self.segments:
             entry = tuple(pending.pop(t, zeros) for t in seg.entry_targets)
-            regs, active, done, r0, exits = seg.fn(
-                ctx, map_arrays, map_lens, regs, active, done, r0, entry)
+            if self.rb_cap:
+                regs, active, done, r0, exits, ev, ecnt, edrop = seg.fn(
+                    ctx, map_arrays, map_lens, regs, active, done, r0,
+                    entry, ev, ecnt, edrop)
+            else:
+                regs, active, done, r0, exits = seg.fn(
+                    ctx, map_arrays, map_lens, regs, active, done, r0, entry)
             for t, m in zip(seg.exit_targets, exits):
                 pending[t] = (pending[t] | m) if t in pending else m
+        if self.rb_cap:
+            self._last_rb = (ev, ecnt, edrop)
         return r0
 
     def run_batch(self, ctx_mat: np.ndarray) -> np.ndarray:
@@ -275,3 +304,12 @@ class PredicatedPolicy:
             arrays, lens = self._map_args()
             return np.asarray(self._run_segments(
                 jnp.asarray(ctx_mat, I64), arrays, lens))
+
+    def take_events(self, n: int) -> tuple[list, int]:
+        """Drain the last batch's ring-buffer records for the first ``n``
+        lanes (and their slot-drop count); empty until the next batch."""
+        if self._last_rb is None:
+            return [], 0
+        ev, cnt, dr = self._last_rb
+        self._last_rb = None
+        return collect_rb_events(ev, cnt, dr, n)

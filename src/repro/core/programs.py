@@ -31,12 +31,15 @@ from __future__ import annotations
 from .context import CTX, FaultKind, POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP
 from .isa import Asm, Program
 from .profiles import MAX_PROFILE_REGIONS, REGION_STRIDE
-from .vm import HELPER_MIGRATE_COST, HELPER_PROMOTION_COST
+from .vm import (HELPER_MIGRATE_COST, HELPER_PROMOTION_COST,
+                 HELPER_RINGBUF_OUTPUT)
+from ..obs.ringbuf import EV_PROG_BASE
 
 
 def ebpf_mm_program(profile_map_id: int | None = None,
                     heat_weight_milli: int = 1000,
-                    max_regions: int = MAX_PROFILE_REGIONS) -> Program:
+                    max_regions: int = MAX_PROFILE_REGIONS,
+                    trace: bool = False) -> Program:
     """The paper's fault-hook program.
 
     profile map layout per region (REGION_STRIDE int64s):
@@ -48,6 +51,9 @@ def ebpf_mm_program(profile_map_id: int | None = None,
     Passing ``profile_map_id`` pins a static map instead (single-app mode).
     ``max_regions`` bounds the verified search loop; lowering it keeps the
     unrolled (predicated) compile small when profiles are known to be short.
+    ``trace=True`` appends a bpf_ringbuf_output emission of every decision
+    (tag EV_PROG_BASE, args addr/decision/fault_max_order) — the same event
+    stream on all three executors, at the cost of one event slot per lane.
 
     Register plan:
         r1 addr / helper arg     r2 nregions / fault_max_order / map id
@@ -122,12 +128,27 @@ def ebpf_mm_program(profile_map_id: int | None = None,
         a.movi("r7", k)
         a.label(skip)
     a.mov("r0", "r7")
-    a.exit()
+    if not trace:
+        a.exit()
+        a.label("fallback")
+        a.movi("r0", POLICY_FALLBACK)
+        a.exit()
+        return a.build("ebpf_mm")
 
+    a.ja("emit")
     a.label("fallback")
     a.movi("r0", POLICY_FALLBACK)
+    # shared emit tail: bpf_ringbuf_output(tag, addr, decision, max_order)
+    a.label("emit")
+    a.mov("r9", "r0")                        # decision survives the call
+    a.movi("r1", EV_PROG_BASE)
+    a.ldctx("r2", CTX.ADDR)
+    a.mov("r3", "r9")
+    a.ldctx("r4", CTX.FAULT_MAX_ORDER)
+    a.call(HELPER_RINGBUF_OUTPUT)
+    a.mov("r0", "r9")
     a.exit()
-    return a.build("ebpf_mm")
+    return a.build("ebpf_mm_traced")
 
 
 def thp_always_program() -> Program:

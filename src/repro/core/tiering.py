@@ -51,32 +51,10 @@ from .context import (CTX, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
 from .cost import CostModel, TierSpec, host_dram_tier
 from .hooks import HOOK_TIER
 from .mm import MemoryManager, PageMapping, ProcessState
+from ..obs.ringbuf import EV_MIGRATE_HOP
 
 TIER_HBM = 0
 TIER_HOST = 1     # the first spill tier of the classic 2-pool topology
-
-# tier_snapshot() keys that pre-date the N-pool generalization: they name
-# tier 1, which on a deeper chain is peer-HBM rather than host DRAM.
-_LEGACY_SNAPSHOT_KEYS = frozenset({
-    "host_blocks", "host_free_blocks", "host_resident_blocks",
-    "host_utilization_milli"})
-
-
-class _TierSnapshot(dict):
-    """tier_snapshot() return type: a dict whose deprecated ``host_*`` keys
-    warn on read (iteration/serialization stay silent, so JSON-dumping the
-    snapshot does not spam — only code that still ADDRESSES the 2-pool keys
-    hears about it)."""
-
-    def __getitem__(self, key):
-        if key in _LEGACY_SNAPSHOT_KEYS:
-            import warnings
-            warnings.warn(
-                f"tier_snapshot()[{key!r}] is deprecated: it names tier 1, "
-                f"which is peer-HBM (not host DRAM) on chains deeper than 2 "
-                f"pools; use tier_snapshot()['tiers'][t] instead",
-                DeprecationWarning, stacklevel=2)
-        return dict.__getitem__(self, key)
 
 
 @dataclass
@@ -395,7 +373,13 @@ class TieredMemoryManager(MemoryManager):
         self._move_log.append((src_dev, self._tier_base[dst_tier] + phys,
                                m.order))
         self.pools[m.tier].free(m.phys_start)
-        self.stats.mgmt_ns += self.cost.migrate_ns(m.order, m.tier, dst_tier)
+        hop_ns = self.cost.migrate_ns(m.order, m.tier, dst_tier)
+        self.stats.mgmt_ns += hop_ns
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.observe_migrate(hop_ns)
+            tel.emit(EV_MIGRATE_HOP, (m.tier << 8) | dst_tier,
+                     n * self.cost.block_bytes, hop_ns, ts=self.ktime_ns)
         if dst_tier > m.tier:
             self.stats.demotions += 1
             self.stats.demotion_blocks += n
@@ -578,24 +562,15 @@ class TieredMemoryManager(MemoryManager):
     def tier_snapshot(self) -> dict:
         """Pool-state snapshot: the per-tier ``tiers`` list is the API.
 
-        The legacy ``host_*`` keys are DEPRECATED: they hard-code "the spill
-        tier" as tier 1, which on a 4-tier chain is peer-HBM, not host DRAM
-        — silently the wrong pool.  They still resolve (reading one emits a
-        ``DeprecationWarning``) so old dashboards keep working; consumers
-        should index ``snapshot["tiers"][t]`` instead."""
-        hstats = self.pools[TIER_HOST].stats()
-        out = _TierSnapshot({
+        The pre-N-pool ``host_*`` keys (which hard-coded "the spill tier"
+        as tier 1 — silently the wrong pool on a deeper chain) went through
+        a DeprecationWarning cycle and are now REMOVED; consumers index
+        ``snapshot["tiers"][t]``."""
+        out = {
             "pcie_ns_per_block": self.cost.pcie_ns_per_block(),
             "ntiers": self.ntiers,
             "tiers": [],
-        })
-        legacy = {
-            "host_blocks": self.host_blocks,
-            "host_free_blocks": hstats.free_blocks,
-            "host_resident_blocks": self.host_resident_blocks(),
-            "host_utilization_milli": hstats.utilization_milli,
         }
-        dict.update(out, legacy)
         for t, (spec, pool) in enumerate(zip(("hbm",) + tuple(
                 s.name for s in self.tier_specs), self.pools)):
             s = pool.stats()

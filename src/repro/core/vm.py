@@ -17,6 +17,7 @@ from typing import Callable
 
 import numpy as np
 
+from ..obs.ringbuf import EV_PROG_TRACE
 from .context import CTX_LEN
 from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
                   NUM_REGS, Op, Program, _wrap64)
@@ -31,24 +32,50 @@ HELPER_KTIME = 1
 HELPER_TRACE = 2
 HELPER_PROMOTION_COST = 3
 HELPER_MIGRATE_COST = 4
+HELPER_RINGBUF_OUTPUT = 5
+
+# Helpers that emit into the per-invocation event-slot buffer.  Every
+# executor gives them the same semantics: write one (ts, tag, a0, a1, a2)
+# record and return 0, or return -1 and bump the lane drop counter once the
+# invocation's verifier-derived slot budget (facts["rb_cap"]) is spent.
+RB_HELPERS = frozenset({HELPER_TRACE, HELPER_RINGBUF_OUTPUT})
 
 
 @dataclass
 class HelperState:
-    """Mutable state helpers may touch (trace ring buffer, clock)."""
+    """Mutable state helpers may touch (event-slot buffer, clock)."""
     ktime_ns: int = 0
-    trace: list = field(default_factory=list)
-    trace_cap: int = 1024
+    rb_cap: int = 0                                 # per-invocation slot budget
+    rb_events: list = field(default_factory=list)   # this run's records
+    rb_drops: int = 0                               # lifetime slot-overflow drops
 
 
 def _helper_ktime(regs, ctx, state: HelperState) -> int:
     return state.ktime_ns
 
 
-def _helper_trace(regs, ctx, state: HelperState) -> int:
-    if len(state.trace) < state.trace_cap:
-        state.trace.append(int(regs[1]))
+def _rb_emit(ctx, state: HelperState, tag: int, a0: int, a1: int,
+             a2: int) -> int:
+    if len(state.rb_events) >= state.rb_cap:
+        state.rb_drops += 1
+        return -1
+    from .context import CTX  # local import to avoid cycle at module load
+    state.rb_events.append((int(ctx[CTX.KTIME_NS]), tag, a0, a1, a2))
     return 0
+
+
+def _helper_trace(regs, ctx, state: HelperState) -> int:
+    """bpf_trace(r1) — legacy single-word trace, now a ring-buffer record
+    with tag EV_PROG_TRACE (it used to vanish on the compiled executors)."""
+    return _rb_emit(ctx, state, EV_PROG_TRACE, int(regs[1]), 0, 0)
+
+
+def _helper_ringbuf_output(regs, ctx, state: HelperState) -> int:
+    """bpf_ringbuf_output(tag=r1, a0=r2, a1=r3, a2=r4) — emit one typed
+    event; the record timestamp is the modeled clock from ctx so streams
+    are executor-independent."""
+    return _rb_emit(ctx, state, int(regs[1]), int(regs[2]), int(regs[3]),
+                    int(regs[4]))
 
 
 def _helper_promotion_cost(regs, ctx, state: HelperState) -> int:
@@ -93,6 +120,7 @@ HELPERS: dict[int, Callable] = {
     HELPER_TRACE: _helper_trace,
     HELPER_PROMOTION_COST: _helper_promotion_cost,
     HELPER_MIGRATE_COST: _helper_migrate_cost,
+    HELPER_RINGBUF_OUTPUT: _helper_ringbuf_output,
 }
 HELPER_IDS = frozenset(HELPERS.keys())
 
@@ -105,7 +133,9 @@ class VMFault(Exception):
 class RunResult:
     ret: int
     steps: int
-    trace: list
+    trace: list                                 # EV_PROG_TRACE payloads (r1)
+    events: list = field(default_factory=list)  # this run's (ts, tag, a0, a1, a2)
+    dropped: int = 0                            # slot-budget drops this run
 
 
 class PolicyVM:
@@ -121,10 +151,14 @@ class PolicyVM:
         self.lowered = lower(program, self.maps, helper_ids=HELPER_IDS)
         self.facts = self.lowered.facts
         self.program = program
-        self.helper_state = HelperState()
+        self.helper_state = HelperState(rb_cap=self.facts.get("rb_cap", 0))
 
     def run(self, ctx: np.ndarray) -> RunResult:
         insns = self.lowered.insns
+        hs = self.helper_state
+        if hs.rb_cap:
+            hs.rb_events = []
+        drops0 = hs.rb_drops
         regs = [0] * NUM_REGS
         pc = 0
         fuel = self.facts["max_steps"] + 8
@@ -184,7 +218,11 @@ class PolicyVM:
                 regs[0] = _wrap64(int(HELPERS[insn.imm](regs, ctx, self.helper_state)))
                 pc += 1
             elif op == Op.EXIT:
-                return RunResult(regs[0], steps, list(self.helper_state.trace))
+                ev = hs.rb_events
+                return RunResult(
+                    regs[0], steps,
+                    [e[2] for e in ev if e[1] == EV_PROG_TRACE] if ev else [],
+                    ev, hs.rb_drops - drops0)
             else:
                 raise VMFault(f"unhandled opcode {op!r}")
 

@@ -1,0 +1,38 @@
+"""Low-overhead telemetry in the Linux BPF observability mold.
+
+Three layers, mirroring the kernel-side tooling the paper's ecosystem
+(DAMON, TierBPF, "Cache is King") leans on to evaluate eBPF policies:
+
+  * :mod:`ringbuf` — a preallocated, fixed-capacity, typed event ring
+    (``bpf_ringbuf`` style: producers drop on overflow, a counter records
+    how many) that both the framework tracepoints and verified programs
+    (via the ``bpf_ringbuf_output`` helper) emit into;
+  * :mod:`hist` — log2-bucketed histograms (bpftool-profile style) for
+    latency/size distributions;
+  * :mod:`telemetry` — the per-engine hub tying ring + histograms +
+    counters + trace spans together, with :mod:`trace` (Chrome trace-event
+    JSON, perfetto-loadable) and :mod:`metrics` (flat Prometheus-style
+    snapshot) as exporters.
+
+This package is numpy-only and imports nothing from :mod:`repro.core`, so
+the core pipeline can depend on it without cycles.
+"""
+
+from .hist import Log2Hist
+from .metrics import flatten_metrics, render_prometheus
+from .ringbuf import (EV_CACHE, EV_COLLAPSE, EV_COMPACT, EV_COMPILE,
+                      EV_FAULT, EV_HOOK, EV_MIGRATE_HOP, EV_PREEMPT,
+                      EV_PROG_BASE, EV_PROG_TRACE, EV_RECLAIM, EVENT_FIELDS,
+                      EventRing, tag_name)
+from .telemetry import Telemetry
+from .trace import chrome_trace, write_chrome_trace
+
+__all__ = [
+    "EventRing", "EVENT_FIELDS", "tag_name",
+    "EV_FAULT", "EV_MIGRATE_HOP", "EV_RECLAIM", "EV_PREEMPT", "EV_HOOK",
+    "EV_COMPILE", "EV_CACHE", "EV_COMPACT", "EV_COLLAPSE",
+    "EV_PROG_TRACE", "EV_PROG_BASE",
+    "Log2Hist", "Telemetry",
+    "chrome_trace", "write_chrome_trace",
+    "flatten_metrics", "render_prometheus",
+]

@@ -1,0 +1,53 @@
+"""Chrome trace-event JSON exporter (perfetto / chrome://tracing loadable).
+
+Two process tracks:
+
+  * pid 1 ``host`` — the engine's wall-clock spans (step / prefill /
+    decode) as complete ("X") events, one thread row per span ``tid``;
+  * pid 2 ``modeled`` — the event ring as instant ("i") events.  Program
+    and mm events carry the modeled ktime clock, host-side events a wall
+    timestamp; both are offset-normalized so the track starts near 0.
+
+Timestamps are microseconds (the trace-event format's unit); sub-``us``
+durations survive as fractions.
+"""
+
+from __future__ import annotations
+
+import json
+
+from .ringbuf import tag_name
+
+
+def chrome_trace(tel) -> dict:
+    events = []
+    tids: dict[str, int] = {}
+
+    def tid_of(name: str) -> int:
+        if name not in tids:
+            tids[name] = len(tids) + 1
+            events.append({"ph": "M", "name": "thread_name", "pid": 1,
+                           "tid": tids[name], "args": {"name": name}})
+        return tids[name]
+
+    events.append({"ph": "M", "name": "process_name", "pid": 1,
+                   "args": {"name": "host"}})
+    events.append({"ph": "M", "name": "process_name", "pid": 2,
+                   "args": {"name": "modeled"}})
+    for name, cat, tid, ts0, dur in tel.spans:
+        events.append({"ph": "X", "name": name, "cat": cat, "pid": 1,
+                       "tid": tid_of(tid), "ts": ts0 / 1000.0,
+                       "dur": dur / 1000.0})
+    ring = tel.ring.peek()
+    base = int(ring[:, 0].min()) if len(ring) else 0
+    for row in ring:
+        ts, tag, a0, a1, a2 = (int(x) for x in row)
+        events.append({"ph": "i", "name": tag_name(tag), "cat": "ring",
+                       "pid": 2, "tid": 1, "ts": (ts - base) / 1000.0,
+                       "s": "t", "args": {"a0": a0, "a1": a1, "a2": a2}})
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(tel, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tel), f)

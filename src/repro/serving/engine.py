@@ -39,12 +39,17 @@ capacity-sweep benchmark sweeps these.
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import (Telemetry, flatten_metrics, render_prometheus,
+                   write_chrome_trace)
+from ..obs.ringbuf import EV_PREEMPT
 
 from ..configs.base import ModelConfig
 from ..core import (MAX_PROFILE_REGIONS, FaultKind, HWSpec, Khugepaged,
@@ -119,7 +124,18 @@ class ServingEngine:
                  cache_dtype=jnp.bfloat16,
                  host_blocks: int = 0, tier_blocks=None,
                  tier_policy: str = "ebpf-tier",
-                 batch_faults: bool = True):
+                 batch_faults: bool = True,
+                 telemetry: "Telemetry | bool | None" = None,
+                 trace: bool = False):
+        # telemetry: None (default — zero-overhead no-op), True (counters/
+        # histograms/ring), or a repro.obs.Telemetry instance.  trace=True
+        # additionally records engine spans for the Chrome-trace exporter
+        # (and implies telemetry when none was passed).
+        if telemetry is True or (telemetry is None and trace):
+            telemetry = Telemetry(trace=trace)
+        elif telemetry is not None and trace:
+            telemetry.trace_enabled = telemetry.enabled
+        self.telemetry: Telemetry | None = telemetry or None
         self.cfg = cfg
         self.params = params
         self.layout = layout
@@ -157,7 +173,8 @@ class ServingEngine:
             self.mm = TieredMemoryManager(
                 layout.num_blocks, cost,
                 tiers=default_tier_chain(hw, self.tier_blocks),
-                default_mode=default_mode, damon_seed=seed)
+                default_mode=default_mode, damon_seed=seed,
+                telemetry=self.telemetry)
             if tier_policy not in self.TIER_PROGRAMS:
                 raise ValueError(f"unknown tier_policy {tier_policy!r}")
             if len(self.tier_blocks) > 1 \
@@ -172,7 +189,8 @@ class ServingEngine:
                 self.mm.attach_tier_program(prog())
         else:
             self.mm = MemoryManager(layout.num_blocks, cost,
-                                    default_mode=default_mode, damon_seed=seed)
+                                    default_mode=default_mode, damon_seed=seed,
+                                    telemetry=self.telemetry)
         self._pool_blocks = layout.num_blocks + sum(self.tier_blocks)
         self.mm.attach_reclaim_program(reclaim_lru_program())
         if policy == "ebpf":
@@ -233,6 +251,12 @@ class ServingEngine:
                 p, cfg, c, t, bt, layout, chunk=256, last_index=last, **kw))
 
     # ----------------------------------------------------------------- admin
+    def _span(self, name: str, tid: str = "engine"):
+        tel = self.telemetry
+        if tel is None or not tel.trace_enabled:
+            return nullcontext()
+        return tel.span(name, cat="engine", tid=tid)
+
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
@@ -274,7 +298,8 @@ class ServingEngine:
             seq = SeqState(req=req, pid=pid, slot=slot,
                            length=len(req.prompt))
             self.active[slot] = seq
-            self._run_prefill(seq)
+            with self._span(f"prefill rid={req.rid}"):
+                self._run_prefill(seq)
             self.stats.prefills += 1
 
     def _run_prefill(self, seq: SeqState) -> None:
@@ -403,32 +428,44 @@ class ServingEngine:
     def _preempt(self, victim_pid: int | None) -> None:
         if victim_pid is None:
             raise MMOutOfMemory("pool exhausted and nothing to evict")
+        tel = self.telemetry
         for slot, seq in list(self.active.items()):
             if seq.pid == victim_pid:
                 self.mm.evict_process(victim_pid)
                 del self.active[slot]
                 self.waiting.insert(0, seq.req)   # recompute-from-scratch
                 self.stats.preemptions += 1
+                if tel is not None and tel.enabled:
+                    tel.emit(EV_PREEMPT, victim_pid, seq.req.rid, seq.length,
+                             ts=self.mm.ktime_ns)
                 return
         self.mm.evict_process(victim_pid)
 
     def step(self) -> bool:
         """One engine iteration. Returns False when all work is done."""
         t0 = time.monotonic()
-        self._admit()
-        if not self.active and not self.waiting:
-            return False
-        if self.active:
-            self._decode_once()
-        if self.khugepaged is not None:
-            self.khugepaged.tick()
-        if isinstance(self.mm, TieredMemoryManager):
-            # background promotion: bring re-heated host-tier pages back to HBM
-            self.mm.promotion_scan()
-        self._apply_pending_moves()
-        self.mm.tick()
+        tel = self.telemetry
+        with self._span(f"step {self.stats.steps}"):
+            self._admit()
+            if not self.active and not self.waiting:
+                return False
+            if self.active:
+                with self._span("decode"):
+                    self._decode_once()
+            with self._span("mm-tick", tid="mm"):
+                if self.khugepaged is not None:
+                    self.khugepaged.tick()
+                if isinstance(self.mm, TieredMemoryManager):
+                    # background promotion: bring re-heated host-tier pages
+                    # back to HBM
+                    self.mm.promotion_scan()
+                self._apply_pending_moves()
+                self.mm.tick()
         self.stats.steps += 1
-        self.stats.wall_host_s += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        self.stats.wall_host_s += dt
+        if tel is not None and tel.enabled:
+            tel.mgmt_step_ns.observe(int(dt * 1e9))
         return bool(self.active or self.waiting)
 
     def _fault_slots_batched(self) -> set[int]:
@@ -608,4 +645,39 @@ class ServingEngine:
         if self.khugepaged is not None:
             out["khugepaged"] = {"collapsed": self.khugepaged.collapsed,
                                  "considered": self.khugepaged.considered}
+        if self.telemetry is not None and self.telemetry.enabled:
+            out["telemetry"] = self.telemetry.snapshot()
         return out
+
+    # ------------------------------------------------------------ telemetry
+    def write_trace(self, path) -> None:
+        """Write the Chrome trace-event JSON (load in Perfetto / chrome://
+        tracing): engine spans on the wall-clock track, mm/program ring
+        events on the modeled-clock track."""
+        if self.telemetry is None:
+            raise ValueError("engine was built without telemetry "
+                             "(pass trace=True or telemetry=...)")
+        write_chrome_trace(self.telemetry, path)
+
+    def metrics(self) -> dict:
+        """Flat ``{metric_name: number}`` snapshot across every subsystem:
+        engine stats, mm stats, hook counters, artifact-cache stats, tier
+        pools, and (when telemetry is on) histograms/counters/ring stats."""
+        sections = {
+            "engine": self.stats.snapshot(),
+            "mm": self.mm.stats.snapshot(),
+            "huge_fraction": self.mm.hugepage_block_fraction(),
+            "hooks": {"invocations": self.mm.hooks.invocations,
+                      "calls": self.mm.hooks.calls,
+                      "batch_calls": self.mm.hooks.batch_calls},
+            "cache": self.mm.hooks._artifact_cache().stats,
+        }
+        if isinstance(self.mm, TieredMemoryManager):
+            sections["tier"] = self.mm.tier_snapshot()
+        if self.telemetry is not None and self.telemetry.enabled:
+            sections["telemetry"] = self.telemetry.snapshot()
+        return flatten_metrics(sections)
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of :meth:`metrics`."""
+        return render_prometheus(self.metrics())

@@ -265,8 +265,8 @@ class TestArtifactCache:
         assert cache.stats["unroll_misses"] == 1
 
 
-class TestLegacyTierSnapshotKeys:
-    def test_host_keys_warn_and_per_tier_list_is_silent(self):
+class TestTierSnapshotShape:
+    def test_legacy_host_keys_removed_and_per_tier_list_is_api(self):
         from repro.core import (HWSpec, TieredMemoryManager, default_tier_chain,
                                 make_cost_model)
         hw = HWSpec()
@@ -274,14 +274,13 @@ class TestLegacyTierSnapshotKeys:
         mm = TieredMemoryManager(32, cost,
                                  tiers=default_tier_chain(hw, (16, 32, 16)))
         snap = mm.tier_snapshot()
-        import warnings
-        with warnings.catch_warnings():
-            warnings.simplefilter("error")
-            assert len(snap["tiers"]) == 4          # silent
-            assert snap["ntiers"] == 4
-        with pytest.warns(DeprecationWarning, match="peer-HBM"):
-            _ = snap["host_free_blocks"]
-        # the legacy key names tier 1 — on this 4-tier chain that is the
-        # peer-HBM pool, which is exactly why the keys are deprecated
-        with pytest.warns(DeprecationWarning):
-            assert snap["host_blocks"] == snap["tiers"][1]["blocks"]
+        assert type(snap) is dict                   # plain dict, no warn shim
+        assert len(snap["tiers"]) == 4
+        assert snap["ntiers"] == 4
+        # the deprecated 2-pool host_* aliases went through their removal
+        # cycle: they named tier 1, which on this 4-tier chain is peer-HBM
+        for key in ("host_blocks", "host_free_blocks",
+                    "host_resident_blocks", "host_utilization_milli"):
+            assert key not in snap
+        assert snap["tiers"][1]["blocks"] == 16
+        assert snap["tiers"][2]["blocks"] == 32
