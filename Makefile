@@ -4,7 +4,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-diff bench-smoke bench bench-json trace-demo clean-cache
+.PHONY: test test-diff test-chaos bench-smoke bench bench-json trace-demo \
+	clean-cache
 
 # tier-1 verify: the gate every PR must keep green (collects the
 # differential suite too — test-diff is the focused entry point)
@@ -17,6 +18,13 @@ test:
 # with DIFF_SEEDS=7,8 make test-diff
 test-diff:
 	$(PY) -m pytest -q -m differential tests/test_differential.py
+
+# resilience/chaos lane: seeded failure schedules through the containment
+# machinery — injector determinism, quarantine/backoff, supervisor detach,
+# degraded engine modes, and the chaos differential (identical failure
+# schedule across scalar/batched routes => bit-identical KV + end state)
+test-chaos:
+	$(PY) -m pytest -q -m chaos
 
 # tier-1 tests + the tiered-memory capacity sweep in smoke mode
 bench-smoke: test

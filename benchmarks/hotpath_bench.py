@@ -88,11 +88,11 @@ def _profile(vma_blocks: int) -> Profile:
 
 
 def _mk_mm(policy: str, nprocs: int, vma_blocks: int,
-           telemetry=None) -> MemoryManager:
+           telemetry=None, injector=None) -> MemoryManager:
     cost = make_cost_model(HWSpec(), kv_heads=8, head_dim=128, block_tokens=4)
     mm = MemoryManager(nprocs * vma_blocks + 64, cost,
                        default_mode="never" if policy == "never" else "thp",
-                       telemetry=telemetry)
+                       telemetry=telemetry, injector=injector)
     app = None
     if policy == "ebpf":
         mm.load_profile(_profile(vma_blocks))
@@ -214,12 +214,12 @@ class _Cell:
     """One (policy, max_batch, mode) measurement lane with its own mm."""
 
     def __init__(self, policy: str, max_batch: int, *, batched: bool,
-                 steps: int, warmup: int, telemetry=None):
+                 steps: int, warmup: int, telemetry=None, injector=None):
         self.policy, self.max_batch, self.batched = policy, max_batch, batched
         self.steps = steps
         self.vma_blocks = N_WINDOWS * steps + warmup + 8
         self.mm = _mk_mm(policy, max_batch, self.vma_blocks,
-                         telemetry=telemetry)
+                         telemetry=telemetry, injector=injector)
         self.pids = list(range(1, max_batch + 1))
         self.pos = 0
         self.windows: list[dict] = []
@@ -391,24 +391,32 @@ def collect_cache(*, smoke: bool = False) -> dict:
         shutil.rmtree(root, ignore_errors=True)
 
 
-TELEMETRY_LANES = ("none", "off", "on")
+TELEMETRY_LANES = ("none", "off", "on", "res")
 
 
 def collect_telemetry(*, smoke: bool = False) -> dict:
-    """Observability-overhead lane: the batched ebpf workload with
+    """Observability/resilience-overhead lane: the batched ebpf workload with
     (a) no telemetry object at all, (b) a constructed-but-DISABLED
     Telemetry (what a binary linking the subsystem but not tracing pays),
-    (c) telemetry fully on (ring + histograms + every tracepoint).
+    (c) telemetry fully on (ring + histograms + every tracepoint), and
+    (d) the resilience machinery linked but DISARMED — a zero-rate
+    FailureInjector wired through the hook registry plus the (always-on)
+    supervisor/containment path, no telemetry.
 
-    Windows interleave across the three lanes so host drift hits them
-    alike; median steps/s per lane.  ``off_over_none`` is the number the
-    CI overhead gate holds >= 0.98 (tracing off costs ~nothing)."""
+    Windows interleave across the lanes so host drift hits them alike;
+    median steps/s per lane.  ``off_over_none`` and ``res_over_none`` are
+    the numbers the CI overhead gate holds >= 0.98 (tracing off and chaos
+    disarmed both cost ~nothing)."""
+    from repro.resilience import FailureInjector
     steps = 48 if smoke else 96
     warmup = 8 if smoke else WARMUP
     b = 4
-    tels = {"none": None, "off": Telemetry(enabled=False), "on": Telemetry()}
+    tels = {"none": None, "off": Telemetry(enabled=False), "on": Telemetry(),
+            "res": None}
+    injs = {lane: None for lane in TELEMETRY_LANES}
+    injs["res"] = FailureInjector(0, {})            # constructed, disarmed
     cells = {lane: _Cell("ebpf", b, batched=True, steps=steps, warmup=warmup,
-                         telemetry=tels[lane])
+                         telemetry=tels[lane], injector=injs[lane])
              for lane in TELEMETRY_LANES}
     for _ in range(N_WINDOWS):
         for lane in TELEMETRY_LANES:
@@ -424,6 +432,7 @@ def collect_telemetry(*, smoke: bool = False) -> dict:
     base = out["lanes"]["none"]["steps_per_s"]
     out["off_over_none"] = out["lanes"]["off"]["steps_per_s"] / base
     out["on_over_none"] = out["lanes"]["on"]["steps_per_s"] / base
+    out["res_over_none"] = out["lanes"]["res"]["steps_per_s"] / base
     tel_on = tels["on"]
     out["on_ring"] = tel_on.ring.snapshot()
     return out
@@ -487,6 +496,8 @@ def main(smoke: bool = False) -> list[str]:
                  f"steps_per_s ratio (gate >= 0.98)")
     lines.append(f"telemetry_on_over_none,{tl['on_over_none']:.3f},"
                  f"steps_per_s ratio, full tracing")
+    lines.append(f"resilience_res_over_none,{tl['res_over_none']:.3f},"
+                 f"steps_per_s ratio, chaos disarmed (gate >= 0.98)")
     return lines
 
 
@@ -525,3 +536,5 @@ if __name__ == "__main__":
           f"steps_per_s ratio (gate >= 0.98)")
     print(f"telemetry_on_over_none,{tl['on_over_none']:.3f},"
           f"steps_per_s ratio, full tracing")
+    print(f"resilience_res_over_none,{tl['res_over_none']:.3f},"
+          f"steps_per_s ratio, chaos disarmed (gate >= 0.98)")

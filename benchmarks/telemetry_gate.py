@@ -1,11 +1,20 @@
-"""CI gate: telemetry disabled must cost (almost) nothing.
+"""CI gate: telemetry disabled AND resilience disarmed must cost (almost)
+nothing.
 
-Runs the hotpath bench's telemetry-overhead lane in smoke mode and requires
-the constructed-but-disabled Telemetry lane to stay within 2% steps/s of
-the no-telemetry baseline (``off_over_none >= 0.98``).  Host jitter on
-shared CI runners can flip a marginal run, so the gate takes the BEST of
-up to three attempts — a real regression (a tracepoint doing work on the
-disabled path) fails all three.
+Runs the hotpath bench's overhead lanes in smoke mode and requires both
+zero-cost claims to hold within 2% steps/s of the no-instrumentation
+baseline:
+
+- ``off_over_none >= 0.98`` — a constructed-but-DISABLED Telemetry (what a
+  binary linking the subsystem but not tracing pays);
+- ``res_over_none >= 0.98`` — the resilience machinery linked but DISARMED
+  (zero-rate FailureInjector through the hook registry, supervisor and
+  containment paths live).
+
+Host jitter on shared CI runners can flip a marginal run, so the gate takes
+the BEST of up to three attempts per ratio — a real regression (a
+tracepoint or injection probe doing work on the disabled path) fails all
+three.
 
 Run:  PYTHONPATH=src python -m benchmarks.telemetry_gate
 """
@@ -18,23 +27,28 @@ from benchmarks.hotpath_bench import collect_telemetry
 
 THRESHOLD = 0.98
 ATTEMPTS = 3
+GATED = ("off_over_none", "res_over_none")
 
 
 def main() -> int:
-    best = None
+    best = {k: None for k in GATED}
     for attempt in range(1, ATTEMPTS + 1):
         out = collect_telemetry(smoke=True)
-        ratio = out["off_over_none"]
-        print(f"attempt {attempt}: off_over_none={ratio:.3f} "
-              f"(on_over_none={out['on_over_none']:.3f})")
-        if best is None or ratio > best:
-            best = ratio
-        if ratio >= THRESHOLD:
-            print(f"PASS: telemetry-disabled overhead within "
-                  f"{(1 - THRESHOLD) * 100:.0f}% of baseline")
+        for k in GATED:
+            if best[k] is None or out[k] > best[k]:
+                best[k] = max(best[k] or 0.0, out[k])
+        print(f"attempt {attempt}: " +
+              " ".join(f"{k}={out[k]:.3f}" for k in GATED) +
+              f" (on_over_none={out['on_over_none']:.3f})")
+        if all(best[k] >= THRESHOLD for k in GATED):
+            print(f"PASS: disabled-telemetry and disarmed-resilience "
+                  f"overhead within {(1 - THRESHOLD) * 100:.0f}% of baseline")
             return 0
-    print(f"FAIL: off_over_none={best:.3f} < {THRESHOLD} on every attempt "
-          f"— the disabled-telemetry path is doing real work")
+    failed = [k for k in GATED if best[k] < THRESHOLD]
+    print("FAIL: " +
+          ", ".join(f"{k}={best[k]:.3f}" for k in failed) +
+          f" < {THRESHOLD} on every attempt — a disabled path is doing "
+          f"real work")
     return 1
 
 

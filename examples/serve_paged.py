@@ -14,6 +14,9 @@ Run:  PYTHONPATH=src python examples/serve_paged.py [--arch gemma3_27b]
       PYTHONPATH=src python examples/serve_paged.py \
           --trace out/trace.json --metrics out/metrics.txt  # telemetry:
           # Chrome trace (load in Perfetto) + Prometheus-style metrics
+      PYTHONPATH=src python examples/serve_paged.py \
+          --hbm-blocks 48 --host-blocks 256 --chaos 7   # chaos: seeded
+          # deterministic fault injection + live ring-event consumption
 """
 
 import argparse
@@ -47,6 +50,18 @@ ap.add_argument("--tier", default="ebpf-tier",
 ap.add_argument("--scalar-faults", action="store_true",
                 help="pre-batching fault path: one policy invocation per "
                      "fault instead of one per engine step")
+ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                help="arm the deterministic failure injector with SEED: "
+                     "migration copy errors, tier-alloc failures, link "
+                     "flaps, hook runtime errors (same seed = same "
+                     "failure schedule)")
+ap.add_argument("--chaos-rate", type=float, default=0.02,
+                help="per-site failure probability for --chaos "
+                     "(default 0.02)")
+ap.add_argument("--no-containment", action="store_true",
+                help="disable the resilience machinery (no retry/backoff, "
+                     "no quarantine, no policy detach) — the chaos "
+                     "baseline lane")
 ap.add_argument("--trace", default="", metavar="FILE",
                 help="enable telemetry and write a Chrome trace-event JSON "
                      "(engine spans + mm/program ring events) to FILE")
@@ -70,12 +85,18 @@ profile = Profile("chat", [
     ProfileRegion(8, 32, (0, 0, 0, 0)),                      # cold tail
 ]) if args.policy == "ebpf" else None
 
-telemetry = True if (args.trace or args.metrics) else None
+telemetry = True if (args.trace or args.metrics or
+                     args.chaos is not None) else None
 engine = ServingEngine(cfg, params, layout, max_batch=4, policy=args.policy,
                        profile=profile, host_blocks=args.host_blocks,
                        tier_blocks=tier_blocks, tier_policy=args.tier,
                        batch_faults=not args.scalar_faults,
-                       telemetry=telemetry, trace=bool(args.trace))
+                       telemetry=telemetry, trace=bool(args.trace),
+                       chaos=args.chaos, chaos_rate=args.chaos_rate,
+                       containment=not args.no_containment)
+if args.chaos is not None:
+    print(f"chaos armed: seed={args.chaos} rate={args.chaos_rate} "
+          f"containment={'off' if args.no_containment else 'on'}")
 rng = np.random.default_rng(0)
 for r in range(args.requests):
     plen = int(rng.integers(16, 48))
@@ -83,8 +104,34 @@ for r in range(args.requests):
         rid=r, prompt=rng.integers(1, cfg.vocab, plen).tolist(),
         max_new_tokens=24, app="chat", temperature=0.0))
 
-out = engine.run()
+# With chaos armed (and no trace export pending — poll_events drains the
+# ring destructively) consume the event ring LIVE every few steps, the way
+# a monitoring sidecar would: detach / quarantine / retry events surface
+# mid-run instead of only in the end-of-run snapshot.
+live_counts: dict[str, int] = {}
+if args.chaos is not None and not args.trace:
+    steps = 0
+    while engine.step() and steps < 10_000:
+        steps += 1
+        if steps % 8 == 0:
+            for ev in engine.poll_events():
+                live_counts[ev["name"]] = live_counts.get(ev["name"], 0) + 1
+    for ev in engine.poll_events():
+        live_counts[ev["name"]] = live_counts.get(ev["name"], 0) + 1
+    out = {"engine": engine.stats.snapshot(),
+           "mm": engine.mm.stats.snapshot(),
+           "huge_fraction": engine.mm.hugepage_block_fraction()}
+else:
+    out = engine.run()
 print(json.dumps(out, indent=1, default=float))
+if args.chaos is not None:
+    m = engine.metrics()
+    resil = {k: v for k, v in sorted(m.items())
+             if k.startswith("resilience_") and v}
+    print("resilience:", json.dumps(resil, default=float))
+    if live_counts:
+        print("live ring events:",
+              json.dumps(dict(sorted(live_counts.items()))))
 for rid in sorted(engine.finished)[:3]:
     print(f"request {rid}: generated {engine.finished[rid][:10]}...")
 

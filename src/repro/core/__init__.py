@@ -25,8 +25,8 @@ The paper's contribution as a composable library:
 from .buddy import BuddyAllocator, BuddyError, BuddyStats, order_blocks
 from .cache import ArtifactCache, artifact_cache
 from .context import (CTX, CTX_LEN, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
-                      POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP, FaultContext,
-                      FaultKind)
+                      POLICY_DETACHED, POLICY_FALLBACK, TIER_DEMOTE,
+                      TIER_KEEP, FaultContext, FaultKind)
 from .cost import (CostModel, HWSpec, TierSpec, default_tier_chain,
                    host_dram_tier, make_cost_model, nvme_tier, peer_hbm_tier)
 from .damon import Damon, Region

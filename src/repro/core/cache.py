@@ -62,8 +62,11 @@ class ArtifactCache:
         self.max_bytes = max_bytes
         self._unrolled: dict[str, tuple] = {}   # in-proc, by program digest
         self._xla_enabled = False
+        # miss_absent/miss_corrupt split unroll_misses by reason: nothing on
+        # disk vs an artifact that was there but failed to load back.
         self.stats = {"unroll_disk_hits": 0, "unroll_hits": 0,
-                      "unroll_misses": 0, "evictions": 0}
+                      "unroll_misses": 0, "miss_absent": 0,
+                      "miss_corrupt": 0, "evictions": 0}
 
     @property
     def enabled(self) -> bool:
@@ -90,22 +93,33 @@ class ArtifactCache:
             pass
 
     # ------------------------------------------------------------ lowering
-    def unrolled(self, lp: LoweredProgram) -> tuple:
+    def unrolled(self, lp: LoweredProgram, injector=None) -> tuple:
         """``(code, cuts)`` for ``lp`` — memoized in-process and persisted
         on disk keyed by the program digest.  Raises ``ValueError`` (not
-        cached) when the flattened form exceeds the pipeline limit."""
+        cached) when the flattened form exceeds the pipeline limit.
+
+        A corrupt/truncated on-disk artifact NEVER raises out of here — it
+        counts a ``miss_corrupt`` and recompiles (the rewrite heals the
+        entry).  ``injector`` (a resilience FailureInjector) can force the
+        corrupt path on an otherwise-good disk hit, keyed on the digest so
+        the schedule replays.
+        """
         key = lp.digest()
         hit = self._unrolled.get(key)
         if hit is not None:
             self.stats["unroll_hits"] += 1
             return hit
-        art = self._read(f"unroll-{key}")
+        art, miss_reason = self._read(f"unroll-{key}")
+        if art is not None and injector is not None and injector.fires(
+                "cache_corrupt", key):
+            art, miss_reason = None, "corrupt"
         if art is not None:
             self.stats["unroll_hits"] += 1
             self.stats["unroll_disk_hits"] += 1
             self._unrolled[key] = art
             return art
         self.stats["unroll_misses"] += 1
+        self.stats[f"miss_{miss_reason}"] += 1
         art = unroll_lowered(lp)
         self._unrolled[key] = art
         self._write(f"unroll-{key}", art)
@@ -116,17 +130,23 @@ class ArtifactCache:
         return self.root / "ebpf" / f"{name}.pkl"
 
     def _read(self, name: str):
+        """``(artifact, miss_reason)``: ``(obj, None)`` on a hit,
+        ``(None, "absent")`` when nothing is on disk (or persistence is
+        off), ``(None, "corrupt")`` when a pickle exists but cannot be
+        loaded back — truncated/garbled/stale artifacts recompile, they
+        never propagate an exception into engine construction."""
         if not self.enabled:
-            return None
+            return None, "absent"
+        path = self._path(name)
         try:
-            path = self._path(name)
             with open(path, "rb") as f:
                 obj = pickle.load(f)
             os.utime(path)          # LRU: a read hit refreshes last-used
-            return obj
-        except (OSError, pickle.UnpicklingError, EOFError, AttributeError,
-                ImportError, IndexError):
-            return None     # missing/corrupt/stale artifact -> recompute
+            return obj, None
+        except FileNotFoundError:
+            return None, "absent"
+        except Exception:
+            return None, "corrupt"
 
     def _write(self, name: str, obj) -> None:
         if not self.enabled:

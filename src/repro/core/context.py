@@ -255,6 +255,12 @@ def fill_system_columns(mat: np.ndarray, *,
 # Return-value convention for fault-hook programs.
 POLICY_FALLBACK = -1     # defer to the kernel default policy
 
+# Sentinel the BATCHED discipline pass writes into decision rows AFTER a
+# mid-batch supervisor detach: the row takes the kernel-default path with NO
+# fallback accounting, matching the scalar route where post-detach faults
+# never reach the (now-detached) hook at all.  Never a valid program return.
+POLICY_DETACHED = -2
+
 # Return-value convention for tier-hook (mm_tier) programs: the return value
 # is the TARGET TIER id the candidate page should live in (0 = local HBM,
 # 1..NTIERS-1 = spill tiers ordered fastest to slowest; the manager clamps to

@@ -155,6 +155,13 @@ class CostModel:
             faster_bw = spec.stream_bw
         return edges
 
+    def edge_names(self) -> tuple[str, ...]:
+        """Human-readable label per tier edge (``"hbm->host_dram"``); edge
+        ``i`` connects tier ``i`` to tier ``i+1``.  The health monitor and
+        resilience metrics key their per-edge state on these."""
+        names = ["hbm"] + [s.name for s in self.tier_specs]
+        return tuple(f"{a}->{b}" for a, b in zip(names[:-1], names[1:]))
+
     def migrate_cum_tables(self) -> tuple[tuple[int, ...], tuple[int, ...]]:
         """Cumulative edge-cost tables padded to MAX_TIERS: entry ``t`` is
         the summed (setup, per-block) cost of every edge between tier 0 and

@@ -20,9 +20,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..obs.ringbuf import (EV_COLLAPSE, EV_COMPACT, EV_FAULT, EV_RECLAIM)
+from ..resilience.supervisor import PolicySupervisor
 from .buddy import RADIX, BuddyAllocator, BuddyError, order_blocks
-from .context import (CTX, CTX_LEN, MAX_TIERS, NUM_ORDERS, POLICY_FALLBACK,
-                      FaultContext, FaultKind, ctx_batch, fill_system_columns)
+from .context import (CTX, CTX_LEN, MAX_TIERS, NUM_ORDERS, POLICY_DETACHED,
+                      POLICY_FALLBACK, FaultContext, FaultKind, ctx_batch,
+                      fill_system_columns)
 from .cost import CostModel
 from .damon import Damon
 from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
@@ -97,6 +99,11 @@ class MMStats:
     tier_promotions: int = 0          # pages moved host tier -> HBM
     tier_promotion_blocks: int = 0
     tier_reads: int = 0               # attention reads served from the host tier
+    # Resilience counters (see core.tiering migration retry/abort paths and
+    # the per-tier injected allocation failures)
+    migrate_retries: int = 0          # failed copy attempts that were retried
+    migrate_aborts: int = 0           # hops abandoned after retry exhaustion
+    tier_alloc_failures: int = 0      # injected transient per-tier alloc fails
 
     def snapshot(self) -> dict:
         return {
@@ -118,6 +125,9 @@ class MMStats:
             "tier_promotions": self.tier_promotions,
             "tier_promotion_blocks": self.tier_promotion_blocks,
             "tier_reads": self.tier_reads,
+            "migrate_retries": self.migrate_retries,
+            "migrate_aborts": self.migrate_aborts,
+            "tier_alloc_failures": self.tier_alloc_failures,
         }
 
 
@@ -133,7 +143,8 @@ class FaultResult:
 class MemoryManager:
     def __init__(self, num_blocks: int, cost: CostModel, *,
                  default_mode: str = "thp", max_order: int = NUM_ORDERS - 1,
-                 damon_seed: int = 0, telemetry=None) -> None:
+                 damon_seed: int = 0, telemetry=None, injector=None,
+                 containment: bool = True) -> None:
         if default_mode not in ("thp", "never"):
             raise ValueError("default_mode must be 'thp' or 'never'")
         self.buddy = BuddyAllocator(num_blocks, max_order=max_order)
@@ -146,7 +157,15 @@ class MemoryManager:
         # MMStats (the differential harness asserts snapshot equality
         # across replicas — telemetry keeps its own books).
         self.telemetry = telemetry
-        self.hooks = HookRegistry(telemetry=telemetry)
+        # seeded chaos injector (repro.resilience.FailureInjector) or None;
+        # containment=False is the no-containment baseline: faults still
+        # fire but the supervisor never detaches, migrations never retry,
+        # quarantine never routes around a bad edge.
+        self.injector = injector
+        self.containment = bool(containment)
+        self.hooks = HookRegistry(
+            telemetry=telemetry, injector=injector,
+            supervisor=PolicySupervisor(enabled=self.containment))
         self.maps = MapRegistry()
         self.procs: dict[int, ProcessState] = {}
         self.profiles: dict[str, tuple[Profile, int]] = {}   # app -> (profile, map_id)
@@ -415,7 +434,12 @@ class MemoryManager:
                                            self._default_order(fmax), False)
             return results
         ctx_mat = self._build_ctx_batch([reqs[i] for i in pend])
-        decisions = self.hooks.run_batch(HOOK_FAULT, ctx_mat)
+        # raw decisions: rows covered by an earlier grant are never consumed
+        # (the scalar route never faults them), so the misbehavior pass runs
+        # per CONSUMED row below — strikes stay identical across routes
+        decisions = self.hooks.run_batch(HOOK_FAULT, ctx_mat,
+                                         discipline=False)
+        row_disc = self.hooks.row_discipline_needed(HOOK_FAULT, decisions)
         for row, i in enumerate(pend):
             pid, addr, _kind = reqs[i]
             st = self.procs[pid]
@@ -423,6 +447,17 @@ class MemoryManager:
                 continue
             fmax = self.fault_max_order(st, addr)
             decision = int(decisions[row])
+            if row_disc:
+                decision = self.hooks.discipline_row(HOOK_FAULT,
+                                                     ctx_mat[row], decision)
+            if decision == POLICY_DETACHED:
+                # the supervisor detached the program mid-batch: this row
+                # takes the unattached default path — no fallback accounting,
+                # exactly like the scalar route where post-detach faults
+                # never reach the hook
+                results[i] = self._install(st, addr,
+                                           self._default_order(fmax), False)
+                continue
             hinted = decision != POLICY_FALLBACK
             if not hinted:
                 order = self._default_order(fmax)
@@ -439,6 +474,15 @@ class MemoryManager:
         covered by an earlier grant in the batch are skipped at install)."""
         res = self.fault_batch([(pid, a, kind) for a in range(start, end)])
         return [r for r in res if r is not None]
+
+    def place_decode(self, reqs: list[tuple[int, int, FaultKind]]) -> None:
+        """Decode-time tier placement for a completed batch of FIRST_TOUCH
+        faults.  The untiered manager has no placement to decide — the
+        tiered subclass consults HOOK_TIER here (one batched consult after
+        all installs).  ``fault_batch`` runs it internally on the tiered
+        manager; SCALAR callers invoke it once after their ``ensure_mapped``
+        loop so both routes consult placement at the same post-install
+        state."""
 
     def _build_ctx_batch(self, reqs: list[tuple[int, int, FaultKind]]
                          ) -> np.ndarray:

@@ -46,15 +46,24 @@ import numpy as np
 
 from .buddy import BuddyAllocator, BuddyError, order_blocks
 from .context import (CTX, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
-                      POLICY_FALLBACK, TIER_KEEP, FaultContext, FaultKind,
-                      ctx_batch, fill_system_columns)
+                      POLICY_DETACHED, POLICY_FALLBACK, TIER_KEEP,
+                      FaultContext, FaultKind, ctx_batch, fill_system_columns)
 from .cost import CostModel, TierSpec, host_dram_tier
 from .hooks import HOOK_TIER
 from .mm import MemoryManager, PageMapping, ProcessState
-from ..obs.ringbuf import EV_MIGRATE_HOP
+from ..obs.ringbuf import EV_MIGRATE_HOP, EV_QUARANTINE, EV_READMIT, EV_RETRY
+from ..resilience.faults import SITE_MIGRATE_COPY, SITE_TIER_ALLOC
+from ..resilience.health import TierHealthMonitor
 
 TIER_HBM = 0
 TIER_HOST = 1     # the first spill tier of the classic 2-pool topology
+
+# Bounded migration retry: a hop copy that fails (injected link error or a
+# flap window) is retried up to this many times, each failed attempt
+# charging exponentially growing backoff in MODELED time before the next.
+# The no-containment baseline (containment=False) gets a single shot.
+MIGRATE_MAX_ATTEMPTS = 3
+RETRY_BACKOFF_NS = 500_000      # first-retry backoff; doubles per attempt
 
 
 @dataclass
@@ -107,6 +116,12 @@ class TieredMemoryManager(MemoryManager):
         for p in self.pools[:-1]:
             self._tier_base.append(self._tier_base[-1] + p.num_blocks)
         self.tier_cfg = tier_cfg or TierConfig()
+        # Per-edge link health: error counters + exponential-backoff
+        # quarantine keyed on the modeled clock; quarantine routing (and the
+        # degraded demote fallback) is disabled on the no-containment
+        # baseline but errors are still counted.
+        self.health = TierHealthMonitor(len(tiers), cost.edge_names(),
+                                        quarantine=self.containment)
         # (pid, logical_start) -> ktime_ns of the last tier change / install
         self._tier_stamp: dict[tuple[int, int], int] = {}
         # Scan-ctx cache: the per-candidate columns of a tier-scan ctx matrix
@@ -337,19 +352,34 @@ class TieredMemoryManager(MemoryManager):
             raw = self.hooks.run_batch(HOOK_TIER, mat)
             decisions = [int(d) for d in raw]
         else:
-            decisions = [int(self.hooks.run(HOOK_TIER, self._tier_ctx(
-                st, m, kind,
-                seq_len=seq_lens.get(st.pid) if seq_lens else None)))
-                         for st, m in cands]
+            decisions = []
+            for st, m in cands:
+                r = self.hooks.run(HOOK_TIER, self._tier_ctx(
+                    st, m, kind,
+                    seq_len=seq_lens.get(st.pid) if seq_lens else None))
+                # None: the supervisor detached the hook mid-loop — the
+                # remaining candidates take the kernel default, matching the
+                # batched route's POLICY_DETACHED tail rows
+                decisions.append(POLICY_DETACHED if r is None else int(r))
         last = self.ntiers - 1
-        return [self._default_tier_decision(st, m) if d == POLICY_FALLBACK
+        return [self._default_tier_decision(st, m)
+                if d in (POLICY_FALLBACK, POLICY_DETACHED)
                 else max(0, min(d, last))
                 for (st, m), d in zip(cands, decisions)]
 
     # -------------------------------------------------------------- migration
-    def _alloc_in_tier(self, tier: int, order: int) -> int | None:
+    def _alloc_in_tier(self, tier: int, order: int, *, pid: int = -1,
+                       addr: int = -1) -> int | None:
         """Allocate an order-k page in ``tier``'s pool, compacting it once if
-        fragmented; None when the pool genuinely cannot back the page."""
+        fragmented; None when the pool genuinely cannot back the page (or an
+        injected SITE_TIER_ALLOC fault transiently fails it — the caller
+        hops over, same as a full pool)."""
+        inj = self.injector
+        if inj is not None and inj.fires(SITE_TIER_ALLOC, tier, pid, addr,
+                                         self.ktime_ns):
+            self.stats.tier_alloc_failures += 1
+            self.health.record_alloc_failure(tier)
+            return None
         pool = self.pools[tier]
         try:
             return pool.alloc(order)
@@ -391,6 +421,64 @@ class TieredMemoryManager(MemoryManager):
         self._note_mapped(st, m)
         self._tier_stamp[(st.pid, m.logical_start)] = self.ktime_ns
 
+    def _copy_fail_edge(self, st: ProcessState, m: PageMapping, t: int,
+                        attempt: int) -> int:
+        """First edge on the ``m.tier -> t`` crossing that fails this copy
+        attempt (injected link flap or copy error), or -1 when the copy
+        succeeds.  Keyed on stable page identity + modeled time so the
+        schedule replays identically across fault routes and executors."""
+        inj = self.injector
+        if inj is None:
+            return -1
+        lo, hi = sorted((m.tier, t))
+        for e in range(lo, hi):
+            if inj.link_down(e, self.ktime_ns) or inj.fires(
+                    SITE_MIGRATE_COPY, st.pid, m.logical_start, e, attempt,
+                    self.ktime_ns):
+                return e
+        return -1
+
+    def _attempt_copy(self, st: ProcessState, m: PageMapping, t: int,
+                      phys: int) -> bool:
+        """Bounded-retry copy for one hop (single shot when containment is
+        off).  Each failed attempt records the error against the failing
+        edge — feeding its quarantine state machine — and charges
+        exponentially growing backoff in MODELED time; exhausting the
+        budget rolls the destination allocation back, so the page stays
+        put and its KV bytes are never touched by a failed copy."""
+        h = self.health
+        tel = self.telemetry
+        attempts = MIGRATE_MAX_ATTEMPTS if self.containment else 1
+        for attempt in range(1, attempts + 1):
+            edge = self._copy_fail_edge(st, m, t, attempt)
+            if edge < 0:
+                if h.active:
+                    lo, hi = sorted((m.tier, t))
+                    for e in range(lo, hi):
+                        if h.record_edge_success(e, self.ktime_ns) \
+                                and tel is not None and tel.enabled:
+                            es = h.edges[e]
+                            tel.emit(EV_READMIT, e, es.errors, es.successes,
+                                     ts=self.ktime_ns)
+                self._hop(st, m, t, phys)
+                return True
+            newly_quarantined = h.record_edge_error(edge, self.ktime_ns)
+            if newly_quarantined and tel is not None and tel.enabled:
+                es = h.edges[edge]
+                tel.emit(EV_QUARANTINE, edge, es.backoff_ns(), es.level,
+                         ts=self.ktime_ns)
+                tel.inc("edge_quarantines")
+            if attempt < attempts:
+                backoff = RETRY_BACKOFF_NS << (attempt - 1)
+                self.stats.migrate_retries += 1
+                self.stats.mgmt_ns += backoff
+                if tel is not None and tel.enabled:
+                    tel.emit(EV_RETRY, edge, attempt, backoff,
+                             ts=self.ktime_ns)
+        self.stats.migrate_aborts += 1
+        self.pools[t].free(phys)
+        return False
+
     def migrate_page(self, pid: int, logical_start: int,
                      dst_tier: int) -> bool:
         """Move one mapping toward ``dst_tier``, hop by adjacent hop.  Each
@@ -398,19 +486,27 @@ class TieredMemoryManager(MemoryManager):
         (compacting it if fragmented), emits one device copy and charges the
         per-edge path cost — so an NVMe->HBM promotion chains
         NVMe->DRAM->HBM when the intermediates have room and hops over them
-        (still paying their link crossings) when they don't.  Returns True
-        iff the page ends in ``dst_tier``; partial progress (it moved but
-        stalled short) leaves the page at the tier it reached."""
+        (still paying their link crossings) when they don't.  A quarantined
+        edge is hopped over the same way; a hop whose copy keeps failing
+        (see :meth:`_attempt_copy`) is abandoned with the page left where it
+        was.  Returns True iff the page ends in ``dst_tier``; partial
+        progress (it moved but stalled short) leaves the page at the tier
+        it reached."""
         st = self.procs[pid]
         m = st.page_table[logical_start]
         dst_tier = max(0, min(dst_tier, self.ntiers - 1))
+        h = self.health
         while m.tier != dst_tier:
             step = 1 if dst_tier > m.tier else -1
             placed = False
             for t in range(m.tier + step, dst_tier + step, step):
-                phys = self._alloc_in_tier(t, m.order)
-                if phys is not None:
-                    self._hop(st, m, t, phys)
+                if h.active and not h.path_ok(m.tier, t, self.ktime_ns):
+                    continue    # a quarantined edge on the way: hop over
+                phys = self._alloc_in_tier(t, m.order, pid=pid,
+                                           addr=m.logical_start)
+                if phys is None:
+                    continue
+                if self._attempt_copy(st, m, t, phys):
                     placed = True
                     break
             if not placed:
@@ -460,6 +556,17 @@ class TieredMemoryManager(MemoryManager):
                 break
             if d > m.tier:
                 self.migrate_page(st.pid, m.logical_start, d)
+                if m.tier == TIER_HBM and self.containment:
+                    # degraded mode: the approved target (or every path to
+                    # it) could not take the page — demote-before-preempt
+                    # retries against the REMAINING deeper tiers before
+                    # giving up on this page; total blockage leaves freed
+                    # short and falls through to the engine's preempt-only
+                    # fallback, preserving the PR 1 ordering guarantees
+                    for d2 in range(d + 1, self.ntiers):
+                        self.migrate_page(st.pid, m.logical_start, d2)
+                        if m.tier != TIER_HBM:
+                            break
                 if m.tier != TIER_HBM:      # left HBM (even if short of d)
                     freed += order_blocks(m.order)
         return freed
@@ -540,9 +647,47 @@ class TieredMemoryManager(MemoryManager):
             if d > m.tier:
                 self.migrate_page(st.pid, m.logical_start, d)
 
+    def _place_first_touch(self, reqs) -> None:
+        """Decode-time tier placement: FIRST_TOUCH fault batches consult
+        ``HOOK_TIER`` exactly like prefill does — ONE batched consult over
+        the pages the batch installed, after all installs — so a pressured
+        (or degraded) HBM pool can place decode installs directly in a
+        spill tier instead of waiting for the reclaim scan.  Demotion-only,
+        like prefill placement; a no-op with nothing attached."""
+        if not self.hooks.attached(HOOK_TIER):
+            return
+        seen: set[tuple[int, int]] = set()
+        cands: list[tuple[ProcessState, PageMapping]] = []
+        for pid, addr, kind in reqs:
+            if int(kind) != int(FaultKind.FIRST_TOUCH):
+                continue
+            st = self.procs.get(pid)
+            if st is None or addr not in st.mapped:
+                continue
+            m = self._mapping_at(st, addr)
+            if m is None or (pid, m.logical_start) in seen:
+                continue
+            seen.add((pid, m.logical_start))
+            cands.append((st, m))
+        if not cands:
+            return
+        decisions = self.tier_decisions(
+            cands, kind=int(FaultKind.FIRST_TOUCH), force_batch=True)
+        for (st, m), d in zip(cands, decisions):
+            if d > m.tier:
+                self.migrate_page(st.pid, m.logical_start, d)
+
+    def place_decode(self, reqs) -> None:
+        """Scalar-route entry for decode-time placement (the batched route
+        runs it inside :meth:`fault_batch`): call once after an
+        ``ensure_mapped`` loop with the same request list, so both routes
+        consult placement at the same post-install state."""
+        self._place_first_touch(reqs)
+
     def fault_batch(self, reqs):
         results = super().fault_batch(reqs)
         self._place_prefill(reqs)
+        self._place_first_touch(reqs)
         return results
 
     def ensure_range(self, pid: int, start: int, end: int):

@@ -21,9 +21,10 @@ the core pipeline can depend on it without cycles.
 from .hist import Log2Hist
 from .metrics import flatten_metrics, render_prometheus
 from .ringbuf import (EV_CACHE, EV_COLLAPSE, EV_COMPACT, EV_COMPILE,
-                      EV_FAULT, EV_HOOK, EV_MIGRATE_HOP, EV_PREEMPT,
-                      EV_PROG_BASE, EV_PROG_TRACE, EV_RECLAIM, EVENT_FIELDS,
-                      EventRing, tag_name)
+                      EV_DETACH, EV_FAULT, EV_HOOK, EV_MIGRATE_HOP,
+                      EV_PREEMPT, EV_PROG_BASE, EV_PROG_TRACE,
+                      EV_QUARANTINE, EV_READMIT, EV_RECLAIM, EV_RETRY,
+                      EVENT_FIELDS, EventRing, tag_name)
 from .telemetry import Telemetry
 from .trace import chrome_trace, write_chrome_trace
 
@@ -31,6 +32,7 @@ __all__ = [
     "EventRing", "EVENT_FIELDS", "tag_name",
     "EV_FAULT", "EV_MIGRATE_HOP", "EV_RECLAIM", "EV_PREEMPT", "EV_HOOK",
     "EV_COMPILE", "EV_CACHE", "EV_COMPACT", "EV_COLLAPSE",
+    "EV_DETACH", "EV_QUARANTINE", "EV_RETRY", "EV_READMIT",
     "EV_PROG_TRACE", "EV_PROG_BASE",
     "Log2Hist", "Telemetry",
     "chrome_trace", "write_chrome_trace",

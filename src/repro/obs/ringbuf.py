@@ -28,9 +28,16 @@ EV_RECLAIM = 3        # a0=pid (victim / prefer, -1 none), a1=freed, a2=needed
 EV_PREEMPT = 4        # a0=victim pid, a1=blocks freed
 EV_HOOK = 5           # a0=hook index, a1=batch size, a2=wall ns
 EV_COMPILE = 6        # a0=hook index, a1=segments (-1 = while+switch JIT), a2=wall ns
-EV_CACHE = 7          # a0=unroll hits, a1=misses, a2=disk hits (snapshot at build)
+EV_CACHE = 7          # a0=unroll hits, a1=misses | corrupt_misses<<24
+                      # (miss-reason field), a2=disk hits (snapshot at build)
 EV_COMPACT = 8        # a0=tier, a1=blocks moved, a2=modeled ns
 EV_COLLAPSE = 9       # a0=pid, a1=addr, a2=order
+
+# Resilience tracepoints (modeled-clock timestamps):
+EV_DETACH = 10        # a0=hook index, a1=strikes, a2=detach reason
+EV_QUARANTINE = 11    # a0=edge, a1=backoff window ns, a2=backoff level
+EV_RETRY = 12         # a0=edge, a1=attempt, a2=backoff charged (modeled ns)
+EV_READMIT = 13       # a0=edge, a1=errors so far, a2=successes so far
 
 # Program-emitted tags: HELPER_TRACE lands on EV_PROG_TRACE (a0 = r1);
 # bpf_ringbuf_output carries an arbitrary program tag in r1 — programs
@@ -42,7 +49,9 @@ _TAG_NAMES = {
     EV_FAULT: "mm_fault", EV_MIGRATE_HOP: "migrate_hop",
     EV_RECLAIM: "reclaim", EV_PREEMPT: "preempt", EV_HOOK: "hook_invoke",
     EV_COMPILE: "compile", EV_CACHE: "cache", EV_COMPACT: "compact",
-    EV_COLLAPSE: "collapse", EV_PROG_TRACE: "prog_trace",
+    EV_COLLAPSE: "collapse", EV_DETACH: "detach",
+    EV_QUARANTINE: "quarantine", EV_RETRY: "migrate_retry",
+    EV_READMIT: "readmit", EV_PROG_TRACE: "prog_trace",
 }
 
 

@@ -17,7 +17,7 @@ from contextlib import contextmanager
 import numpy as np
 
 from .hist import Log2Hist
-from .ringbuf import EventRing
+from .ringbuf import EventRing, tag_name
 
 
 class Telemetry:
@@ -109,6 +109,23 @@ class Telemetry:
             yield
         finally:
             self.spans.append((name, cat, tid, t0, self.now() - t0))
+
+    # ----------------------------------------------------------- consumers
+    def poll_events(self) -> list[dict]:
+        """LIVE ring consumer (bpftool ``map event_pipe`` style): drain and
+        return every pending event mid-run, oldest first, as
+        ``{"ts", "tag", "name", "a0", "a1", "a2"}`` dicts.
+
+        Draining CONSUMES: polled events no longer appear in a later
+        Chrome-trace export (the exporter peeks at whatever is still
+        pending).  Callers that want both should export the trace first or
+        accept the split.  Returns ``[]`` when telemetry is off.
+        """
+        if not self.enabled:
+            return []
+        return [{"ts": int(ts), "tag": int(tag), "name": tag_name(int(tag)),
+                 "a0": int(a0), "a1": int(a1), "a2": int(a2)}
+                for ts, tag, a0, a1, a2 in self.ring.drain()]
 
     # ------------------------------------------------------------- exports
     def snapshot(self) -> dict:

@@ -61,6 +61,7 @@ from ..core import (MAX_PROFILE_REGIONS, FaultKind, HWSpec, Khugepaged,
                     tier_lru_program, tier_never_program)
 from ..core.buddy import order_blocks
 from ..core.hooks import HOOK_FAULT, HOOK_TIER
+from ..resilience import FailureInjector
 from ..models.decode import PagedLayout, cache_init, decode_step, prefill_step
 from ..models.transformer import build_layer_plans
 from .sampler import Sampler
@@ -126,7 +127,10 @@ class ServingEngine:
                  tier_policy: str = "ebpf-tier",
                  batch_faults: bool = True,
                  telemetry: "Telemetry | bool | None" = None,
-                 trace: bool = False):
+                 trace: bool = False,
+                 chaos: "int | FailureInjector | None" = None,
+                 chaos_rate: float = 0.02,
+                 containment: bool = True):
         # telemetry: None (default — zero-overhead no-op), True (counters/
         # histograms/ring), or a repro.obs.Telemetry instance.  trace=True
         # additionally records engine spans for the Chrome-trace exporter
@@ -136,6 +140,18 @@ class ServingEngine:
         elif telemetry is not None and trace:
             telemetry.trace_enabled = telemetry.enabled
         self.telemetry: Telemetry | None = telemetry or None
+        # chaos: None (default — no injection, zero overhead), an int seed
+        # (uniform chaos_rate at every failure site), or a pre-configured
+        # FailureInjector.  containment=False keeps the injector but turns
+        # OFF the resilience responses (supervisor detach, migration retry,
+        # quarantine routing, degraded demote) — the chaos benchmark's
+        # no-containment baseline.
+        if chaos is None or isinstance(chaos, FailureInjector):
+            self.injector = chaos
+        else:
+            self.injector = FailureInjector.uniform(int(chaos),
+                                                    float(chaos_rate))
+        self.containment = bool(containment)
         self.cfg = cfg
         self.params = params
         self.layout = layout
@@ -174,7 +190,8 @@ class ServingEngine:
                 layout.num_blocks, cost,
                 tiers=default_tier_chain(hw, self.tier_blocks),
                 default_mode=default_mode, damon_seed=seed,
-                telemetry=self.telemetry)
+                telemetry=self.telemetry, injector=self.injector,
+                containment=self.containment)
             if tier_policy not in self.TIER_PROGRAMS:
                 raise ValueError(f"unknown tier_policy {tier_policy!r}")
             if len(self.tier_blocks) > 1 \
@@ -190,7 +207,9 @@ class ServingEngine:
         else:
             self.mm = MemoryManager(layout.num_blocks, cost,
                                     default_mode=default_mode, damon_seed=seed,
-                                    telemetry=self.telemetry)
+                                    telemetry=self.telemetry,
+                                    injector=self.injector,
+                                    containment=self.containment)
         self._pool_blocks = layout.num_blocks + sum(self.tier_blocks)
         self.mm.attach_reclaim_program(reclaim_lru_program())
         if policy == "ebpf":
@@ -525,7 +544,16 @@ class ServingEngine:
             except MMOutOfMemory as oom:
                 self._preempt(oom.victim_pid)
         # drop slots preempted while relieving a later slot's fault
-        return {s for s in ok if s in self.active}
+        ok = {s for s in ok if s in self.active}
+        if tiered and ok:
+            # decode-time tier placement: consult HOOK_TIER for the blocks
+            # this step just installed, mirroring the batched route (where
+            # fault_batch runs the first-touch placement pass itself)
+            bt = self.layout.block_tokens
+            self.mm.place_decode(
+                [(self.active[s].pid, self.active[s].length // bt,
+                  FaultKind.FIRST_TOUCH) for s in sorted(ok)])
+        return ok
 
     def _decode_once(self) -> None:
         B, MB = self.max_batch, self.layout.max_blocks
@@ -672,8 +700,13 @@ class ServingEngine:
                       "batch_calls": self.mm.hooks.batch_calls},
             "cache": self.mm.hooks._artifact_cache().stats,
         }
+        res: dict = {"supervisor": self.mm.hooks.supervisor.snapshot()}
+        if self.injector is not None:
+            res["injector"] = self.injector.snapshot()
         if isinstance(self.mm, TieredMemoryManager):
             sections["tier"] = self.mm.tier_snapshot()
+            res["health"] = self.mm.health.snapshot()
+        sections["resilience"] = res
         if self.telemetry is not None and self.telemetry.enabled:
             sections["telemetry"] = self.telemetry.snapshot()
         return flatten_metrics(sections)
@@ -681,3 +714,11 @@ class ServingEngine:
     def metrics_text(self) -> str:
         """Prometheus-style text exposition of :meth:`metrics`."""
         return render_prometheus(self.metrics())
+
+    def poll_events(self) -> list[dict]:
+        """Drain and decode any ring events published since the last poll —
+        the LIVE consumer path (mid-run), as opposed to the end-of-run
+        ``write_trace`` export.  ``[]`` when telemetry is off."""
+        if self.telemetry is None:
+            return []
+        return self.telemetry.poll_events()

@@ -60,19 +60,21 @@ def _profile() -> Profile:
     ])
 
 
-def mk_manager(topology: str) -> MemoryManager:
+def mk_manager(topology: str, *, injector=None,
+               containment: bool = True) -> MemoryManager:
     hw = HWSpec()
     cost = make_cost_model(hw, kv_heads=4, head_dim=64)
+    kw = dict(default_mode="thp", injector=injector, containment=containment)
     if topology == "untiered":
-        mm = MemoryManager(HBM_BLOCKS[topology], cost, default_mode="thp")
+        mm = MemoryManager(HBM_BLOCKS[topology], cost, **kw)
     elif topology == "2tier":
         mm = TieredMemoryManager(HBM_BLOCKS[topology], cost, host_blocks=128,
-                                 default_mode="thp")
+                                 **kw)
         mm.attach_tier_program(tier_damon_program())
     elif topology == "4tier":
         mm = TieredMemoryManager(
             HBM_BLOCKS[topology], cost,
-            tiers=default_tier_chain(hw, (32, 64, 32)), default_mode="thp")
+            tiers=default_tier_chain(hw, (32, 64, 32)), **kw)
         mm.attach_tier_program(tier_heat_band_program())
     else:  # pragma: no cover
         raise ValueError(topology)
@@ -140,10 +142,20 @@ def make_script(seed: int, nsteps: int = 36) -> list[Step]:
 
 # ------------------------------------------------------------ replica state
 class Replica:
-    """One manager + a modeled device pool + the KV content oracle."""
+    """One manager + a modeled device pool + the KV content oracle.
 
-    def __init__(self, topology: str, batched: bool) -> None:
-        self.mm = mk_manager(topology)
+    ``injector`` arms the chaos lane: a seeded FailureInjector shared
+    schedule (NOT a shared object — build one per replica from the same
+    seed/rates so counters stay independent).  Chaos lanes use the
+    deterministic ``_kv_value`` oracle, a pure function of (pid, block),
+    so two replicas whose PLACEMENT diverges under failures can still be
+    compared content-wise block by block."""
+
+    def __init__(self, topology: str, batched: bool, *, injector=None,
+                 containment: bool = True, value_fn=None) -> None:
+        self.mm = mk_manager(topology, injector=injector,
+                             containment=containment)
+        self.value_fn = value_fn
         self.batched = batched
         self.tiered = isinstance(self.mm, TieredMemoryManager)
         n = self.mm.device_pool_blocks if self.tiered \
@@ -207,6 +219,9 @@ class Replica:
             def scalar():
                 for pid, addr, kind in reqs:
                     self.mm.ensure_mapped(pid, addr, kind)
+                # decode-time tier placement parity: the batched route runs
+                # its FIRST_TOUCH placement pass inside fault_batch
+                self.mm.place_decode(reqs)
             self._with_relief(scalar, len(reqs))
 
     def complete(self, pid: int) -> None:
@@ -227,8 +242,11 @@ class Replica:
             table = self.mm.block_table(pid, self.vma[pid])
             for lg in sorted(self.mm.procs[pid].mapped):
                 if (pid, lg) not in self.expected:
-                    self._stamp += 1
-                    val = self._stamp * 1000 + pid
+                    if self.value_fn is not None:
+                        val = self.value_fn(pid, lg)
+                    else:
+                        self._stamp += 1
+                        val = self._stamp * 1000 + pid
                     self.pool[table[lg]] = val
                     self.expected[(pid, lg)] = val
 
@@ -426,3 +444,92 @@ def test_tier_topologies_complete_same_workload(seed):
     # tiered replicas absorb pressure by demotion, not by dropping KV
     assert reps["2tier"].mm.stats.demotions > 0
     assert reps["4tier"].mm.stats.demotions > 0
+
+
+# ------------------------------------------------------------- chaos lane
+# Aggressive enough that every armed site actually fires on every seed,
+# low enough that the workload still completes against every topology.
+CHAOS_RATES = {"migrate_copy": 0.15, "tier_alloc": 0.10,
+               "link_flap": 0.10, "hook_run": 0.05}
+
+
+def _kv_value(pid: int, lg: int) -> int:
+    """Pure (pid, block) -> sentinel value: lets replicas whose PLACEMENT
+    diverged under failures still be compared content-wise per block."""
+    return pid * 1_000_003 + lg * 101 + 7
+
+
+def _chaos_replica(topology: str, batched: bool, seed: int,
+                   containment: bool = True) -> Replica:
+    from repro.resilience import FailureInjector
+    # one injector PER replica (same seed/rates = same pure schedule);
+    # sharing an object would only entangle the check/fire counters
+    return Replica(topology, batched=batched,
+                   injector=FailureInjector(seed, dict(CHAOS_RATES)),
+                   containment=containment, value_fn=_kv_value)
+
+
+@pytest.mark.chaos
+@pytest.mark.differential
+@pytest.mark.parametrize("topology", ["2tier", "4tier"])
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_chaos_scalar_vs_batched(topology, seed):
+    """The resilience acceptance matrix: under an identical seeded failure
+    schedule (copy errors, alloc failures, link flaps, hook runtime errors)
+    the scalar and batched fault routes must stay STEP-FOR-STEP identical —
+    same retries, same aborts, same strikes/detaches, same end state — and
+    every structural + KV invariant must hold after every step: failures
+    change placement and cost, never data."""
+    script = make_script(seed)
+    scalar = _chaos_replica(topology, batched=False, seed=seed)
+    batched = _chaos_replica(topology, batched=True, seed=seed)
+    clean = Replica(topology, batched=True, value_fn=_kv_value)
+    for i, s in enumerate(script):
+        tag = f"chaos seed={seed} topology={topology} step={i}"
+        run_step(scalar, s)
+        run_step(batched, s)
+        run_step(clean, s)
+        scalar.check_invariants(f"{tag} scalar")
+        batched.check_invariants(f"{tag} batched")
+        assert scalar.state() == batched.state(), \
+            f"{tag}: routes diverged under the same failure schedule"
+    assert scalar.mm.stats.snapshot() == batched.mm.stats.snapshot(), \
+        f"chaos seed={seed} {topology}: stats diverged"
+    # the schedule really did inject (rates are sized so every site fires)
+    inj = batched.mm.injector
+    assert sum(inj.fired.values()) > 0, "chaos lane never injected anything"
+    assert inj.fired == scalar.mm.injector.fired, \
+        "pure-schedule contract broken: routes saw different injections"
+    # KV bit-identity vs the failure-free run: every block BOTH lanes hold
+    # carries identical bytes (placement may differ; content never does)
+    for (pid, lg), val in batched.expected.items():
+        if (pid, lg) in clean.expected:
+            assert val == clean.expected[(pid, lg)]
+    clean.check_invariants(f"chaos seed={seed} {topology} clean")
+
+
+@pytest.mark.chaos
+@pytest.mark.differential
+@pytest.mark.parametrize("seed", SEEDS[:2])
+def test_chaos_executor_axis(seed, monkeypatch):
+    """Chaos x executor: the seeded failure schedule must also replay
+    identically across the interpreter, while+switch JIT and segmented
+    predicated executors (injection decisions key on modeled state, never
+    on which backend produced the decision vector)."""
+    script = make_script(seed)
+    reps = {}
+    for mode in EXECUTORS:
+        reps[mode] = _chaos_replica("4tier", batched=(mode != "interp"),
+                                    seed=seed)
+        _force_executor(reps[mode].mm, mode, monkeypatch)
+    for i, s in enumerate(script):
+        for mode, r in reps.items():
+            run_step(r, s)
+            r.check_invariants(f"chaos seed={seed} {mode} step={i}")
+        for mode in EXECUTORS[1:]:
+            assert reps[mode].state() == reps["interp"].state(), \
+                f"chaos seed={seed} step={i}: {mode} diverged"
+    for mode in EXECUTORS[1:]:
+        assert reps[mode].mm.stats.snapshot() == \
+            reps["interp"].mm.stats.snapshot()
+    assert sum(reps["interp"].mm.injector.fired.values()) > 0

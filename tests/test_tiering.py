@@ -247,7 +247,9 @@ class TestEngineTiering:
         tiered = self._run(setup, host_blocks=192, tier_policy="ebpf-tier")
         assert tiered.stats.preemptions == 0
         assert tiered.stats.completed == 6
-        assert tiered.stats.tier_reliefs > 0
+        # pressure is absorbed by demotion — reactively (an OOM relief pass)
+        # or proactively (decode-time FIRST_TOUCH placement demoting cold
+        # blocks before the pool ever runs dry) — never by preemption
         assert tiered.mm.stats.demotions > 0
 
     def test_oom_in_both_tiers_falls_back_to_preemption(self, setup):
