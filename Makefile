@@ -4,8 +4,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-diff test-chaos bench-smoke bench bench-json trace-demo \
-	clean-cache
+.PHONY: test test-diff test-chaos bench-smoke bench bench-json perf-gate \
+	trace-demo clean-cache
 
 # tier-1 verify: the gate every PR must keep green (collects the
 # differential suite too — test-diff is the focused entry point)
@@ -40,6 +40,14 @@ bench:
 # policy and batch size) — the perf trajectory tracked from PR 2 onward
 bench-json:
 	$(PY) -m benchmarks.hotpath_bench --json BENCH_hotpath.json
+
+# CI perf gates: zero-cost claims (telemetry off / resilience disarmed
+# within 2% of baseline) + the one-dispatch hot path (batched ebpf@b16
+# steps/s within 2% of the committed BENCH_hotpath.json, fused executor
+# still issuing <= 1 dispatch/step, steady-state table crossings zero)
+perf-gate:
+	$(PY) -m benchmarks.telemetry_gate
+	$(PY) -m benchmarks.hotpath_gate
 
 # telemetry demo: serve a tiered smoke workload with tracing on and write
 # out/trace_demo.json (load in ui.perfetto.dev) + a Prometheus-style

@@ -16,7 +16,18 @@ Two per-step routes are measured in the same file:
     measurable after the optimized paths replaced them in ``core.mm``);
   * ``batched`` — this PR's path: the whole step resolves through ONE
     ``fault_batch`` (one vectorized ctx build + one compiled policy
-    invocation), incremental block tables, segment-sum access accounting.
+    invocation), incremental block tables, segment-sum access accounting,
+    and the persistent DEVICE-RESIDENT block-table plane fed by dirty-row
+    uploads (``repro.serving.tables``) instead of a per-step recapture.
+
+Each cell's table publish runs through a transfer-guard shim
+(``_TablePlane``) counting every host->device upload, so the cells report
+``crossings_per_step`` (ctx matrices + table transfers) and a STEADY-state
+probe (no block-boundary crossing): the dirty-row plane ships ZERO rows on
+steady steps while the legacy full-recapture path still ships the whole
+``[B, vma]`` stack.  Batched ebpf cells also report
+``segment_dispatches_per_step`` — the fused ``lax.scan`` policy executor
+must issue <= 1 device dispatch per engine step.
 
 Per (policy, max_batch, mode) cell we report steps/s, faults/s,
 policy-invocations/step, MEASURED per-step management wall time (p50/p99
@@ -62,6 +73,7 @@ from repro.core.context import FaultKind
 from repro.core.damon import Damon, Region
 from repro.core.hooks import HOOK_FAULT
 from repro.obs import Log2Hist, Telemetry
+from repro.serving.tables import DeviceBlockTables
 
 POLICIES = ("ebpf", "thp", "never")
 BATCH_SIZES = (4, 16)
@@ -174,13 +186,73 @@ def _legacy_record_access(mm: MemoryManager, pid: int,
             mm.stats.access_ns += int(mm.cost.access_ns(m.order))
 
 
+class _TablePlane:
+    """The engine's block-table publish path, reproduced at bench scale,
+    with a transfer-guard shim: every host->device upload the plane performs
+    goes through ``_put`` so the CROSSINGS (transfer events and table rows
+    shipped) are counted, not inferred.
+
+    * ``legacy=True``  — the pre-PR engine behavior: re-capture every
+      sequence's table on the host and ship the full ``[B, vma]`` stack to
+      the device EVERY step, whether anything changed or not;
+    * ``legacy=False`` — this PR's plane: a persistent device buffer fed by
+      dirty-row uploads (the ``repro.serving.tables`` version protocol);
+      rows cross only when the table actually mutated.
+    """
+
+    def __init__(self, nslots: int, vma_blocks: int, *, legacy: bool):
+        import jax
+        import jax.numpy as jnp
+        self.legacy = legacy
+        self.vma_blocks = vma_blocks
+        self.dbt = DeviceBlockTables(nslots, vma_blocks)
+        self.buf = jnp.full((nslots, vma_blocks), -1, jnp.int32)
+        self.transfers = 0          # host->device transfer events (shim)
+        self.rows = 0               # table rows shipped across them
+        self._jax = jax
+        self._jnp = jnp
+        # dirty rows scatter into the persistent buffer on device; idx -1
+        # (bucket padding) routes out of bounds and drops
+        self._install = jax.jit(
+            lambda buf, idx, rows: buf.at[
+                jnp.where(idx >= 0, idx, buf.shape[0])
+            ].set(rows, mode="drop"))
+
+    def _put(self, arr):
+        self.transfers += 1
+        return self._jax.device_put(arr)
+
+    def publish(self, mm: MemoryManager, pids: list[int]) -> None:
+        if self.legacy:
+            stack = np.stack([_legacy_block_table(mm, pid, self.vma_blocks)
+                              for pid in pids])
+            self.buf = self._put(stack)
+            self.rows += len(pids)
+            return
+        didx, drows, _active = self.dbt.sync(mm, pids)
+        k = len(didx)
+        if k == 0:
+            return                      # steady state: nothing crosses
+        bucket = 1 << (k - 1).bit_length()
+        if bucket > k:                  # pad so jit compiles once per bucket
+            didx = np.concatenate([didx, np.full(bucket - k, -1, np.int32)])
+            drows = np.concatenate(
+                [drows, np.zeros((bucket - k, self.vma_blocks), np.int32)])
+        self.buf = self._install(self.buf, self._put(didx), self._put(drows))
+        self.rows += k
+
+
 def _drive(mm: MemoryManager, pids: list[int], start: int, steps: int,
            vma_blocks: int, *, batched: bool,
            legacy_rng: _pyrandom.Random | None = None,
-           step_hist: Log2Hist | None = None) -> None:
+           step_hist: Log2Hist | None = None,
+           plane: _TablePlane | None = None,
+           fault: bool = True) -> None:
     """``steps`` engine-step analogues: fault the next boundary for every
-    sequence, feed DAMON, capture block tables.  ``step_hist`` (when given)
-    observes the measured wall time of every individual step."""
+    sequence, feed DAMON, publish the device block tables.  ``step_hist``
+    (when given) observes the measured wall time of every individual step;
+    ``fault=False`` runs STEADY steps (sequences mid-block, no boundary
+    crossing) — the lane that shows the dirty-row plane shipping nothing."""
     # sub-integer heat: the access accounting and DAMON stay exercised but
     # the live-heat bonus does not override the profile's size choices
     heat = np.full(vma_blocks, 0.5)
@@ -188,19 +260,24 @@ def _drive(mm: MemoryManager, pids: list[int], start: int, steps: int,
         legacy_rng = _pyrandom.Random(0)
     for step in range(start, start + steps):
         t0 = time.perf_counter_ns() if step_hist is not None else 0
-        if batched:
-            mm.fault_batch([(pid, step, FaultKind.FIRST_TOUCH)
-                            for pid in pids])
-        else:
-            for pid in pids:
-                mm.ensure_mapped(pid, step)
+        if fault:
+            if batched:
+                mm.fault_batch([(pid, step, FaultKind.FIRST_TOUCH)
+                                for pid in pids])
+            else:
+                for pid in pids:
+                    mm.ensure_mapped(pid, step)
         for pid in pids:
             if batched:
                 mm.record_access(pid, heat[:step + 1])
-                mm.block_table(pid, vma_blocks)
             else:
                 _legacy_record_access(mm, pid, heat[:step + 1], legacy_rng)
-                _legacy_block_table(mm, pid, vma_blocks)
+        if plane is not None:
+            plane.publish(mm, pids)
+        else:
+            for pid in pids:
+                (mm.block_table(pid, vma_blocks) if batched
+                 else _legacy_block_table(mm, pid, vma_blocks))
         mm.drain_moves()
         mm.tick()
         if step_hist is not None:
@@ -224,38 +301,85 @@ class _Cell:
         self.pos = 0
         self.windows: list[dict] = []
         self.legacy_rng = _pyrandom.Random(0)   # hermetic per cell
+        # scalar lane publishes the pre-PR full-recapture table stack;
+        # batched lane runs the persistent dirty-row plane
+        self.plane = _TablePlane(max_batch, self.vma_blocks,
+                                 legacy=not batched)
+        self.steady: dict | None = None
         # measured per-step management wall time across all timed windows
         self.mgmt_hist = Log2Hist()
         # warmup: first faults, compile of the batched policy, damon spin-up
         self._advance(warmup, timed=False)
 
+    def _pred(self):
+        ap = self.mm.hooks._hooks.get(HOOK_FAULT)
+        return getattr(ap, "pred", None) if ap is not None else None
+
     def _advance(self, steps: int, *, timed: bool) -> None:
         mm = self.mm
         faults0, mgmt0 = mm.stats.faults, mm.stats.mgmt_ns
         calls0 = mm.hooks.calls[HOOK_FAULT]
+        xfer0, rows0 = self.plane.transfers, self.plane.rows
+        pred = self._pred()
+        disp0 = pred.total_dispatches if pred is not None else 0
         t0 = time.perf_counter()
         _drive(mm, self.pids, self.pos, steps, self.vma_blocks,
                batched=self.batched, legacy_rng=self.legacy_rng,
-               step_hist=self.mgmt_hist if timed else None)
+               step_hist=self.mgmt_hist if timed else None,
+               plane=self.plane)
         wall = time.perf_counter() - t0
         self.pos += steps
         if timed:
+            pred = self._pred()
             self.windows.append({
                 "wall": wall,
                 "faults": mm.stats.faults - faults0,
                 "calls": mm.hooks.calls[HOOK_FAULT] - calls0,
                 "mgmt_ns": mm.stats.mgmt_ns - mgmt0,
+                "transfers": self.plane.transfers - xfer0,
+                "rows_up": self.plane.rows - rows0,
+                "dispatches": (pred.total_dispatches - disp0
+                               if pred is not None else None),
             })
 
     def window(self) -> None:
         self._advance(self.steps, timed=True)
+
+    def steady_probe(self, steps: int = 16) -> dict:
+        """Steps where NO sequence crosses a block boundary (the common
+        decode step: block_tokens-1 out of block_tokens steps).  The
+        dirty-row plane ships NOTHING; the legacy plane still re-publishes
+        the full table stack every step."""
+        xfer0, rows0 = self.plane.transfers, self.plane.rows
+        _drive(self.mm, self.pids, self.pos, steps, self.vma_blocks,
+               batched=self.batched, legacy_rng=self.legacy_rng,
+               plane=self.plane, fault=False)
+        self.pos += steps
+        self.steady = {
+            "steps": steps,
+            "crossings_per_step": (self.plane.transfers - xfer0) / steps,
+            "rows_per_step": (self.plane.rows - rows0) / steps,
+        }
+        return self.steady
 
     def result(self) -> dict:
         # median window by wall time: robust to host jitter, representative
         # of mid-run sequence lengths for both lanes
         ws = sorted(self.windows, key=lambda w: w["wall"])
         mid = ws[len(ws) // 2]
+        if self.steady is None:
+            self.steady_probe()
+        # host->device crossings: table-plane transfer events (shim-counted)
+        # plus one ctx-matrix upload per compiled policy dispatch (scalar
+        # policies run the host interpreter — no ctx crosses)
+        ctx_up = mid["calls"] if self.batched else 0
         return {
+            "crossings_per_step": (ctx_up + mid["transfers"]) / self.steps,
+            "table_rows_uploaded_per_step": mid["rows_up"] / self.steps,
+            "segment_dispatches_per_step": (
+                None if mid["dispatches"] is None
+                else mid["dispatches"] / self.steps),
+            "steady": self.steady,
             "policy": self.policy,
             "max_batch": self.max_batch,
             "mode": "batched" if self.batched else "scalar",
@@ -333,7 +457,14 @@ def collect_executors(*, smoke: bool = False) -> dict:
     jit = JitPolicy(prog, maps)
     out = {"program": "ebpf_mm(max_regions=64)",
            "unrolled_insns": seg.unrolled_len if seg else None,
-           "selected_backend": selected, "lanes": []}
+           "selected_backend": selected,
+           # the one-dispatch contract: the Fig-1 default's segment PLAN may
+           # chain, but the fused lax.scan executor issues ONE dispatch
+           "fused": seg.fused if seg else None,
+           "scan_stages": seg.scan_stages if seg else None,
+           "traced_len": seg.traced_len if seg else None,
+           "dispatches_per_batch": seg.dispatches if seg else None,
+           "lanes": []}
     for b in batch_sizes:
         mat = mats[b]
         lanes = {
@@ -481,7 +612,9 @@ def main(smoke: bool = False) -> list[str]:
             f"faults_per_s={c['faults_per_s']:.0f};"
             f"inv_per_step={c['policy_invocations_per_step']:.2f};"
             f"mgmt_wall_p50_us={c['mgmt_wall_p50_ns'] / 1e3:.0f};"
-            f"mgmt_wall_p99_us={c['mgmt_wall_p99_ns'] / 1e3:.0f}")
+            f"mgmt_wall_p99_us={c['mgmt_wall_p99_ns'] / 1e3:.0f};"
+            f"crossings_per_step={c['crossings_per_step']:.2f};"
+            f"steady_rows_per_step={c['steady']['rows_per_step']:.2f}")
     for key, s in out["speedup_batched_over_scalar"].items():
         lines.append(f"hotpath_speedup_{key},{s:.2f},batched_over_scalar")
     for lane in out["executors"]["lanes"]:
@@ -515,16 +648,23 @@ if __name__ == "__main__":
         print(f"wrote {args.json}")
     print("name,us_per_call,derived")
     for c in result["cells"]:
+        disp = c["segment_dispatches_per_step"]
         print(f"hotpath_{c['policy']}_b{c['max_batch']}_{c['mode']},"
               f"{1e6 / c['steps_per_s']:.1f},"
               f"steps_per_s={c['steps_per_s']:.1f};"
               f"faults_per_s={c['faults_per_s']:.0f};"
-              f"inv_per_step={c['policy_invocations_per_step']:.2f}")
+              f"inv_per_step={c['policy_invocations_per_step']:.2f};"
+              f"crossings_per_step={c['crossings_per_step']:.2f};"
+              f"steady_rows_per_step={c['steady']['rows_per_step']:.2f}"
+              + (f";dispatches_per_step={disp:.2f}"
+                 if disp is not None else ""))
     for key, s in result["speedup_batched_over_scalar"].items():
         print(f"hotpath_speedup_{key},{s:.2f},batched_over_scalar")
     ex = result["executors"]
     print(f"# default Fig-1: {ex['unrolled_insns']} unrolled insns -> "
-          f"{ex['selected_backend']}")
+          f"{ex['selected_backend']}, fused={ex['fused']} "
+          f"(traced_len={ex['traced_len']}, "
+          f"dispatches_per_batch={ex['dispatches_per_batch']})")
     for lane in ex["lanes"]:
         print(f"executor_{lane['backend']}_b{lane['batch']},"
               f"{lane['us_per_batch']:.1f},"

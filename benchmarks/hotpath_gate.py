@@ -1,0 +1,86 @@
+"""CI perf gate: the one-dispatch decode step's hot path must not regress.
+
+Extends the overhead-gate suite (``benchmarks.telemetry_gate``) with the
+throughput side: the batched ebpf cell at batch 16 — the cell the
+acceptance numbers track — is re-measured and held within 2% steps/s of the
+committed ``BENCH_hotpath.json`` baseline, plus two structural invariants
+of the one-dispatch step:
+
+- ``segment_dispatches_per_step <= 1`` — the fused ``lax.scan`` policy
+  executor issues at most one device dispatch per engine step (a fallback
+  to the chained segment loop would trip this long before the wall-clock
+  gate notices);
+- steady-state table crossings are ZERO — the dirty-row device-table plane
+  ships nothing when no sequence crosses a block boundary (a per-step
+  recapture sneaking back in ships ``B`` rows every step).
+
+Host jitter on shared CI runners can flip a marginal wall-clock run, so the
+throughput ratio takes the BEST of up to three attempts; the structural
+invariants must hold on EVERY attempt.
+
+Run:  PYTHONPATH=src python -m benchmarks.hotpath_gate [BASELINE_JSON]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from benchmarks.hotpath_bench import N_WINDOWS, STEPS, WARMUP, _Cell
+
+THRESHOLD = 0.98
+ATTEMPTS = 3
+POLICY, BATCH = "ebpf", 16
+
+
+def _baseline(path: pathlib.Path) -> float:
+    with open(path) as f:
+        doc = json.load(f)
+    for c in doc["cells"]:
+        if (c["policy"] == POLICY and c["max_batch"] == BATCH
+                and c["mode"] == "batched"):
+            return float(c["steps_per_s"])
+    raise SystemExit(f"no batched {POLICY} b{BATCH} cell in {path}")
+
+
+def _measure() -> dict:
+    cell = _Cell(POLICY, BATCH, batched=True, steps=STEPS, warmup=WARMUP)
+    for _ in range(N_WINDOWS):
+        cell.window()
+    return cell.result()
+
+
+def main(argv: list[str]) -> int:
+    path = pathlib.Path(argv[0]) if argv else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_hotpath.json"
+    base = _baseline(path)
+    best = 0.0
+    for attempt in range(1, ATTEMPTS + 1):
+        r = _measure()
+        ratio = r["steps_per_s"] / base
+        best = max(best, ratio)
+        disp = r["segment_dispatches_per_step"]
+        steady = r["steady"]["rows_per_step"]
+        print(f"attempt {attempt}: steps_per_s={r['steps_per_s']:.1f} "
+              f"baseline={base:.1f} ratio={ratio:.3f} "
+              f"dispatches_per_step={disp:.2f} steady_rows={steady:.2f}")
+        if disp is not None and disp > 1.0:
+            print(f"FAIL: {disp:.2f} segment dispatches per step — the "
+                  f"fused scan executor fell back to the chained loop")
+            return 1
+        if steady != 0.0:
+            print(f"FAIL: {steady:.2f} table rows/step crossed on steady "
+                  f"steps — per-step recapture snuck back in")
+            return 1
+        if best >= THRESHOLD:
+            print(f"PASS: batched {POLICY} b{BATCH} within "
+                  f"{(1 - THRESHOLD) * 100:.0f}% of the committed baseline")
+            return 0
+    print(f"FAIL: best ratio {best:.3f} < {THRESHOLD} on every attempt — "
+          f"the hot path regressed vs {path.name}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -246,6 +246,94 @@ def unroll_lowered(lp: LoweredProgram) -> tuple[tuple[LIns, ...],
     return tuple(insns), tuple(cuts)
 
 
+def _spans_congruent(code: tuple[LIns, ...], a: int, b: int,
+                     blen: int) -> bool:
+    """True when ``code[a:a+blen]`` and ``code[b:b+blen]`` are loop-copy
+    congruent: every non-target field identical, and targets either both
+    absent, both the SAME relative offset within their copy, or both the
+    SAME absolute pc outside both copies (a shared past-loop exit)."""
+    for o in range(blen):
+        ia, ib = code[a + o], code[b + o]
+        if (ia.op, ia.dst, ia.src, ia.imm, ia.src2) != \
+                (ib.op, ib.dst, ib.src, ib.imm, ib.src2):
+            return False
+        ta, tb = ia.target, ib.target
+        if (ta < 0) != (tb < 0):
+            return False
+        if ta < 0:
+            continue
+        rel = (ta - a == tb - b) and 0 <= ta - a < blen
+        absolute = (ta == tb) and ta >= a + blen and tb >= b + blen
+        if not (rel or absolute):
+            return False
+    return True
+
+
+def plan_scan_stages(code: tuple[LIns, ...], cuts: tuple[int, ...]
+                     ) -> tuple[list[tuple], int]:
+    """Factor flattened ``code`` into a stage plan for the fused one-dispatch
+    executor: maximal runs of CONGRUENT loop copies (the spans between the
+    equally-spaced cut points :func:`unroll_lowered` records) collapse to a
+    single ``("scan", start, end, trips, blen)`` stage — one copy body,
+    ``lax.scan``-ed ``trips`` times — and everything else stays verbatim
+    ``("plain", start, end)`` stages.
+
+    Returns ``(stages, traced_len)`` where ``traced_len`` is the number of
+    instructions the fused compile actually traces (each scan run counts one
+    copy); it is the budget number a caller compares against its segment
+    limit.  A run is rejected (stays plain) unless every copy is congruent
+    with the first, no jump from before the run lands inside it anywhere but
+    its first pc (a front copy is peeled off into the prologue until that
+    holds), and every exit target lands at/after the run end.
+    """
+    n = len(code)
+    cs = sorted({c for c in cuts if 0 <= c <= n})
+    runs: list[tuple[int, int, int, int]] = []   # (start, end, trips, blen)
+    i = 0
+    while i < len(cs) - 1:
+        start = cs[i]
+        blen = cs[i + 1] - start
+        k = i + 1
+        while (k + 1 < len(cs) and cs[k + 1] - cs[k] == blen
+               and _spans_congruent(code, start, cs[k], blen)):
+            k += 1
+        trips = k - i
+        if trips >= 2 and blen > 0:
+            # peel front copies into the plain prologue until no jump from
+            # OUTSIDE the run lands strictly inside it (jumps from before a
+            # loop can only land in its first copy, so peeling converges)
+            while trips >= 2:
+                end = start + trips * blen
+                bad = [ins.target for pc, ins in enumerate(code)
+                       if ins.target >= 0 and not (start <= pc < end)
+                       and start < ins.target < end]
+                if not bad:
+                    break
+                if any(t >= start + blen for t in bad):
+                    trips = 0      # lands past copy 0: not peelable, reject
+                    break
+                start += blen
+                trips -= 1
+            # exits from the copy body must land at/after the run end
+            if trips >= 2 and all(
+                    ins.target < start + blen or ins.target >= end
+                    for ins in code[start:start + blen] if ins.target >= 0):
+                runs.append((start, end, trips, blen))
+        i = k
+    stages: list[tuple] = []
+    pos = 0
+    for start, end, trips, blen in runs:
+        if pos < start:
+            stages.append(("plain", pos, start))
+        stages.append(("scan", start, end, trips, blen))
+        pos = end
+    if pos < n:
+        stages.append(("plain", pos, n))
+    traced = sum((st[4] if st[0] == "scan" else st[2] - st[1])
+                 for st in stages)
+    return stages, traced
+
+
 def segment_code(code: tuple[LIns, ...], cuts: tuple[int, ...],
                  limit: int) -> list[tuple[int, int]]:
     """Partition straight-line ``code`` into ``[start, end)`` spans of at most

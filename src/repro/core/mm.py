@@ -68,6 +68,12 @@ class ProcessState:
     # (install/unmap/collapse/migrate) or the table goes stale.
     blocktab: np.ndarray = field(
         default_factory=lambda: np.empty(0, dtype=np.int32))
+    # Monotonic generation counter for ``blocktab``: bumped on EVERY span
+    # write or unmap (install/compaction/collapse/tier migration included),
+    # so a device-resident table row is stale iff its recorded version
+    # differs.  This is what makes dirty-row uploads safe against same-step
+    # migrations: _note_mapped goes through _set_span, which bumps it.
+    table_version: int = 0
     # Mapping-metadata arrays (sorted starts/sizes/orders/tiers/device
     # indices) for the vectorized access-accounting path; rebuilt lazily
     # when a mapping changes.
@@ -257,6 +263,7 @@ class MemoryManager:
         base = self._device_index(m)
         t[m.logical_start:m.logical_start + size] = \
             base + np.arange(size, dtype=np.int32)
+        st.table_version += 1
         return base
 
     def _note_installed(self, st: ProcessState, m: PageMapping) -> None:
@@ -294,6 +301,7 @@ class MemoryManager:
                        order: int) -> None:
         t = self._table(st)
         t[logical_start:logical_start + order_blocks(order)] = -1
+        st.table_version += 1
         st.meta_dirty = True
 
     def _mapping_arrays(self, st: ProcessState) -> tuple:
@@ -440,12 +448,19 @@ class MemoryManager:
         decisions = self.hooks.run_batch(HOOK_FAULT, ctx_mat,
                                          discipline=False)
         row_disc = self.hooks.row_discipline_needed(HOOK_FAULT, decisions)
+        # fault_max_order depends only on the pid's own mapped set, which the
+        # ctx build just scanned (vectorized): recompute per row only when an
+        # EARLIER install in this batch touched the same pid.  Engine decode
+        # batches carry distinct pids, so the hot path reuses every row.
+        touched: set[int] = set()
         for row, i in enumerate(pend):
             pid, addr, _kind = reqs[i]
             st = self.procs[pid]
             if addr in st.mapped:              # conflict: earlier grant won
                 continue
-            fmax = self.fault_max_order(st, addr)
+            fmax = self.fault_max_order(st, addr) if pid in touched \
+                else int(ctx_mat[row, CTX.FAULT_MAX_ORDER])
+            touched.add(pid)
             decision = int(decisions[row])
             if row_disc:
                 decision = self.hooks.discipline_row(HOOK_FAULT,
@@ -783,6 +798,13 @@ class MemoryManager:
         n = min(max_blocks, t.size)
         out[:n] = t[:n]
         return out
+
+    def table_version(self, pid: int) -> int:
+        """Generation counter of ``pid``'s incremental block table — changes
+        exactly when any row of :meth:`block_table` would.  A device-resident
+        mirror is fresh iff the version it recorded at upload still matches
+        (the dirty-row protocol in :mod:`repro.serving.tables`)."""
+        return self.procs[pid].table_version
 
     def page_lists_by_order(self, pids: list[int]) -> dict[int, np.ndarray]:
         """Per-order page lists for the multi-size paged-attention kernel.

@@ -44,8 +44,8 @@ from .isa import (ALU_IMM_OPS, ALU_REG_OPS, COND_JUMP_IMM, COND_JUMP_REG,
 from .lower import (LIns, LoweredProgram, BatchCtx, MAX_UNROLLED, RB_FIELDS,
                     alu_jnp as _alu_jnp, cmp_jnp as _cmp_jnp,
                     collect_rb_events, helper_jnp, ldctx_dyn, lower,
-                    map_lookup, map_lookup_dyn, rb_words, segment_code,
-                    unroll_lowered)
+                    map_lookup, map_lookup_dyn, plan_scan_stages, rb_words,
+                    segment_code, unroll_lowered)
 from .maps import MapRegistry
 from .vm import _IMM2REG, _JIMM2REG, RB_HELPERS
 
@@ -100,6 +100,88 @@ def _plan_segments(code: tuple[LIns, ...], cuts: tuple[int, ...],
     return plans
 
 
+def _exec_span(code: tuple[LIns, ...], start: int, end: int, cv,
+               map_arrays, map_lens, regs, active, done, r0_final,
+               pending: dict, ev=None, ecnt=None, edrop=None,
+               rb_cap: int = 0):
+    """Execute the straight-line span ``[start, end)`` predicated.
+
+    ``regs`` is a list of per-register ``[B]`` vectors; ``pending`` maps
+    absolute jump-target pc -> lane mask — targets inside the span are
+    consumed as the walk passes them, targets at/after ``end`` are left in
+    (or OR-ed into) ``pending`` for the caller.  This is the ONE lowering
+    walk shared by the chained per-segment compile, the fused one-dispatch
+    executor and the ``lax.scan`` loop-copy body."""
+    B = active.shape[0]
+
+    def write(regs, dst, val, active):
+        regs = list(regs)
+        regs[dst] = jnp.where(active, val, regs[dst])
+        return regs
+
+    for pc in range(start, end):
+        if pc in pending:
+            active = active | pending.pop(pc)
+        insn = code[pc]
+        op = insn.op
+        if op in ALU_REG_OPS:
+            val = _alu_jnp(op, regs[insn.dst], regs[insn.src])
+            regs = write(regs, insn.dst, val, active)
+        elif op in ALU_IMM_OPS:
+            imm = jnp.asarray(insn.imm, I64)
+            val = imm if op == Op.MOVI else _alu_jnp(
+                _IMM2REG[op], regs[insn.dst], imm)
+            regs = write(regs, insn.dst, val, active)
+        elif op == Op.NEG:
+            regs = write(regs, insn.dst, -regs[insn.dst], active)
+        elif op == Op.LDCTX:
+            regs = write(regs, insn.dst, cv.col(insn.imm), active)
+        elif op == Op.LDCTXR:
+            regs = write(regs, insn.dst, ldctx_dyn(cv, regs[insn.src]),
+                         active)
+        elif op == Op.LDMAP:
+            val = map_lookup(map_arrays, map_lens, insn.imm,
+                             regs[insn.src])
+            regs = write(regs, insn.dst, val, active)
+        elif op == Op.LDMAPX:
+            val = map_lookup_dyn(map_arrays, map_lens, regs[insn.src2],
+                                 regs[insn.src], cv.zeros_like_lane())
+            regs = write(regs, insn.dst, val, active)
+        elif op == Op.MAPSZ:
+            regs = write(regs, insn.dst,
+                         jnp.broadcast_to(map_lens[insn.imm], (B,)),
+                         active)
+        elif op == Op.JA:
+            pending[insn.target] = pending.get(
+                insn.target, jnp.zeros(B, bool)) | active
+            active = jnp.zeros(B, bool)
+        elif op in COND_JUMP_REG or op in COND_JUMP_IMM:
+            if op in COND_JUMP_REG:
+                taken = _cmp_jnp(op, regs[insn.dst], regs[insn.src])
+            else:
+                taken = _cmp_jnp(_JIMM2REG[op], regs[insn.dst],
+                                 jnp.asarray(insn.src2, I64))
+            taken = taken & active
+            pending[insn.target] = pending.get(
+                insn.target, jnp.zeros(B, bool)) | taken
+            active = active & ~taken
+        elif op == Op.CALL:
+            if rb_cap and insn.imm in RB_HELPERS:
+                words = rb_words(insn.imm, lambda i: regs[i], cv)
+                ev, ecnt, edrop, r0 = cv.event_write(
+                    ev, ecnt, edrop, words, active)
+            else:
+                r0 = helper_jnp(insn.imm, lambda i: regs[i], cv)
+            regs = write(regs, 0, r0, active)
+        elif op == Op.EXIT:
+            r0_final = jnp.where(active & ~done, regs[0], r0_final)
+            done = done | active
+            active = jnp.zeros(B, bool)
+        else:   # pragma: no cover
+            raise ValueError(f"unhandled opcode {op}")
+    return regs, active, done, r0_final, ev, ecnt, edrop
+
+
 def _make_segment_fn(code: tuple[LIns, ...], start: int, end: int,
                      entry_targets: tuple[int, ...],
                      exit_targets: tuple[int, ...],
@@ -121,72 +203,9 @@ def _make_segment_fn(code: tuple[LIns, ...], start: int, end: int,
         cv = BatchCtx(ctx)
         regs = [regs_in[i] for i in range(NUM_REGS)]
         pending: dict[int, jax.Array] = dict(zip(entry_targets, entry_masks))
-
-        def write(regs, dst, val, active):
-            regs = list(regs)
-            regs[dst] = jnp.where(active, val, regs[dst])
-            return regs
-
-        for pc in range(start, end):
-            if pc in pending:
-                active = active | pending.pop(pc)
-            insn = code[pc]
-            op = insn.op
-            if op in ALU_REG_OPS:
-                val = _alu_jnp(op, regs[insn.dst], regs[insn.src])
-                regs = write(regs, insn.dst, val, active)
-            elif op in ALU_IMM_OPS:
-                imm = jnp.asarray(insn.imm, I64)
-                val = imm if op == Op.MOVI else _alu_jnp(
-                    _IMM2REG[op], regs[insn.dst], imm)
-                regs = write(regs, insn.dst, val, active)
-            elif op == Op.NEG:
-                regs = write(regs, insn.dst, -regs[insn.dst], active)
-            elif op == Op.LDCTX:
-                regs = write(regs, insn.dst, cv.col(insn.imm), active)
-            elif op == Op.LDCTXR:
-                regs = write(regs, insn.dst, ldctx_dyn(cv, regs[insn.src]),
-                             active)
-            elif op == Op.LDMAP:
-                val = map_lookup(map_arrays, map_lens, insn.imm,
-                                 regs[insn.src])
-                regs = write(regs, insn.dst, val, active)
-            elif op == Op.LDMAPX:
-                val = map_lookup_dyn(map_arrays, map_lens, regs[insn.src2],
-                                     regs[insn.src], cv.zeros_like_lane())
-                regs = write(regs, insn.dst, val, active)
-            elif op == Op.MAPSZ:
-                regs = write(regs, insn.dst,
-                             jnp.broadcast_to(map_lens[insn.imm], (B,)),
-                             active)
-            elif op == Op.JA:
-                pending[insn.target] = pending.get(
-                    insn.target, jnp.zeros(B, bool)) | active
-                active = jnp.zeros(B, bool)
-            elif op in COND_JUMP_REG or op in COND_JUMP_IMM:
-                if op in COND_JUMP_REG:
-                    taken = _cmp_jnp(op, regs[insn.dst], regs[insn.src])
-                else:
-                    taken = _cmp_jnp(_JIMM2REG[op], regs[insn.dst],
-                                     jnp.asarray(insn.src2, I64))
-                taken = taken & active
-                pending[insn.target] = pending.get(
-                    insn.target, jnp.zeros(B, bool)) | taken
-                active = active & ~taken
-            elif op == Op.CALL:
-                if rb_cap and insn.imm in RB_HELPERS:
-                    words = rb_words(insn.imm, lambda i: regs[i], cv)
-                    ev, ecnt, edrop, r0 = cv.event_write(
-                        ev, ecnt, edrop, words, active)
-                else:
-                    r0 = helper_jnp(insn.imm, lambda i: regs[i], cv)
-                regs = write(regs, 0, r0, active)
-            elif op == Op.EXIT:
-                r0_final = jnp.where(active & ~done, regs[0], r0_final)
-                done = done | active
-                active = jnp.zeros(B, bool)
-            else:   # pragma: no cover
-                raise ValueError(f"unhandled opcode {op}")
+        regs, active, done, r0_final, ev, ecnt, edrop = _exec_span(
+            code, start, end, cv, map_arrays, map_lens, regs, active, done,
+            r0_final, pending, ev, ecnt, edrop, rb_cap)
         exit_masks = tuple(pending.pop(t, jnp.zeros(B, bool))
                            for t in exit_targets)
         # forward-only code: anything still pending must be an exit target
@@ -197,6 +216,82 @@ def _make_segment_fn(code: tuple[LIns, ...], start: int, end: int,
         return jnp.stack(regs), active, done, r0_final, exit_masks
 
     return seg
+
+
+def _make_fused_fn(code: tuple[LIns, ...], stages: list[tuple],
+                   rb_cap: int = 0) -> Callable:
+    """Build the ONE-dispatch executor: the whole flattened program as a
+    single traced function — plain stages inline, congruent loop-copy runs
+    (see :func:`repro.core.lower.plan_scan_stages`) as a ``lax.scan`` over
+    ONE copy body with carry ``(regs, active, done, r0, exit masks)`` plus
+    the ring-buffer state when the program emits.  Where the chained path
+    pays one XLA dispatch per segment per batch, this costs exactly one,
+    and the traced length collapses from the full unroll to prologue + one
+    copy per loop + epilogue.
+
+    Signature: ``(ctx, map_arrays, map_lens, regs[R,B], active, done, r0
+    [, ev, ecnt, edrop]) -> r0 [, ev, ecnt, edrop]``."""
+
+    def fused(ctx, map_arrays, map_lens, regs_in, active, done, r0_final,
+              ev=None, ecnt=None, edrop=None):
+        B = ctx.shape[0]
+        cv = BatchCtx(ctx)
+        zeros = jnp.zeros(B, bool)
+        regs = [regs_in[i] for i in range(NUM_REGS)]
+        pending: dict[int, jax.Array] = {}
+        for st in stages:
+            if st[0] == "plain":
+                _, s, e = st
+                regs, active, done, r0_final, ev, ecnt, edrop = _exec_span(
+                    code, s, e, cv, map_arrays, map_lens, regs, active,
+                    done, r0_final, pending, ev, ecnt, edrop, rb_cap)
+                continue
+            _, s, e, trips, blen = st
+            if s in pending:
+                active = active | pending.pop(s)
+            exits = tuple(sorted({ins.target for ins in code[s:s + blen]
+                                  if ins.target >= e}))
+            exit_acc = tuple(pending.pop(t, zeros) for t in exits)
+
+            def body(carry, _, s=s, blen=blen, exits=exits):
+                if rb_cap:
+                    (regs_c, act_c, done_c, r0_c, acc,
+                     ev_c, ecnt_c, edrop_c) = carry
+                else:
+                    regs_c, act_c, done_c, r0_c, acc = carry
+                    ev_c = ecnt_c = edrop_c = None
+                regs_l = [regs_c[i] for i in range(NUM_REGS)]
+                local: dict[int, jax.Array] = {}
+                regs_l, act_c, done_c, r0_c, ev_c, ecnt_c, edrop_c = \
+                    _exec_span(code, s, s + blen, cv, map_arrays, map_lens,
+                               regs_l, act_c, done_c, r0_c, local,
+                               ev_c, ecnt_c, edrop_c, rb_cap)
+                acc = tuple(m | local.pop(t, zeros)
+                            for t, m in zip(exits, acc))
+                assert not local, \
+                    f"scan body leaked targets {sorted(local)}"
+                out = (jnp.stack(regs_l), act_c, done_c, r0_c, acc)
+                if rb_cap:
+                    out += (ev_c, ecnt_c, edrop_c)
+                return out, None
+
+            init = (jnp.stack(regs), active, done, r0_final, exit_acc)
+            if rb_cap:
+                init += (ev, ecnt, edrop)
+            carry, _ = jax.lax.scan(body, init, None, length=trips)
+            if rb_cap:
+                regs_s, active, done, r0_final, exit_acc, ev, ecnt, edrop \
+                    = carry
+            else:
+                regs_s, active, done, r0_final, exit_acc = carry
+            regs = [regs_s[i] for i in range(NUM_REGS)]
+            for t, m in zip(exits, exit_acc):
+                pending[t] = (pending[t] | m) if t in pending else m
+        if rb_cap:
+            return r0_final, ev, ecnt, edrop
+        return r0_final
+
+    return fused
 
 
 def compile_predicated(program: Program | LoweredProgram, maps: MapRegistry,
@@ -219,9 +314,19 @@ def compile_predicated(program: Program | LoweredProgram, maps: MapRegistry,
 class PredicatedPolicy:
     """Batch fault-decision executor (drop-in for JitPolicy.run_batch).
 
-    Compiles the flattened program as a chain of ≤ ``seg_limit``-insn
-    predicated segments; a 512-insn-or-smaller program is exactly the old
-    single-segment compile."""
+    Two execution shapes over the same flattened code:
+
+    * **fused** (preferred): when :func:`plan_scan_stages` compresses the
+      unroll to a traced length within ``seg_limit`` — congruent loop-copy
+      runs become ``lax.scan`` stages — the WHOLE program compiles as one
+      XLA function and every ``run_batch`` costs exactly ONE dispatch.
+    * **chained** (fallback): a chain of ≤ ``seg_limit``-insn predicated
+      segments driven by a host loop threading ``(regs, active, done, r0)``
+      plus cross-segment pending masks — one dispatch per segment.
+
+    ``num_segments`` always reports the chained PLAN size (the historical
+    invariant the boundary/regression guards pin); ``fused`` /
+    ``dispatches`` say what actually executes."""
 
     def __init__(self, program: Program | LoweredProgram, maps: MapRegistry,
                  code=None, cuts: tuple[int, ...] | None = None,
@@ -233,16 +338,31 @@ class PredicatedPolicy:
             code, cuts = unroll_lowered(lp)
         elif code and not isinstance(code[0], LIns):
             raise TypeError("code must be lowered-IR (see core.lower)")
+        code = tuple(code)
+        cuts = tuple(cuts or ())
         self.unrolled_len = len(code)
         self.seg_limit = seg_limit
         self.rb_cap = int(lp.facts.get("rb_cap", 0))
         self._last_rb: tuple | None = None     # (ev, cnt, drops) device arrays
+        self._plans = _plan_segments(code, cuts, seg_limit)
+        stages, traced = plan_scan_stages(code, cuts)
+        self.traced_len = traced
+        self.scan_stages = sum(1 for st in stages if st[0] == "scan")
+        self.fused = traced <= seg_limit
         self.segments: list[_Segment] = []
-        for start, end, entry, exits in _plan_segments(
-                tuple(code), tuple(cuts or ()), seg_limit):
-            fn = jax.jit(_make_segment_fn(tuple(code), start, end,
-                                          entry, exits, rb_cap=self.rb_cap))
-            self.segments.append(_Segment(start, end, entry, exits, fn))
+        if self.fused:
+            self._fused_fn = jax.jit(
+                _make_fused_fn(code, stages, rb_cap=self.rb_cap))
+        else:
+            self._fused_fn = None
+            for start, end, entry, exits in self._plans:
+                fn = jax.jit(_make_segment_fn(code, start, end, entry,
+                                              exits, rb_cap=self.rb_cap))
+                self.segments.append(_Segment(start, end, entry, exits, fn))
+        # dispatches per run_batch on the path actually taken, plus a
+        # lifetime counter the bench's crossing audit reads
+        self.dispatches = 1 if self.fused else len(self._plans)
+        self.total_dispatches = 0
         self._map_cache: tuple | None = None   # (version, arrays, lens)
         # per-batch-size initial machine state, built once: jnp constants are
         # immutable, and re-allocating five tiny device arrays per dispatch
@@ -251,7 +371,7 @@ class PredicatedPolicy:
 
     @property
     def num_segments(self) -> int:
-        return len(self.segments)
+        return len(self._plans)
 
     def _map_args(self):
         ver = self.maps.version()
@@ -282,6 +402,18 @@ class PredicatedPolicy:
             regs, active, done, r0, ev, ecnt, edrop = self._init_state(B)
         else:
             regs, active, done, r0 = self._init_state(B)
+        if self._fused_fn is not None:
+            self.total_dispatches += 1
+            if self.rb_cap:
+                r0, ev, ecnt, edrop = self._fused_fn(
+                    ctx, map_arrays, map_lens, regs, active, done, r0,
+                    ev, ecnt, edrop)
+                self._last_rb = (ev, ecnt, edrop)
+            else:
+                r0 = self._fused_fn(ctx, map_arrays, map_lens, regs,
+                                    active, done, r0)
+            return r0
+        self.total_dispatches += len(self.segments)
         zeros = done
         pending: dict[int, jax.Array] = {}
         for seg in self.segments:

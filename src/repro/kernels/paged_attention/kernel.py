@@ -98,10 +98,17 @@ def _kernel(table_ref, logical_ref, len_ref,      # scalar prefetch
 
 def paged_class_partials(q, pool_k, pool_v, page_table, logical_idx, lengths,
                          *, page_blocks: int, block_tokens: int,
-                         window: int | None = None, interpret: bool = False):
+                         window: int | None = None, interpret: bool = False,
+                         active=None):
     """One size class. q: [B,H,hd]; pools: [NB,bt,KVH,hd];
     page_table/logical_idx: [B,MP] int32 (phys start block / logical page,
     -1 = pad); lengths: [B] int32.
+
+    ``active`` ([B] bool, optional) masks out whole lanes — an inactive lane
+    is exactly "every page invalid", so it folds into the existing per-page
+    ``page_ok`` gate by blanking the lane's table row before prefetch; the
+    kernel body and its scalar-prefetch arity are unchanged (no recompile
+    churn against cached executables).
 
     Returns (acc [B,H,hd] f32, m [B,H] f32, l [B,H] f32, heat [B,MP] f32).
     """
@@ -109,6 +116,9 @@ def paged_class_partials(q, pool_k, pool_v, page_table, logical_idx, lengths,
     NB, bt, KVH, _ = pool_k.shape
     MP = page_table.shape[1]
     assert bt == block_tokens
+    if active is not None:
+        page_table = jnp.where(active[:, None], page_table,
+                               jnp.asarray(-1, page_table.dtype))
 
     kern = functools.partial(
         _kernel, page_blocks=page_blocks, block_tokens=block_tokens,

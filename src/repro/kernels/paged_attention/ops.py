@@ -19,11 +19,14 @@ def paged_decode_attention(q, pool_k, pool_v, page_tables, logical_idxs,
                            lengths, *, block_tokens: int,
                            orders: tuple[int, ...],
                            window: int | None = None,
-                           interpret: bool = False):
+                           interpret: bool = False, active=None):
     """Multi-size paged decode attention (Pallas).
 
     page_tables / logical_idxs: tuples aligned with ``orders``; entry i is
-    the [B, MP_i] table for size class orders[i].
+    the [B, MP_i] table for size class orders[i].  ``active`` ([B] bool,
+    optional) masks whole lanes out of every size class — the device-
+    resident-table convention where a vacated slot's rows may still hold
+    stale physical indices.
     Returns (out [B,H,hd] in q.dtype, heats tuple of [B,MP_i] f32).
     """
     parts = []
@@ -32,7 +35,7 @@ def paged_decode_attention(q, pool_k, pool_v, page_tables, logical_idxs,
         acc, m, l, heat = paged_class_partials(
             q, pool_k, pool_v, tbl, logical, lengths,
             page_blocks=4 ** o, block_tokens=block_tokens, window=window,
-            interpret=interpret)
+            interpret=interpret, active=active)
         parts.append((acc, m, l))
         heats.append(heat)
     out = combine_partials_ref(parts)

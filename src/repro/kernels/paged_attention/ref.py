@@ -27,15 +27,19 @@ NEG_INF = -1e30
 
 def paged_class_partials_ref(q, pool_k, pool_v, page_table, logical_idx,
                              lengths, *, page_blocks: int, block_tokens: int,
-                             window: int | None = None):
+                             window: int | None = None, active=None):
     """q: [B,H,hd]; pools: [NB,bt,KVH,hd];
     page_table: [B,MP] int32 physical START BLOCK of each class page (-1 pad),
     buddy-aligned to page_blocks; logical_idx: [B,MP] int32 logical page index
     (position = logical_idx * page_blocks * bt + offset); lengths: [B] tokens
-    valid (including current).
+    valid (including current); active: optional [B] bool lane mask (an
+    inactive lane behaves as all pages invalid — mirrors the kernel).
 
     Returns (acc [B,H,hd] f32, m [B,H] f32, l [B,H] f32, heat [B,MP] f32).
     """
+    if active is not None:
+        page_table = jnp.where(active[:, None], page_table,
+                               jnp.asarray(-1, page_table.dtype))
     B, H, hd = q.shape
     NB, bt, KVH, _ = pool_k.shape
     MP = page_table.shape[1]

@@ -327,6 +327,7 @@ def _decode_layer(cfg, plan, p, cache, x, lengths, block_table, layout,
 def decode_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
                 tokens: jax.Array, lengths: jax.Array,
                 block_table: jax.Array, layout: PagedLayout, *,
+                active: jax.Array | None = None,
                 pos3d: jax.Array | None = None, compute_dtype=BF16,
                 attn_impl: str = "gather", sharded_table=None,
                 sharded_logical=None):
@@ -334,9 +335,22 @@ def decode_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
 
     tokens: [B] int32 (the tokens at position ``lengths``); lengths: [B]
     current context length EXCLUDING the new token; block_table: [B, MB].
+    ``active`` ([B] bool, optional) marks the rows that are real sequences
+    this step; inactive rows see an all ``-1`` table, so their KV scatter is
+    provably DROPPED (``write_token_kv`` routes them out of bounds) and
+    their attention validity/heat is all-masked.  This matters once the
+    block table is a PERSISTENT device buffer: a skipped or vacated slot's
+    row still holds live-looking physical indices, and without the mask its
+    length-0 decode would scatter garbage KV into its first block (the PR 1
+    scatter-to-block-0 bug class).  ``active=None`` keeps the historical
+    caller-builds-a-fresh-table behavior.
     Returns (logits [B, V_pad], new_cache, heat [B, MB]).
     """
     B = tokens.shape[0]
+    if active is not None:
+        block_table = jnp.where(active[:, None], block_table,
+                                jnp.asarray(-1, block_table.dtype))
+        lengths = jnp.where(active, lengths, jnp.asarray(0, lengths.dtype))
     x = params["embed"].astype(compute_dtype)[tokens]
     segs = build_segments(build_layer_plans(cfg, decoder=True))
     if cfg.enc_dec:

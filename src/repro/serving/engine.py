@@ -65,6 +65,7 @@ from ..resilience import FailureInjector
 from ..models.decode import PagedLayout, cache_init, decode_step, prefill_step
 from ..models.transformer import build_layer_plans
 from .sampler import Sampler
+from .tables import DeviceBlockTables
 
 Pytree = Any
 
@@ -261,13 +262,38 @@ class ServingEngine:
         # offline profiling (profile_from_heat)
         self.heat_histograms: dict[str, np.ndarray] = {}
 
-        self._decode = jax.jit(
-            lambda p, c, t, l, bt, pos3d: decode_step(
-                p, cfg, c, t, l, bt, layout, pos3d=pos3d,
-                attn_impl="gather"))
-        self._prefill = jax.jit(
-            lambda p, c, t, bt, last, **kw: prefill_step(
-                p, cfg, c, t, bt, layout, chunk=256, last_index=last, **kw))
+        # Device-resident management plane: the [B, max_blocks] block table
+        # lives ON DEVICE as a persistent buffer; the host ships only dirty
+        # rows (version-tracked in DeviceBlockTables) and both compiled
+        # entries fold the row install into their single dispatch — the
+        # decode step is table-install + policy-consume + kernel in ONE jit.
+        MB = layout.max_blocks
+        self._tables = DeviceBlockTables(max_batch, MB)
+        self._table_buf = jnp.full((max_batch, MB), -1, jnp.int32)
+
+        def _install_rows(buf, didx, drows):
+            # dirty rows are bucket-padded with idx -1: route pads out of
+            # bounds and drop, same convention as the KV scatter
+            safe = jnp.where(didx >= 0, didx, buf.shape[0])
+            return buf.at[safe].set(drows, mode="drop")
+
+        def _decode_entry(p, c, buf, didx, drows, t, l, act, pos3d):
+            buf = _install_rows(buf, didx, drows)
+            logits, new_cache, heat = decode_step(
+                p, cfg, c, t, l, buf, layout, active=act, pos3d=pos3d,
+                attn_impl="gather")
+            return logits, new_cache, heat, buf
+
+        def _prefill_entry(p, c, buf, didx, drows, t, slot, last, **kw):
+            buf = _install_rows(buf, didx, drows)
+            table = jax.lax.dynamic_slice_in_dim(buf, slot, 1, 0)
+            logits, new_cache = prefill_step(
+                p, cfg, c, t, table, layout, chunk=256, last_index=last,
+                **kw)
+            return logits, new_cache, buf
+
+        self._decode = jax.jit(_decode_entry)
+        self._prefill = jax.jit(_prefill_entry)
 
     # ----------------------------------------------------------------- admin
     def _span(self, name: str, tid: str = "engine"):
@@ -321,18 +347,47 @@ class ServingEngine:
                 self._run_prefill(seq)
             self.stats.prefills += 1
 
+    def _slot_pids(self) -> list:
+        """Current slot -> pid assignment (None for empty slots)."""
+        sp: list = [None] * self.max_batch
+        for slot, seq in self.active.items():
+            sp[slot] = seq.pid
+        return sp
+
+    def _sync_tables(self, slot_pids) -> tuple:
+        """Dirty-row sync of the device-resident block tables.
+
+        Returns ``(didx, drows, active)`` with the dirty set bucket-padded
+        to a power of two (pad idx = -1, dropped by the install scatter) so
+        the fused entries compile once per bucket, not once per dirty
+        count."""
+        idx, rows, active = self._tables.sync(self.mm, slot_pids)
+        K = len(idx)
+        bucket = 1 << (K - 1).bit_length() if K else 0
+        if bucket > K:
+            idx = np.concatenate(
+                [idx, np.full(bucket - K, -1, np.int32)])
+            rows = np.concatenate(
+                [rows, np.zeros((bucket - K, self.layout.max_blocks),
+                                np.int32)])
+        return jnp.asarray(idx), jnp.asarray(rows), active
+
     def _run_prefill(self, seq: SeqState) -> None:
         bt = self.layout.block_tokens
         prompt = np.asarray(seq.req.prompt, np.int32)
         S_pad = self._blocks_needed(len(prompt)) * bt
         toks = np.zeros((1, S_pad), np.int32)
         toks[0, :len(prompt)] = prompt
-        table = self.mm.block_table(seq.pid, self.layout.max_blocks)[None]
+        # the new pid's row arrives as a dirty-row upload; the prefill jit
+        # installs it and slices the slot's row from the persistent buffer
+        didx, drows, _active = self._sync_tables(self._slot_pids())
         kw = self._modality_kwargs(1, S_pad)
         sub_cache = jax.tree.map(lambda c: c, self.cache)  # pools are shared
-        logits, new_cache = self._prefill(
-            self.params, self._slot_cache_view(seq.slot), jnp.asarray(toks),
-            jnp.asarray(table), jnp.asarray([len(prompt) - 1], jnp.int32),
+        logits, new_cache, self._table_buf = self._prefill(
+            self.params, self._slot_cache_view(seq.slot), self._table_buf,
+            didx, drows, jnp.asarray(toks),
+            jnp.asarray(seq.slot, jnp.int32),
+            jnp.asarray([len(prompt) - 1], jnp.int32),
             **kw)
         self._merge_slot_cache(seq.slot, new_cache)
         self.mm.record_access(seq.pid,
@@ -559,7 +614,6 @@ class ServingEngine:
         B, MB = self.max_batch, self.layout.max_blocks
         tokens = np.zeros(B, np.int32)
         lengths = np.zeros(B, np.int32)
-        tables = np.full((B, MB), -1, np.int32)
         # page-fault path: each active slot's new token may cross a block
         # boundary; the batched route resolves the whole step in one policy
         # invocation
@@ -570,12 +624,13 @@ class ServingEngine:
         # Flush demotion/promotion/compaction copies BEFORE the kernel
         # touches the pool: a fault above may have freed block A and
         # re-allocated it — the copy must land before decode overwrites A —
-        # and BEFORE capturing tables, which a later slot's reclaim or
-        # compaction may have remapped.  (Applies to the untiered pool too:
-        # compaction moves used to land at end-of-step, after the kernel had
-        # already read through the remapped tables.)
+        # and BEFORE syncing the device tables, which a later slot's reclaim
+        # or compaction may have remapped (the move bumps table_version, so
+        # the sync below re-uploads the row; syncing earlier would publish
+        # the pre-move mapping to the device for this step).
         self._apply_pending_moves()
         skipped: set[int] = set()     # slots that must not advance this step
+        slot_pids: list = [None] * B
         for slot, seq in self.active.items():
             if slot not in ok_slots:
                 # pool truly exhausted for this slot (retry next step) or it
@@ -584,14 +639,19 @@ class ServingEngine:
                 continue
             tokens[slot] = seq.generated[-1]
             lengths[slot] = seq.length
-            tables[slot] = self.mm.block_table(seq.pid, MB)
+            slot_pids[slot] = seq.pid
+        # dirty-row upload: only rows whose table_version moved since the
+        # last sync cross to the device; skipped slots sync as vacant so
+        # their persistent rows cannot alias live pool blocks
+        didx, drows, active = self._sync_tables(slot_pids)
         pos3d = None
         if self.cfg.vlm_patches:
             pos3d = jnp.asarray(
                 np.tile(lengths.astype(np.float32)[None, :, None], (3, 1, 1)))
-        logits, self.cache, heat = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(lengths), jnp.asarray(tables), pos3d)
+        logits, self.cache, heat, self._table_buf = self._decode(
+            self.params, self.cache, self._table_buf, didx, drows,
+            jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(active), pos3d)
         logits_np = np.asarray(logits)
         heat_np = np.asarray(heat)
         for slot, seq in list(self.active.items()):
@@ -667,7 +727,10 @@ class ServingEngine:
             if steps >= max_steps:
                 break
         out = {"engine": self.stats.snapshot(), "mm": self.mm.stats.snapshot(),
-               "huge_fraction": self.mm.hugepage_block_fraction()}
+               "huge_fraction": self.mm.hugepage_block_fraction(),
+               "tables": {"syncs": self._tables.syncs,
+                          "synced_rows": self._tables.synced_rows,
+                          "blank_rows": self._tables.blank_rows}}
         if isinstance(self.mm, TieredMemoryManager):
             out["tier"] = self.mm.tier_snapshot()
         if self.khugepaged is not None:

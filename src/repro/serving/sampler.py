@@ -17,5 +17,12 @@ class Sampler:
         z = logits / temperature
         z -= z.max()
         p = np.exp(z)
-        p /= p.sum()
+        s = p.sum()
+        # Degenerate distributions: all logits -inf (z.max() is -inf so p is
+        # all-NaN), a NaN logit poisoning the row, or a sum that under/over-
+        # flows.  rng.choice would raise (or worse, sample from garbage);
+        # deterministic argmax is the only defensible answer.
+        if not np.isfinite(s) or s <= 0.0 or not np.all(np.isfinite(p)):
+            return int(np.argmax(np.nan_to_num(logits, nan=-np.inf)))
+        p /= s
         return int(self.rng.choice(vocab, p=p))

@@ -1,0 +1,92 @@
+"""Device-resident block tables: the decode step's management plane on-device.
+
+Before this module the engine re-captured a fresh ``[B, max_blocks]`` block
+table from :meth:`MemoryManager.block_table` every step for every occupied
+slot — O(B * max_blocks) host work plus a full-table host->device upload per
+dispatch, despite the tables being maintained INCREMENTALLY on host (PR 2)
+and changing only when a fault installs, compaction/migration moves, or an
+unmap clears a span.
+
+:class:`DeviceBlockTables` keeps the authoritative decode-time table as a
+persistent device buffer and uploads only DIRTY ROWS.  Staleness is decided
+by the per-process ``table_version`` generation counter
+(:meth:`MemoryManager.table_version`), which ``core.mm`` bumps on every span
+write or unmap — including tier-migration re-placements via ``_note_mapped``
+— so a same-step migration can never publish a stale device row: the move
+bumps the version, the row re-uploads before the decode dispatch.
+
+The sync does NOT touch the device buffer itself; it returns the dirty row
+indices/payloads for the engine to fold into its fused (table-install +
+decode) jit entry, so the whole step stays one dispatch.  Rows of freed
+slots are re-blanked to ``-1`` and the slot's active bit drops — the
+explicit active-row mask is what makes a PERSISTENT table safe: a vacated
+slot's old row otherwise still holds live-looking physical indices (the
+PR 1 scatter-to-block-0 bug class, one level up).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class DeviceBlockTables:
+    """Host mirror + dirty-row change tracking for a ``[B, max_blocks]``
+    device-resident block-table buffer owned by the serving engine.
+
+    The engine calls :meth:`sync` once per decode step with the current
+    slot->pid assignment; the returned ``(dirty_idx, dirty_rows, active)``
+    feed the fused decode dispatch.  ``uploads``/``synced_rows`` count the
+    dirty-row traffic for the bench's crossings-per-step lane."""
+
+    def __init__(self, batch_size: int, max_blocks: int) -> None:
+        self.B = batch_size
+        self.MB = max_blocks
+        self.host = np.full((batch_size, max_blocks), -1, dtype=np.int32)
+        # (pid, table_version) recorded at last upload, per slot; None for
+        # a slot whose device row is blank (-1s)
+        self._slot_key: list[tuple[int, int] | None] = [None] * batch_size
+        self.syncs = 0          # sync() calls
+        self.synced_rows = 0    # dirty rows shipped (the only table upload)
+        self.blank_rows = 0     # rows re-blanked on slot free
+
+    def sync(self, mm, slot_pids) -> tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
+        """Refresh the host mirror against ``mm`` for ``slot_pids`` (a
+        length-B sequence of pid or ``None`` for an empty slot).
+
+        Returns ``(dirty_idx int32[K], dirty_rows int32[K, MB], active
+        bool[B])`` — K == 0 when nothing changed.  The caller scatters the
+        dirty rows into its persistent device buffer (inside the fused
+        decode dispatch) and must treat ``active`` as authoritative: rows
+        of inactive slots may still hold stale physical indices on device
+        until their next reuse."""
+        dirty: list[int] = []
+        active = np.zeros(self.B, dtype=bool)
+        for slot, pid in enumerate(slot_pids):
+            if pid is None:
+                if self._slot_key[slot] is not None:
+                    self._slot_key[slot] = None
+                    self.host[slot, :] = -1
+                    self.blank_rows += 1
+                    dirty.append(slot)
+                continue
+            active[slot] = True
+            key = (pid, mm.table_version(pid))
+            if self._slot_key[slot] != key:
+                self.host[slot, :] = mm.block_table(pid, self.MB)
+                self._slot_key[slot] = key
+                dirty.append(slot)
+        self.syncs += 1
+        self.synced_rows += len(dirty)
+        idx = np.asarray(dirty, dtype=np.int32)
+        return idx, self.host[idx], active
+
+    def invalidate(self, slot: int | None = None) -> None:
+        """Force re-upload of one slot's row (or all rows) on next sync —
+        used when the device buffer itself was rebuilt (bucket change)."""
+        if slot is None:
+            self._slot_key = [None] * self.B
+            self.host[:, :] = -1
+        else:
+            self._slot_key[slot] = None
+            self.host[slot, :] = -1

@@ -479,6 +479,37 @@ class TestPredicatedUnrollBoundary:
             assert host == list(JitPolicy(prog, maps).run_batch(mat)), \
                 f"{prog.name}: interpreter != JIT at the boundary"
 
+    def test_fused_scan_executor_at_unroll_boundary(self):
+        """The lax.scan segment executor alongside the chained plan: both
+        sides of the 512/514 boundary factor their unrolled counting loop
+        into a scanned copy body whose traced length fits ONE fused
+        dispatch — while ``num_segments`` still reports the chained plan the
+        guards above pin — and decisions stay bit-identical to the
+        interpreter."""
+        from repro.core.hooks import PRED_MAX_UNROLL
+        maps = MapRegistry()
+        rng = np.random.default_rng(13)
+        mat = _random_ctx_batch(rng, 8)
+        for pad, want_segments in ((0, 1), (2, 2)):
+            prog = self._boundary_program(pad=pad)
+            pol = PredicatedPolicy(prog, maps, seg_limit=PRED_MAX_UNROLL)
+            assert pol.num_segments == want_segments, \
+                f"{prog.name}: chained plan changed at the boundary"
+            assert pol.fused and pol.scan_stages >= 1, \
+                f"{prog.name}: loop copies not factored into a lax.scan"
+            assert pol.traced_len < pol.unrolled_len, \
+                f"{prog.name}: scan factoring did not compress the trace"
+            assert pol.dispatches == 1, \
+                f"{prog.name}: fused executor must cost one dispatch"
+            vm = PolicyVM(prog, maps)
+            host = [vm.run(row).ret for row in mat]
+            before = pol.total_dispatches
+            out = pol.run_batch(mat)
+            assert host == list(out), \
+                f"{prog.name}: fused scan executor changed decisions"
+            assert pol.total_dispatches == before + 1, \
+                f"{prog.name}: fused run_batch issued extra dispatches"
+
 
 class TestTierCtxCache:
     def _mk(self):

@@ -43,6 +43,7 @@ from repro.core import (HWSpec, MemoryManager, MMOutOfMemory, Profile,
 from repro.core.buddy import order_blocks
 from repro.core.context import FaultKind
 from repro.core.hooks import HOOK_FAULT
+from repro.serving.tables import DeviceBlockTables
 
 SEEDS = [0, 1, 2]
 if os.environ.get("DIFF_SEEDS"):
@@ -165,6 +166,16 @@ class Replica:
         self.vma: dict[int, int] = {}
         self._stamp = 0
         self.relief_events = 0
+        # table-management axis: a device-resident mirror (dirty-row
+        # protocol, exactly what the serving engine runs) maintained
+        # alongside the host-recapture reference and compared after every
+        # step — see _check_device_tables
+        self._tbl_slots = 10            # > max live pids in make_script
+        self.slots: dict[int, int] = {}
+        self._free_slots = list(range(self._tbl_slots))
+        self.dtables = DeviceBlockTables(self._tbl_slots, VMA_MAX)
+        self.table_buf = np.full((self._tbl_slots, VMA_MAX), -1, np.int32)
+        self.move_decode_steps = 0      # steps with migration AND decode
 
     # ---- faults with deterministic OOM relief ----
     def _relieve(self, need: int) -> None:
@@ -196,6 +207,7 @@ class Replica:
     def admit(self, pid: int, vma: int, prompt: int) -> None:
         self.mm.create_process(pid, app="app", vma_blocks=vma)
         self.vma[pid] = vma
+        self.slots[pid] = self._free_slots.pop(0)
         if self.batched:
             self._with_relief(
                 lambda: self.mm.fault_range(pid, 0, prompt), prompt)
@@ -227,6 +239,8 @@ class Replica:
     def complete(self, pid: int) -> None:
         self.mm.free_process(pid)
         self.vma.pop(pid)
+        self._free_slots.append(self.slots.pop(pid))
+        self._free_slots.sort()
         self.expected = {k: v for k, v in self.expected.items()
                          if k[0] != pid}
 
@@ -235,7 +249,9 @@ class Replica:
         """Apply this step's drained moves (sequentially — the engine's
         chain-safe batching is equivalent by construction), then write a
         fresh sentinel into every newly mapped block."""
-        for s, d, o in self.mm.drain_moves():
+        moves = self.mm.drain_moves()
+        self._last_moves = len(moves)
+        for s, d, o in moves:
             n = order_blocks(o)
             self.pool[d:d + n] = self.pool[s:s + n]
         for pid in sorted(self.mm.procs):
@@ -302,6 +318,27 @@ class Replica:
             assert self.pool[table[lg]] == val, (
                 f"{ctx}: KV bytes lost for pid {pid} block {lg} "
                 f"(expected {val}, found {self.pool[table[lg]]})")
+        # 4) table-management axis: the device-resident mirror (dirty-row
+        #    uploads keyed on table_version, migrations included) must stay
+        #    BIT-IDENTICAL to a from-scratch host recapture after every step
+        self._check_device_tables(ctx)
+
+    def _check_device_tables(self, ctx: str) -> None:
+        slot_pids: list = [None] * self._tbl_slots
+        for pid, slot in self.slots.items():
+            slot_pids[slot] = pid
+        didx, drows, active = self.dtables.sync(self.mm, slot_pids)
+        self.table_buf[didx] = drows          # the engine's in-jit scatter
+        for pid, slot in self.slots.items():
+            assert active[slot], f"{ctx}: live pid {pid} not active"
+            np.testing.assert_array_equal(
+                self.table_buf[slot], self.mm.block_table(pid, VMA_MAX),
+                err_msg=f"{ctx}: device-resident row for pid {pid} diverged "
+                        f"from host recapture (stale dirty-row protocol)")
+        for slot in self._free_slots:
+            assert not active[slot], f"{ctx}: vacated slot {slot} active"
+            assert (self.table_buf[slot] == -1).all(), \
+                f"{ctx}: vacated slot {slot} still holds physical indices"
 
     def state(self):
         """Cross-replica comparable summary."""
@@ -337,6 +374,11 @@ def run_step(r: Replica, s: Step) -> None:
         r.mm.promotion_scan()
     r.mm.tick()
     r.flush_and_write()
+    if r._last_moves and s.decodes:
+        # satellite case: migration and decode landed in the SAME step — the
+        # device-resident path must re-upload the moved rows (checked by
+        # _check_device_tables right after this step)
+        r.move_decode_steps += 1
     if r.batched:
         # every fault invocation this step was a batch one (never the scalar
         # run() entry), and admissions + decode each used at most one batch
@@ -444,6 +486,10 @@ def test_tier_topologies_complete_same_workload(seed):
     # tiered replicas absorb pressure by demotion, not by dropping KV
     assert reps["2tier"].mm.stats.demotions > 0
     assert reps["4tier"].mm.stats.demotions > 0
+    # and at least one step combined migration with decode, so the per-step
+    # mirror check covered the move -> dirty-row -> re-upload ordering
+    assert any(r.move_decode_steps > 0 for r in reps.values()), \
+        "no step combined migration with decode on any topology"
 
 
 # ------------------------------------------------------------- chaos lane
@@ -498,6 +544,11 @@ def test_chaos_scalar_vs_batched(topology, seed):
     # the schedule really did inject (rates are sized so every site fires)
     inj = batched.mm.injector
     assert sum(inj.fired.values()) > 0, "chaos lane never injected anything"
+    # the device-resident-table hazard actually occurred under chaos: at
+    # least one step migrated KV AND decoded, and the per-step mirror check
+    # proved the moved rows were re-uploaded before the (modeled) dispatch
+    assert batched.move_decode_steps > 0, \
+        "no step combined migration with decode — hazard never exercised"
     assert inj.fired == scalar.mm.injector.fired, \
         "pure-schedule contract broken: routes saw different injections"
     # KV bit-identity vs the failure-free run: every block BOTH lanes hold
