@@ -40,6 +40,7 @@ bench:
 # policy and batch size) — the perf trajectory tracked from PR 2 onward
 bench-json:
 	$(PY) -m benchmarks.hotpath_bench --json BENCH_hotpath.json
+	$(PY) -m benchmarks.prefix_bench --json BENCH_prefix.json
 
 # CI perf gates: zero-cost claims (telemetry off / resilience disarmed
 # within 2% of baseline) + the one-dispatch hot path (batched ebpf@b16
@@ -48,6 +49,7 @@ bench-json:
 perf-gate:
 	$(PY) -m benchmarks.telemetry_gate
 	$(PY) -m benchmarks.hotpath_gate
+	$(PY) -m benchmarks.prefix_gate
 
 # telemetry demo: serve a tiered smoke workload with tracing on and write
 # out/trace_demo.json (load in ui.perfetto.dev) + a Prometheus-style

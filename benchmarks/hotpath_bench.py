@@ -217,6 +217,13 @@ class _TablePlane:
             lambda buf, idx, rows: buf.at[
                 jnp.where(idx >= 0, idx, buf.shape[0])
             ].set(rows, mode="drop"))
+        # append-only deltas arrive as (row, col, value) triples; pad rows
+        # of -1 route out of bounds and drop
+        self._install_cells = jax.jit(
+            lambda buf, tri: buf.at[
+                jnp.where(tri[:, 0] >= 0, tri[:, 0], buf.shape[0]),
+                tri[:, 1]
+            ].set(tri[:, 2], mode="drop"))
 
     def _put(self, arr):
         self.transfers += 1
@@ -229,17 +236,28 @@ class _TablePlane:
             self.buf = self._put(stack)
             self.rows += len(pids)
             return
-        didx, drows, _active = self.dbt.sync(mm, pids)
-        k = len(didx)
-        if k == 0:
+        didx, drows, _active, tri = self.dbt.sync(mm, pids)
+        k, t = len(didx), len(tri)
+        if k == 0 and t == 0:
             return                      # steady state: nothing crosses
-        bucket = 1 << (k - 1).bit_length()
-        if bucket > k:                  # pad so jit compiles once per bucket
-            didx = np.concatenate([didx, np.full(bucket - k, -1, np.int32)])
-            drows = np.concatenate(
-                [drows, np.zeros((bucket - k, self.vma_blocks), np.int32)])
-        self.buf = self._install(self.buf, self._put(didx), self._put(drows))
-        self.rows += k
+        if k:
+            bucket = 1 << (k - 1).bit_length()
+            if bucket > k:              # pad so jit compiles once per bucket
+                didx = np.concatenate(
+                    [didx, np.full(bucket - k, -1, np.int32)])
+                drows = np.concatenate(
+                    [drows, np.zeros((bucket - k, self.vma_blocks),
+                                     np.int32)])
+            self.buf = self._install(self.buf, self._put(didx),
+                                     self._put(drows))
+            self.rows += k
+        if t:
+            bucket = 1 << (t - 1).bit_length()
+            if bucket > t:
+                tri = np.concatenate(
+                    [tri, np.full((bucket - t, 3), -1, np.int32)])
+            self.buf = self._install_cells(self.buf, self._put(tri))
+            self.rows += len(np.unique(tri[:t, 0]))   # row-equivalents
 
 
 def _drive(mm: MemoryManager, pids: list[int], start: int, steps: int,

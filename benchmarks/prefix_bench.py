@@ -1,0 +1,197 @@
+"""Prefix-cache benchmark: cache-on vs cache-off serving at configurable
+shared-prefix traffic shares.
+
+Serving traffic is dominated by shared prefixes (system prompts, few-shot
+preambles); the cross-request KV prefix cache maps cached prefix blocks
+read-only into new sequences and prefills only the uncached suffix.  This
+bench drives the REAL engine (model forward included — the prefill savings
+live in the kernel, not the bookkeeping) through seeded request streams
+whose shared-prefix share sweeps 0% / 50% / 90%, once with the cache on
+and once off, and reports per cell:
+
+  * steps/s and requests/s over the STEADY window — each cell runs one
+    untimed pass of the identical-shape traffic first, so every jit
+    specialization (full prefill, suffix prefill, decode, the dirty-row /
+    delta-triple table buckets, the HOOK_EVICT scan buckets) compiles
+    outside the clock and the cache enters the timed pass warm;
+  * prefill tokens actually run through the kernel (the savings live
+    here: a hit skips the shared span and prefills the suffix only);
+  * admission hit rate, tokens skipped, blocks reused, evictions.
+
+The summary derives, per share, the cache-on/off throughput ratio and the
+prefill-token reduction — the acceptance numbers (reduction >= 1.5x and
+strictly higher steps/s at >= 50% share) the CI gate
+(``benchmarks.prefix_gate``) holds.
+
+Run:  PYTHONPATH=src python -m benchmarks.prefix_bench [--json FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+SHARES = (0.0, 0.5, 0.9)
+N_REQ = 16
+PREFIX_TOKENS = 124          # the shared "system prompt"
+TAIL_TOKENS = 4             # unique per-request tail
+MAX_NEW = 2
+CACHE_BLOCKS = 192
+PREFIX_SEED = 7             # the system prompt is FIXED across passes
+PASSES = 3                  # timed passes per cell; best-of wins (host jitter)
+
+
+def make_traffic(seed: int, vocab: int, share: float, n_req: int = N_REQ,
+                 rid_base: int = 0, max_new: int = MAX_NEW):
+    """Seeded request stream: ``share`` of the requests open with one
+    common prefix (fixed tokens — the same system prompt in every pass),
+    the rest are fully random prompts of the same total length; tails and
+    uniques vary with ``seed``."""
+    from repro.serving import Request
+    prefix = np.random.default_rng(PREFIX_SEED).integers(
+        1, vocab, PREFIX_TOKENS).tolist()
+    rng = np.random.default_rng(seed)
+    n_shared = int(round(share * n_req))
+    kinds = np.array([True] * n_shared + [False] * (n_req - n_shared))
+    rng.shuffle(kinds)
+    reqs = []
+    for r, shared in enumerate(kinds):
+        if shared:
+            prompt = prefix + rng.integers(1, vocab, TAIL_TOKENS).tolist()
+        else:
+            prompt = rng.integers(1, vocab,
+                                  PREFIX_TOKENS + TAIL_TOKENS).tolist()
+        reqs.append(Request(rid=rid_base + r, prompt=prompt,
+                            max_new_tokens=max_new, app="chat"))
+    return reqs
+
+
+def _setup():
+    from repro.configs.base import get_smoke_config
+    from repro.models import PagedLayout, materialize, model_spec
+    cfg = get_smoke_config("deepseek_7b")
+    params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
+    layout = PagedLayout(num_blocks=512, block_tokens=4, max_blocks=40)
+    return cfg, params, layout
+
+
+def build_engine(setup, *, cache_on: bool):
+    from repro.serving import ServingEngine
+    cfg, params, layout = setup
+    return ServingEngine(cfg, params, layout, max_batch=4, policy="never",
+                         prefix_cache=CACHE_BLOCKS if cache_on else False)
+
+
+def run_pass(eng, *, share: float, seed: int, rid_base: int) -> dict:
+    """One measured pass of the stream through an existing engine.  The
+    caller decides whether it counts (pass 0 of a cell is the warmer)."""
+    cfg = eng.cfg
+    s0 = eng.stats.snapshot()
+    pc0 = eng.prefix_cache.snapshot() if eng.prefix_cache else {}
+    for req in make_traffic(seed, cfg.vocab, share, rid_base=rid_base):
+        eng.submit(req)
+    t0 = time.perf_counter()
+    out = eng.run(max_steps=5000)
+    wall = time.perf_counter() - t0
+    s1 = out["engine"]
+    assert s1["completed"] - s0["completed"] == N_REQ, "stream did not drain"
+    steps = s1["steps"] - s0["steps"]
+    res = {
+        "requests": N_REQ,
+        "steps": steps,
+        "steps_per_s": steps / wall,
+        "req_per_s": N_REQ / wall,
+        "wall_s": wall,
+        "prefill_tokens": s1["prefill_tokens"] - s0["prefill_tokens"],
+    }
+    if eng.prefix_cache is not None:
+        pc1 = out["prefix_cache"]
+        for k in ("hits", "misses", "tokens_skipped", "blocks_reused",
+                  "inserted_blocks", "evict_drops", "evict_demotions"):
+            res[k] = pc1[k] - pc0.get(k, 0)
+        lk = pc1["lookups"] - pc0.get("lookups", 0)
+        res["hit_rate_milli"] = res["hits"] * 1000 // max(1, lk)
+    return res
+
+
+def run_cell(setup, *, cache_on: bool, share: float, seed: int = 0,
+             passes: int = PASSES) -> dict:
+    eng = build_engine(setup, cache_on=cache_on)
+    run_pass(eng, share=share, seed=seed, rid_base=10_000)   # warm, untimed
+    cell = None
+    for p in range(passes):
+        r = run_pass(eng, share=share, seed=seed + 1 + p,
+                     rid_base=(p + 1) * 1000)
+        if cell is None or r["steps_per_s"] > cell["steps_per_s"]:
+            cell = r                       # best-of: wall jitter, not work,
+    cell["share"] = share                  # varies between passes
+    cell["cache"] = "on" if cache_on else "off"
+    return cell
+
+
+def summarize(cells: list[dict]) -> dict:
+    by = {(c["share"], c["cache"]): c for c in cells}
+    summary = {}
+    for share in sorted({c["share"] for c in cells}):
+        on, off = by[(share, "on")], by[(share, "off")]
+        summary[f"share_{int(share * 100)}"] = {
+            "steps_per_s_ratio": on["steps_per_s"] / off["steps_per_s"],
+            "prefill_token_reduction":
+                off["prefill_tokens"] / max(1, on["prefill_tokens"]),
+            "hit_rate_milli": on.get("hit_rate_milli", 0),
+            "tokens_skipped": on.get("tokens_skipped", 0),
+        }
+    return summary
+
+
+def run_all(shares=SHARES, seed: int = 0) -> dict:
+    setup = _setup()
+    cells = []
+    for share in shares:
+        for cache_on in (False, True):
+            cells.append(run_cell(setup, cache_on=cache_on, share=share,
+                                  seed=seed))
+    return {"bench": "prefix", "cells": cells, "summary": summarize(cells)}
+
+
+def main(smoke: bool = False):
+    doc = run_all(shares=(0.5,) if smoke else SHARES)
+    lines = []
+    for c in doc["cells"]:
+        lines.append(
+            f"prefix_s{int(c['share'] * 100)}_{c['cache']},"
+            f"{1e6 / c['steps_per_s']:.1f},"
+            f"steps_per_s={c['steps_per_s']:.2f};"
+            f"prefill_tokens={c['prefill_tokens']};"
+            f"hits={c.get('hits', 0)}")
+    for name, s in doc["summary"].items():
+        lines.append(f"prefix_{name}_summary,0,"
+                     f"ratio={s['steps_per_s_ratio']:.3f};"
+                     f"reduction={s['prefill_token_reduction']:.2f};"
+                     f"hit_rate_milli={s['hit_rate_milli']}")
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the full result document to FILE")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single 50%% cell pair only")
+    args = ap.parse_args()
+    if args.json:
+        doc = run_all(shares=(0.5,) if args.smoke else SHARES)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {args.json}")
+        for name, s in doc["summary"].items():
+            print(f"  {name}: steps/s ratio {s['steps_per_s_ratio']:.3f}, "
+                  f"prefill reduction {s['prefill_token_reduction']:.2f}x, "
+                  f"hit rate {s['hit_rate_milli'] / 10:.1f}%")
+    else:
+        for line in main(smoke=args.smoke):
+            print(line)

@@ -1,0 +1,95 @@
+"""CI perf gate: the cross-request KV prefix cache must pay for itself.
+
+Holds the acceptance numbers of the prefix-cache PR at 50% shared-prefix
+traffic — the break-even point the design targets:
+
+- ``prefill_token_reduction >= 1.5`` — tokens actually run through the
+  prefill kernel with the cache ON must be at most 2/3 of the cache-OFF
+  count (a hit skips the shared span; only the suffix prefills);
+- admission hit rate stays >= 45% AND does not regress against the
+  committed ``BENCH_prefix.json`` — the warm shared chain must keep
+  hitting (a doorkeeper or eviction regression that flushes the hot
+  prefix trips this long before the wall-clock does);
+- cache-on steps/s STRICTLY exceeds cache-off — the bookkeeping
+  (hashing, pinning, CoW, scans) must cost less than the prefill work it
+  saves.
+
+Both lanes run on the same engines across attempts (pass 0 warms every
+jit bucket and the cache itself outside the clock).  Host jitter on
+shared CI runners can flip a marginal wall-clock run, so the throughput
+ratio takes the BEST of up to three attempts; the token-reduction and
+hit-rate invariants are jitter-free and must hold on EVERY attempt.
+
+Run:  PYTHONPATH=src python -m benchmarks.prefix_gate [BASELINE_JSON]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from benchmarks.prefix_bench import _setup, build_engine, run_pass
+
+SHARE = 0.5
+ATTEMPTS = 3
+REDUCTION_MIN = 1.5
+RATIO_MIN = 1.0                 # "strictly higher" — any margin passes
+HIT_RATE_MIN_MILLI = 450
+
+
+def _baseline_hit_rate(path: pathlib.Path) -> int:
+    """Committed hit rate (milli) for the 50% cell; 0 if no artifact."""
+    if not path.exists():
+        return 0
+    with open(path) as f:
+        doc = json.load(f)
+    cell = doc["summary"].get(f"share_{int(SHARE * 100)}")
+    return int(cell["hit_rate_milli"]) if cell else 0
+
+
+def main(argv: list[str]) -> int:
+    path = pathlib.Path(argv[0]) if argv else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_prefix.json"
+    hit_floor = max(HIT_RATE_MIN_MILLI, _baseline_hit_rate(path))
+    setup = _setup()
+    off = build_engine(setup, cache_on=False)
+    on = build_engine(setup, cache_on=True)
+    for eng in (on, off):       # warm: compiles + cache admission, untimed
+        run_pass(eng, share=SHARE, seed=0, rid_base=90_000)
+    best = 0.0
+    for attempt in range(1, ATTEMPTS + 1):
+        r_off = run_pass(off, share=SHARE, seed=attempt,
+                         rid_base=attempt * 1000)
+        r_on = run_pass(on, share=SHARE, seed=attempt,
+                        rid_base=attempt * 1000)
+        ratio = r_on["steps_per_s"] / r_off["steps_per_s"]
+        reduction = r_off["prefill_tokens"] / max(1, r_on["prefill_tokens"])
+        hit_rate = r_on["hit_rate_milli"]
+        best = max(best, ratio)
+        print(f"attempt {attempt}: on={r_on['steps_per_s']:.1f} "
+              f"off={r_off['steps_per_s']:.1f} steps/s ratio={ratio:.3f} "
+              f"prefill_reduction={reduction:.2f}x "
+              f"hit_rate={hit_rate / 10:.1f}%")
+        if reduction < REDUCTION_MIN:
+            print(f"FAIL: prefill token reduction {reduction:.2f}x < "
+                  f"{REDUCTION_MIN}x — hits are not skipping the shared span")
+            return 1
+        if hit_rate < hit_floor:
+            print(f"FAIL: hit rate {hit_rate / 10:.1f}% < "
+                  f"{hit_floor / 10:.1f}% (committed baseline "
+                  f"{path.name}) — the warm shared chain is not being "
+                  f"found (admission or eviction regression)")
+            return 1
+        if best > RATIO_MIN:
+            print(f"PASS: cache-on strictly faster at {int(SHARE * 100)}% "
+                  f"shared-prefix traffic (best ratio {best:.3f}), "
+                  f"reduction {reduction:.2f}x")
+            return 0
+    print(f"FAIL: best steps/s ratio {best:.3f} <= {RATIO_MIN} on every "
+          f"attempt — the cache no longer pays for its bookkeeping")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -12,6 +12,9 @@ Sections:
   hotpath_*         per-engine-step management cost: batched fault path
                     (one policy invocation per step) vs the pre-PR scalar
                     path, per policy and batch size.
+  prefix_*          cross-request KV prefix cache: cache-on vs cache-off
+                    steps/s and prefill tokens at configurable
+                    shared-prefix traffic share.
   vm_*              eBPF-VM interpreter vs XLA-JIT batch execution.
   paged_read_*      multi-size page DMA model (descriptor amortization /
                     effective HBM bandwidth per page size — the TLB-reach
@@ -29,13 +32,14 @@ import traceback
 
 def main() -> None:
     from . import (bench_kernels, bench_vm, capacity_sweep,
-                   fig2_policy_sweep, hotpath_bench)
+                   fig2_policy_sweep, hotpath_bench, prefix_bench)
 
     print("name,us_per_call,derived")
     sections = [
         ("fig2", fig2_policy_sweep.main),
         ("capacity", lambda: capacity_sweep.main(smoke=True)),
         ("hotpath", lambda: hotpath_bench.main(smoke=True)),
+        ("prefix", lambda: prefix_bench.main(smoke=True)),
         ("vm", bench_vm.main),
         ("kernels", bench_kernels.main),
     ]

@@ -47,6 +47,17 @@ ap.add_argument("--tier", default="ebpf-tier",
                 choices=["ebpf-tier", "lru-tier", "never-tier", "heat-tier",
                          "edge-tier", "default"],
                 help="mm_tier hook policy (used when a tier chain is set)")
+ap.add_argument("--prefix-cache", type=int, default=0, metavar="BLOCKS",
+                help="enable the cross-request KV prefix cache with an HBM "
+                     "budget of BLOCKS; requests then share a common system "
+                     "prompt so later admissions hit")
+ap.add_argument("--prefix-share", type=float, default=0.5,
+                help="fraction of requests opening with the shared prefix "
+                     "(with --prefix-cache; default 0.5)")
+ap.add_argument("--evict-policy", default="lru-evict",
+                choices=["lru-evict", "lfu-evict", "ghost-evict", "default"],
+                help="HOOK_EVICT program deciding which cached prefixes to "
+                     "demote/drop (with --prefix-cache)")
 ap.add_argument("--scalar-faults", action="store_true",
                 help="pre-batching fault path: one policy invocation per "
                      "fault instead of one per engine step")
@@ -93,15 +104,25 @@ engine = ServingEngine(cfg, params, layout, max_batch=4, policy=args.policy,
                        batch_faults=not args.scalar_faults,
                        telemetry=telemetry, trace=bool(args.trace),
                        chaos=args.chaos, chaos_rate=args.chaos_rate,
-                       containment=not args.no_containment)
+                       containment=not args.no_containment,
+                       prefix_cache=args.prefix_cache or False,
+                       evict_policy=args.evict_policy)
+if args.prefix_cache:
+    print(f"prefix cache: {args.prefix_cache} HBM blocks, "
+          f"{args.evict_policy}, {args.prefix_share:.0%} shared traffic")
 if args.chaos is not None:
     print(f"chaos armed: seed={args.chaos} rate={args.chaos_rate} "
           f"containment={'off' if args.no_containment else 'on'}")
 rng = np.random.default_rng(0)
+shared_prefix = rng.integers(1, cfg.vocab, 24).tolist()
 for r in range(args.requests):
-    plen = int(rng.integers(16, 48))
+    if args.prefix_cache and rng.random() < args.prefix_share:
+        prompt = shared_prefix + rng.integers(1, cfg.vocab, 8).tolist()
+    else:
+        plen = int(rng.integers(16, 48))
+        prompt = rng.integers(1, cfg.vocab, plen).tolist()
     engine.submit(Request(
-        rid=r, prompt=rng.integers(1, cfg.vocab, plen).tolist(),
+        rid=r, prompt=prompt,
         max_new_tokens=24, app="chat", temperature=0.0))
 
 # With chaos armed (and no trace export pending — poll_events drains the

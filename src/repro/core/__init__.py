@@ -24,13 +24,14 @@ The paper's contribution as a composable library:
 
 from .buddy import BuddyAllocator, BuddyError, BuddyStats, order_blocks
 from .cache import ArtifactCache, artifact_cache
-from .context import (CTX, CTX_LEN, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
-                      POLICY_DETACHED, POLICY_FALLBACK, TIER_DEMOTE,
-                      TIER_KEEP, FaultContext, FaultKind)
+from .context import (CTX, CTX_LEN, EVICT_DROP, FIXED_POINT, MAX_TIERS,
+                      NUM_ORDERS, POLICY_DETACHED, POLICY_FALLBACK,
+                      TIER_DEMOTE, TIER_KEEP, FaultContext, FaultKind)
 from .cost import (CostModel, HWSpec, TierSpec, default_tier_chain,
                    host_dram_tier, make_cost_model, nvme_tier, peer_hbm_tier)
 from .damon import Damon, Region
-from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
+from .hooks import (HOOK_EVICT, HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER,
+                    HookRegistry)
 from .isa import Asm, Insn, Op, Program
 from .jit import JitPolicy, compile_program
 from .khugepaged import Khugepaged, KhugepagedConfig
@@ -42,10 +43,12 @@ from .mm import (FaultResult, MemoryManager, MMError, MMOutOfMemory, MMStats,
 from .predicate import PredicatedPolicy, compile_predicated
 from .profiles import (MAX_PROFILE_REGIONS, REGION_STRIDE, Profile,
                        ProfileRegion, profile_from_heat)
-from .programs import (ebpf_mm_program, never_program, reclaim_lru_program,
-                       thp_always_program, tier_damon_program,
-                       tier_edge_admission_program, tier_heat_band_program,
-                       tier_lru_program, tier_never_program)
+from .programs import (ebpf_mm_program, evict_ghost_program,
+                       evict_lfu_program, evict_lru_program, never_program,
+                       reclaim_lru_program, thp_always_program,
+                       tier_damon_program, tier_edge_admission_program,
+                       tier_heat_band_program, tier_lru_program,
+                       tier_never_program)
 from .tiering import (TIER_HBM, TIER_HOST, TierConfig, TieredMemoryManager)
 from .verifier import VerifierError, verify
 from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,

@@ -101,7 +101,18 @@ class CTX(enum.IntEnum):
     # within-batch grants instead of batch-start buddy state.  Always 0 on the
     # scalar path (a scalar fault has no earlier grants to account for).
     BATCH_RESERVED = 55
-    CTX_LEN = 56             # number of fields; keep last
+    # Prefix-cache candidate state (mm_evict hook only).  The candidate entry
+    # reuses PAGE_TIER / PAGE_AGE / PAGE_HEAT for its tier, ticks since last
+    # hit, and DAMON heat; the columns below carry the cache-specific facts.
+    CACHE_REFCOUNT = 56      # sequences currently borrowing the entry (pinned)
+    CACHE_HITS = 57          # cumulative admissions served by this entry
+    CACHE_BLOCKS = 58        # entry size in base blocks
+    # Cache-global state shared by every row of an evict batch
+    CACHE_GHOST_HITS = 59    # ghost-list hits (re-requested after eviction)
+    CACHE_ENTRIES = 60       # live entries in the cache index
+    CACHE_CAP_BLOCKS = 61    # configured HBM budget for cached prefixes
+    CACHE_USED_BLOCKS = 62   # HBM blocks currently held by cached prefixes
+    CTX_LEN = 63             # number of fields; keep last
 
 
 CTX_LEN = int(CTX.CTX_LEN)
@@ -151,6 +162,13 @@ class FaultContext:
     mig_cum_setup: tuple[int, int, int, int] = (0, 0, 0, 0)
     mig_cum_ns: tuple[int, int, int, int] = (0, 0, 0, 0)
     batch_reserved: int = 0
+    cache_refcount: int = 0
+    cache_hits: int = 0
+    cache_blocks: int = 0
+    cache_ghost_hits: int = 0
+    cache_entries: int = 0
+    cache_cap_blocks: int = 0
+    cache_used_blocks: int = 0
 
     def vector(self) -> np.ndarray:
         v = np.zeros(CTX_LEN, dtype=np.int64)
@@ -190,6 +208,13 @@ class FaultContext:
             self.mig_cum_setup
         v[CTX.MIG_CUM_NS_T0:CTX.MIG_CUM_NS_T0 + MAX_TIERS] = self.mig_cum_ns
         v[CTX.BATCH_RESERVED] = self.batch_reserved
+        v[CTX.CACHE_REFCOUNT] = self.cache_refcount
+        v[CTX.CACHE_HITS] = self.cache_hits
+        v[CTX.CACHE_BLOCKS] = self.cache_blocks
+        v[CTX.CACHE_GHOST_HITS] = self.cache_ghost_hits
+        v[CTX.CACHE_ENTRIES] = self.cache_entries
+        v[CTX.CACHE_CAP_BLOCKS] = self.cache_cap_blocks
+        v[CTX.CACHE_USED_BLOCKS] = self.cache_used_blocks
         return v
 
 
@@ -218,7 +243,10 @@ def fill_system_columns(mat: np.ndarray, *,
                         ntiers: int = 0, tier_free=(0, 0, 0, 0),
                         tier_total=(0, 0, 0, 0),
                         mig_cum_setup=(0, 0, 0, 0),
-                        mig_cum_ns=(0, 0, 0, 0)) -> np.ndarray:
+                        mig_cum_ns=(0, 0, 0, 0),
+                        cache_ghost_hits: int = 0, cache_entries: int = 0,
+                        cache_cap_blocks: int = 0,
+                        cache_used_blocks: int = 0) -> np.ndarray:
     """Broadcast one system-state snapshot into every row of ``mat``.
 
     ``free_blocks``/``frag`` may be shorter than ``NUM_ORDERS`` when the
@@ -249,6 +277,10 @@ def fill_system_columns(mat: np.ndarray, *,
         np.asarray(mig_cum_setup, dtype=np.int64)
     mat[:, CTX.MIG_CUM_NS_T0:CTX.MIG_CUM_NS_T0 + MAX_TIERS] = \
         np.asarray(mig_cum_ns, dtype=np.int64)
+    mat[:, CTX.CACHE_GHOST_HITS] = cache_ghost_hits
+    mat[:, CTX.CACHE_ENTRIES] = cache_entries
+    mat[:, CTX.CACHE_CAP_BLOCKS] = cache_cap_blocks
+    mat[:, CTX.CACHE_USED_BLOCKS] = cache_used_blocks
     return mat
 
 
@@ -270,3 +302,13 @@ POLICY_DETACHED = -2
 # they did before the N-pool generalization (live in HBM / live in host).
 TIER_KEEP = 0
 TIER_DEMOTE = 1
+
+# Return-value convention for evict-hook (mm_evict) programs: the return value
+# is the TARGET TIER the cached prefix entry should live in (its current tier
+# = keep where it is; a slower tier = demote hop-by-hop through the chain) or
+# EVICT_DROP to free the entry's blocks outright.  EVICT_DROP deliberately
+# equals MAX_TIERS: any tier id the topology can't hold already clamps to the
+# slowest live tier downstream, so a drop sentinel one past the last tier is
+# the natural "past the end of the chain" encoding and is always a VALID
+# program return (the supervisor only strikes sub-FALLBACK sentinels).
+EVICT_DROP = MAX_TIERS

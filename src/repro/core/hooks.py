@@ -42,8 +42,9 @@ from .vm import PolicyVM
 HOOK_FAULT = "mm_fault"            # page-size decision on fault (the paper's hook)
 HOOK_RECLAIM = "mm_reclaim"        # victim selection under memory pressure
 HOOK_TIER = "mm_tier"              # page placement for tiering (future work in paper)
+HOOK_EVICT = "mm_evict"            # prefix-cache eviction (Cache-is-King mold)
 
-KNOWN_HOOKS = (HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER)
+KNOWN_HOOKS = (HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HOOK_EVICT)
 HOOK_INDEX = {h: i for i, h in enumerate(KNOWN_HOOKS)}
 
 

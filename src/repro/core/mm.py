@@ -27,7 +27,8 @@ from .context import (CTX, CTX_LEN, MAX_TIERS, NUM_ORDERS, POLICY_DETACHED,
                       fill_system_columns)
 from .cost import CostModel
 from .damon import Damon
-from .hooks import HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HookRegistry
+from .hooks import (HOOK_EVICT, HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER,
+                    HookRegistry)
 from .maps import ArrayMap, MapRegistry
 from .profiles import MAX_PROFILE_REGIONS, Profile
 
@@ -50,6 +51,11 @@ class PageMapping:
     # Tier id in the N-pool chain, 0..MAX_TIERS-1 ordered fastest to slowest
     # (0 = local HBM; 1.. = peer-HBM / host DRAM / NVMe — see core.tiering).
     tier: int = 0
+    # Read-only borrow of a prefix-cache block: the physical page belongs to
+    # the cache (refcounted there), not to this process — frees skip it,
+    # collapse/tier scans leave it alone, and the first write goes through
+    # ``cow_break`` (copy-on-write) instead of mutating the shared page.
+    shared: bool = False
 
 
 @dataclass
@@ -180,6 +186,11 @@ class MemoryManager:
         self._damon_seed = damon_seed
         self._move_log: list[tuple[int, int, int]] = []   # pending device copies
         self._access_tab: tuple[np.ndarray, np.ndarray] | None = None
+        # Physical-placement listeners: callables ``cb(tier, remap)`` invoked
+        # whenever compaction relocates blocks within a tier's pool.  The
+        # prefix cache registers one — its idle (refcount-0) blocks live in
+        # no page table, so the page-table remap loop alone would strand them.
+        self.compaction_listeners: list = []
 
     # ------------------------------------------------------------- userspace
     def load_profile(self, profile: Profile) -> int:
@@ -206,6 +217,9 @@ class MemoryManager:
 
     def attach_tier_program(self, program) -> None:
         self.hooks.attach(HOOK_TIER, program, self.maps)
+
+    def attach_evict_program(self, program) -> None:
+        self.hooks.attach(HOOK_EVICT, program, self.maps)
 
     # ------------------------------------------------------------- processes
     def create_process(self, pid: int, *, app: str | None = None,
@@ -241,12 +255,120 @@ class MemoryManager:
         self._note_unmapped(st, m.logical_start, m.order)
 
     def _free_phys(self, m: PageMapping) -> None:
-        """Release a mapping's physical page into its tier's allocator."""
+        """Release a mapping's physical page into its tier's allocator.
+
+        Shared (prefix-cache-borrowed) pages are NOT freed here: the cache
+        owns the physical blocks and releases them when the entry's refcount
+        drops and the eviction policy says so."""
+        if m.shared:
+            return
         self.buddy.free(m.phys_start)
 
     def _device_index(self, m: PageMapping) -> int:
         """Base-block index of ``m`` in the device-visible (combined) pool."""
         return m.phys_start
+
+    # ------------------------------------------- prefix-cache integration
+    # The cache owns physical blocks OUTSIDE any page table (allocated via
+    # cache_alloc_block, refcounted in serving.prefix_cache); borrowers get
+    # order-0 ``shared=True`` mappings that point at them read-only.
+
+    def cache_alloc_block(self) -> int | None:
+        """Allocate one cache-owned base block in tier 0 (HBM).  Returns the
+        tier-local phys index, or None when the pool can't supply it — cache
+        insertion is opportunistic and must never OOM a live sequence."""
+        try:
+            return self.buddy.alloc(0)
+        except BuddyError:
+            return None
+
+    def cache_free_block(self, tier: int, phys: int) -> None:
+        """Release one cache-owned base block back to ``tier``'s pool."""
+        if tier != 0:
+            raise MMError(f"untiered manager holds no tier-{tier} blocks")
+        self.buddy.free(phys)
+
+    def cache_device_index(self, tier: int, phys: int) -> int:
+        """Combined device index of a cache-owned block (tier-aware in the
+        tiered subclass)."""
+        if tier != 0:
+            raise MMError(f"untiered manager holds no tier-{tier} blocks")
+        return phys
+
+    def migrate_cache_block(self, blk, dst_tier: int) -> bool:
+        """Move one cache-owned block toward ``dst_tier``.  The untiered
+        manager has nowhere to put it — eviction decisions degrade to
+        keep-or-drop (the tiered subclass migrates for real)."""
+        return False
+
+    def map_shared(self, pid: int, logical_start: int,
+                   blocks: list[tuple[int, int]]) -> None:
+        """Install read-only borrows of cache-owned blocks as consecutive
+        order-0 mappings starting at ``logical_start``.  ``blocks`` is
+        ``[(tier, phys), ...]`` in logical order.  No zeroing, no fault
+        accounting — the KV content already exists; this is the page-table
+        surgery of a cache hit."""
+        st = self.procs[pid]
+        for i, (tier, phys) in enumerate(blocks):
+            a = logical_start + i
+            if a in st.mapped:
+                raise MMError(f"pid {pid}: shared map over mapped block {a}")
+            m = PageMapping(logical_start=a, phys_start=phys, order=0,
+                            tier=tier, shared=True)
+            st.page_table[a] = m
+            st.mapped.add(a)
+            self._note_installed(st, m)
+            self.stats.descriptors_touched += 1
+
+    def cow_break(self, pid: int, logical_block: int) -> list[tuple[int, int, int]]:
+        """Copy-on-write barrier: repoint one shared mapping at a freshly
+        allocated private tier-0 page, emitting the block copy on the move
+        list (the existing migration machinery executes it pre-kernel).
+        Returns the emitted moves.  No-op for a non-shared mapping."""
+        st = self.procs[pid]
+        m = st.page_table[logical_block]
+        if not m.shared:
+            return []
+        size = order_blocks(m.order)
+        src_dev = self._device_index(m)
+        phys = None
+        compacted = False
+        while phys is None:
+            try:
+                phys = self.buddy.alloc(m.order)
+            except BuddyError:
+                plan = self.buddy.plan_compaction(m.order)
+                if plan is not None and not compacted:
+                    self._apply_compaction(plan)
+                    compacted = True
+                    continue
+                victim = self._pick_reclaim_victim(exclude=st.pid)
+                raise MMOutOfMemory(
+                    f"pool exhausted on copy-on-write (pid {st.pid})",
+                    victim_pid=victim)
+        src_tier = m.tier
+        m.phys_start = phys
+        m.tier = 0
+        m.shared = False
+        self._note_mapped(st, m)
+        moves = [(src_dev, self._device_index(m), m.order)]
+        self._move_log.extend(moves)
+        if src_tier == 0:
+            self.stats.mgmt_ns += self.cost.compact_ns_per_block() * size
+        else:
+            self.stats.mgmt_ns += int(self.cost.migrate_ns(m.order,
+                                                           src_tier, 0))
+        return moves
+
+    def queue_block_copy(self, src_dev: int, dst_dev: int,
+                         order: int = 0) -> None:
+        """Queue one device block copy on the move list.  Prefix-cache insert
+        copies ride the same pre-kernel flush as migrations/compactions, so
+        the engine's hazard segmentation orders them against any same-drain
+        move that touches the donor block."""
+        self._move_log.append((src_dev, dst_dev, order))
+        self.stats.mgmt_ns += \
+            self.cost.compact_ns_per_block() * order_blocks(order)
 
     # ------------------------------------------------ incremental block table
     def _table(self, st: ProcessState) -> np.ndarray:
@@ -358,6 +480,23 @@ class MemoryManager:
 
     def _default_order(self, fmax: int) -> int:
         return min(2, fmax) if self.default_mode == "thp" else 0
+
+    def system_ctx_columns(self) -> dict:
+        """One system-state snapshot as :func:`fill_system_columns` kwargs —
+        the shared columns of any batched ctx build (the evict scan uses
+        this; the fault/tier builders keep their fused inline versions).
+        The tiered subclass extends it with per-tier pool state and the
+        edge-cost tables."""
+        bstats = self.buddy.stats()
+        return dict(
+            free_blocks=bstats.free_per_order,
+            frag=bstats.frag_index_milli,
+            zero_ns_per_block=self.cost.zero_ns_per_block(),
+            compact_ns_per_block=self.cost.compact_ns_per_block(),
+            descriptor_ns=int(self.cost.hw.descriptor_ns),
+            block_bytes=self.cost.block_bytes,
+            ktime_ns=self.ktime_ns,
+            mem_pressure=bstats.utilization_milli)
 
     def ensure_mapped(self, pid: int, addr: int,
                       kind: FaultKind = FaultKind.FIRST_TOUCH) -> FaultResult | None:
@@ -649,6 +788,8 @@ class MemoryManager:
                 if m.tier == tier and m.phys_start in remap:
                     m.phys_start = remap[m.phys_start]
                     self._note_mapped(st, m)
+        for cb in self.compaction_listeners:
+            cb(tier, remap)
         blocks = sum(order_blocks(o) for _, _, o in plan)
         self.stats.compaction_blocks_moved += blocks
         self.stats.mgmt_ns += self.cost.compact_ns_per_block() * blocks
@@ -682,6 +823,9 @@ class MemoryManager:
             return None   # already backed at >= target order
         if any(m.tier != 0 for m in old):
             return None   # demoted pages must be promoted before collapsing
+        if any(m.shared for m in old):
+            return None   # never collapse through cache-shared pages: the
+            #               big page would alias refcounted cache blocks
         try:
             phys = self.buddy.alloc(to_order)
         except BuddyError:

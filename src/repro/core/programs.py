@@ -28,7 +28,8 @@ per-edge admission control.
 
 from __future__ import annotations
 
-from .context import CTX, FaultKind, POLICY_FALLBACK, TIER_DEMOTE, TIER_KEEP
+from .context import (CTX, EVICT_DROP, FaultKind, POLICY_FALLBACK,
+                      TIER_DEMOTE, TIER_KEEP)
 from .isa import Asm, Program
 from .profiles import MAX_PROFILE_REGIONS, REGION_STRIDE
 from .vm import (HELPER_MIGRATE_COST, HELPER_PROMOTION_COST,
@@ -399,6 +400,124 @@ def tier_edge_admission_program(promote_horizon: int = 4,
     a.mov("r0", "r8")
     a.exit()
     return a.build("tier_edge_admission")
+
+
+def evict_lru_program(min_age_ticks: int = 2) -> Program:
+    """LRU eviction for the mm_evict hook (prefix-cache reclaim).
+
+    Evict ctx rows are cached prefix entries: PAGE_TIER / PAGE_AGE /
+    PAGE_HEAT carry the entry's tier, ticks since its last admission hit and
+    DAMON heat; CACHE_* columns carry refcount/hit/size facts plus the
+    cache-global budget state.  The return value is the TARGET TIER for the
+    entry (its current tier = keep) or EVICT_DROP to free it outright.
+
+    Policy: never touch pinned entries; do nothing while the cache is under
+    its HBM budget; over budget, sink entries idle for ``min_age_ticks``
+    one tier down the chain, dropping only past the end of the chain.
+    """
+    a = Asm()
+    a.ldctx("r1", CTX.CACHE_REFCOUNT)
+    a.jgei("r1", 1, "keep")                  # pinned: borrowers hold it
+    a.ldctx("r2", CTX.CACHE_USED_BLOCKS)
+    a.ldctx("r3", CTX.CACHE_CAP_BLOCKS)
+    a.jle("r2", "r3", "keep")                # under budget: nothing to do
+    a.ldctx("r4", CTX.PAGE_AGE)
+    a.jlti("r4", min_age_ticks, "keep")      # recently hit: protect
+    a.ldctx("r0", CTX.PAGE_TIER)
+    a.addi("r0", 1)                          # one tier down the chain
+    a.ldctx("r5", CTX.NTIERS)
+    a.jlt("r0", "r5", "done")                # still a live tier: demote
+    a.movi("r0", EVICT_DROP)                 # past the chain end: drop
+    a.label("done")
+    a.exit()
+    a.label("keep")
+    a.ldctx("r0", CTX.PAGE_TIER)
+    a.exit()
+    return a.build("evict_lru")
+
+
+def evict_lfu_program(protect_hits: int = 2, min_age_ticks: int = 1) -> Program:
+    """LFU eviction for the mm_evict hook: frequency protects.
+
+    Entries that have served at least ``protect_hits`` admissions stay put
+    (frequently reused system prompts survive bursts of one-off traffic);
+    low-frequency entries idle for ``min_age_ticks`` sink one tier, dropping
+    only off the end of the chain.  Pinned entries and an under-budget cache
+    are untouchable, as in :func:`evict_lru_program`.
+    """
+    a = Asm()
+    a.ldctx("r1", CTX.CACHE_REFCOUNT)
+    a.jgei("r1", 1, "keep")
+    a.ldctx("r2", CTX.CACHE_USED_BLOCKS)
+    a.ldctx("r3", CTX.CACHE_CAP_BLOCKS)
+    a.jle("r2", "r3", "keep")
+    a.ldctx("r4", CTX.CACHE_HITS)
+    a.jgei("r4", protect_hits, "keep")       # proven reuse: protect
+    a.ldctx("r4", CTX.PAGE_AGE)
+    a.jlti("r4", min_age_ticks, "keep")
+    a.ldctx("r0", CTX.PAGE_TIER)
+    a.addi("r0", 1)
+    a.ldctx("r5", CTX.NTIERS)
+    a.jlt("r0", "r5", "done")
+    a.movi("r0", EVICT_DROP)
+    a.label("done")
+    a.exit()
+    a.label("keep")
+    a.ldctx("r0", CTX.PAGE_TIER)
+    a.exit()
+    return a.build("evict_lfu")
+
+
+def evict_ghost_program(retain_milli: int = 150,
+                        min_age_ticks: int = 1) -> Program:
+    """Ghost-hit-rate adaptive eviction (the Cache-is-King feedback loop).
+
+    The cache keeps a ghost list of recently evicted keys; a lookup that
+    would have hit a ghost entry is an eviction the policy got wrong.  The
+    per-entry ghost pressure proxy ``ghost_hits * 1000 / (ghost_hits +
+    live_entries + 1)`` rises when evicted prefixes keep coming back:
+
+      * pressure >= ``retain_milli`` — the policy is over-evicting, so stop
+        destroying state: demote one hop down the tier chain and PARK at the
+        deepest tier instead of dropping (a later hit re-promotes for one
+        link-speed copy instead of a full prefill);
+      * pressure below it — evicted prefixes are not returning, so stale
+        entries are genuinely dead: drop them outright and skip the
+        demotion churn.
+
+    Pinned entries and an under-budget cache are untouchable.
+    """
+    a = Asm()
+    a.ldctx("r1", CTX.CACHE_REFCOUNT)
+    a.jgei("r1", 1, "keep")
+    a.ldctx("r2", CTX.CACHE_USED_BLOCKS)
+    a.ldctx("r3", CTX.CACHE_CAP_BLOCKS)
+    a.jle("r2", "r3", "keep")
+    a.ldctx("r4", CTX.PAGE_AGE)
+    a.jlti("r4", min_age_ticks, "keep")
+    # ghost pressure (milli) = ghost * 1000 / (ghost + entries + 1)
+    a.ldctx("r5", CTX.CACHE_GHOST_HITS)
+    a.mov("r6", "r5")
+    a.muli("r6", 1000)
+    a.ldctx("r7", CTX.CACHE_ENTRIES)
+    a.add("r7", "r5")
+    a.addi("r7", 1)
+    a.div("r6", "r7")
+    a.jgei("r6", retain_milli, "park")
+    a.movi("r0", EVICT_DROP)                 # nothing comes back: drop
+    a.exit()
+    a.label("park")
+    a.ldctx("r0", CTX.PAGE_TIER)
+    a.addi("r0", 1)
+    a.ldctx("r8", CTX.NTIERS)
+    a.jlt("r0", "r8", "done")
+    a.subi("r0", 1)                          # deepest already: stay parked
+    a.label("done")
+    a.exit()
+    a.label("keep")
+    a.ldctx("r0", CTX.PAGE_TIER)
+    a.exit()
+    return a.build("evict_ghost")
 
 
 def reclaim_lru_program() -> Program:

@@ -155,6 +155,10 @@ class TieredMemoryManager(MemoryManager):
         return self._tier_base[m.tier] + m.phys_start
 
     def _free_phys(self, m: PageMapping) -> None:
+        # shared (prefix-cache-borrowed) pages belong to the cache, not the
+        # borrower's page table — same contract as the base manager
+        if m.shared:
+            return
         self.pools[m.tier].free(m.phys_start)
 
     def free_process(self, pid: int) -> None:
@@ -193,6 +197,22 @@ class TieredMemoryManager(MemoryManager):
             free[t] = s.free_blocks
             total[t] = s.total_blocks
         cum_setup, cum_ns = self.cost.migrate_cum_tables()
+        levels = [es.level for es in self.health.edges]
+        if any(levels):
+            # Flap-aware DECISION costs: an edge with a nonzero backoff level
+            # has flapped recently — even while up it is a bad bet, so the
+            # cost the policy sees is inflated by (1 + level) on that edge.
+            # Applied on top of the memoized physical tables (never inside
+            # their memo — the physical accounting in migrate_ns stays
+            # health-independent), rebuilt per call as levels decay.
+            cs = np.asarray(cum_setup, dtype=np.int64)
+            cn = np.asarray(cum_ns, dtype=np.int64)
+            mul = np.ones(cs.size - 1, dtype=np.int64)
+            mul[:len(levels)] += np.asarray(levels, dtype=np.int64)
+            cum_setup = tuple(np.concatenate(
+                [cs[:1], cs[0] + np.cumsum(np.diff(cs) * mul)]).tolist())
+            cum_ns = tuple(np.concatenate(
+                [cn[:1], cn[0] + np.cumsum(np.diff(cn) * mul)]).tolist())
         return dict(ntiers=self.ntiers, tier_free=tuple(free),
                     tier_total=tuple(total), mig_cum_setup=cum_setup,
                     mig_cum_ns=cum_ns)
@@ -367,6 +387,72 @@ class TieredMemoryManager(MemoryManager):
                 else max(0, min(d, last))
                 for (st, m), d in zip(cands, decisions)]
 
+    def system_ctx_columns(self) -> dict:
+        pstats = [p.stats() for p in self.pools]
+        hstats = pstats[TIER_HOST]
+        cols = super().system_ctx_columns()
+        cols.update(
+            tier_free_blocks=hstats.free_blocks,
+            tier_total_blocks=hstats.total_blocks,
+            tier_pressure=hstats.utilization_milli,
+            pcie_ns_per_block=self.cost.pcie_ns_per_block(),
+            migrate_setup_ns=self.cost.migrate_setup_ns(0, 1),
+            migrate_ns_per_block=self.cost.migrate_ns_per_block(0, 1),
+            **self._tier_columns(pstats))
+        return cols
+
+    # ----------------------------------------------- prefix-cache integration
+    def cache_alloc_block(self) -> int | None:
+        return self._alloc_in_tier(0, 0)
+
+    def cache_free_block(self, tier: int, phys: int) -> None:
+        self.pools[tier].free(phys)
+
+    def cache_device_index(self, tier: int, phys: int) -> int:
+        return self._tier_base[tier] + phys
+
+    def migrate_cache_block(self, blk, dst_tier: int) -> bool:
+        """Hop-by-hop migration for one cache-owned base block that lives in
+        NO page table (prefix-cache demotion/promotion).  Same routing rules
+        as :meth:`migrate_page` — nearest tier toward the target with room,
+        quarantined edges hopped over — but the only bookkeeping is the move
+        list, the per-edge cost, and ``blk``'s own (tier, phys).  Entries
+        with live borrowers are never offered here (the evict scan only
+        nominates refcount-0 entries), so no page table needs repointing."""
+        dst_tier = max(0, min(dst_tier, self.ntiers - 1))
+        h = self.health
+        tel = self.telemetry
+        while blk.tier != dst_tier:
+            step = 1 if dst_tier > blk.tier else -1
+            placed = False
+            for t in range(blk.tier + step, dst_tier + step, step):
+                if h.active and not h.path_ok(blk.tier, t, self.ktime_ns):
+                    continue
+                phys = self._alloc_in_tier(t, 0)
+                if phys is None:
+                    continue
+                src_dev = self._tier_base[blk.tier] + blk.phys
+                self._move_log.append((src_dev, self._tier_base[t] + phys, 0))
+                self.pools[blk.tier].free(blk.phys)
+                hop_ns = self.cost.migrate_ns(0, blk.tier, t)
+                self.stats.mgmt_ns += hop_ns
+                if tel is not None and tel.enabled:
+                    tel.observe_migrate(hop_ns)
+                    tel.emit(EV_MIGRATE_HOP, (blk.tier << 8) | t,
+                             self.cost.block_bytes, hop_ns, ts=self.ktime_ns)
+                if t > blk.tier:
+                    self.stats.demotions += 1
+                    self.stats.demotion_blocks += 1
+                else:
+                    self.stats.tier_promotions += 1
+                    self.stats.tier_promotion_blocks += 1
+                blk.tier, blk.phys = t, phys
+                placed = True
+                break
+            if not placed:
+                return False
+        return True
+
     # -------------------------------------------------------------- migration
     def _alloc_in_tier(self, tier: int, order: int, *, pid: int = -1,
                        addr: int = -1) -> int | None:
@@ -494,6 +580,8 @@ class TieredMemoryManager(MemoryManager):
         it reached."""
         st = self.procs[pid]
         m = st.page_table[logical_start]
+        if m.shared:
+            return False    # cache-owned phys: only the cache migrates it
         dst_tier = max(0, min(dst_tier, self.ntiers - 1))
         h = self.health
         while m.tier != dst_tier:
@@ -542,7 +630,8 @@ class TieredMemoryManager(MemoryManager):
         need = need_blocks if need_blocks is not None \
             else self.tier_cfg.demote_chunk_blocks
         cands = [(st, m) for st in self.procs.values()
-                 for m in st.mappings_sorted() if m.tier == TIER_HBM]
+                 for m in st.mappings_sorted()
+                 if m.tier == TIER_HBM and not m.shared]
         if not cands:
             return 0
         cands.sort(key=lambda sm: (
@@ -581,7 +670,7 @@ class TieredMemoryManager(MemoryManager):
         # demote and promote copies would otherwise land in one device batch)
         cands = [(st, m) for st in self.procs.values()
                  for m in st.mappings_sorted()
-                 if m.tier != TIER_HBM
+                 if m.tier != TIER_HBM and not m.shared
                  and self._page_age_ticks(st.pid, m.logical_start) > 0]
         if not cands:
             return 0
@@ -634,7 +723,7 @@ class TieredMemoryManager(MemoryManager):
                     < m.logical_start + order_blocks(m.order):
                 continue
             m = self._mapping_at(st, addr)
-            if m is None or (pid, m.logical_start) in seen:
+            if m is None or m.shared or (pid, m.logical_start) in seen:
                 continue
             seen.add((pid, m.logical_start))
             last[pid] = m
@@ -665,7 +754,7 @@ class TieredMemoryManager(MemoryManager):
             if st is None or addr not in st.mapped:
                 continue
             m = self._mapping_at(st, addr)
-            if m is None or (pid, m.logical_start) in seen:
+            if m is None or m.shared or (pid, m.logical_start) in seen:
                 continue
             seen.add((pid, m.logical_start))
             cands.append((st, m))

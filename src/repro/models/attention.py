@@ -122,19 +122,25 @@ def decode_attention_dense(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def mla_expand_attention(q_nope: jax.Array, q_rope: jax.Array,
                          c_kv: jax.Array, k_rope: jax.Array,
                          w_uk: jax.Array, w_uv: jax.Array, *,
-                         causal: bool = True, chunk: int = 1024) -> jax.Array:
+                         causal: bool = True, chunk: int = 1024,
+                         q_offset: int = 0) -> jax.Array:
     """Training-path MLA: expand latents to per-head K/V then flash-attend.
 
-    q_nope: [B,S,H,Dn]; q_rope: [B,S,H,Dr]; c_kv: [B,S,L]; k_rope: [B,S,Dr]
-    w_uk: [H,L,Dn]; w_uv: [H,L,Dv].  Returns [B,S,H,Dv].
+    q_nope: [B,Sq,H,Dn]; q_rope: [B,Sq,H,Dr]; c_kv: [B,Sk,L]; k_rope:
+    [B,Sk,Dr]; w_uk: [H,L,Dn]; w_uv: [H,L,Dv].  Returns [B,Sq,H,Dv].
+    ``q_offset`` is the absolute position of q[0] (suffix prefill attends
+    queries for the tail of a sequence whose earlier latents came from the
+    paged pool).
     """
-    B, S, H, Dn = q_nope.shape
+    B, Sk = c_kv.shape[:2]
+    H = q_nope.shape[2]
     k_nope = jnp.einsum("bsl,hld->bshd", c_kv, w_uk)
     v = jnp.einsum("bsl,hld->bshd", c_kv, w_uv)
-    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, k_rope.shape[-1]))
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (B, Sk, H, k_rope.shape[-1]))
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
-    return flash_attention(q, k, v, causal=causal, chunk=chunk)
+    return flash_attention(q, k, v, causal=causal, chunk=chunk,
+                           q_offset=q_offset)
 
 
 def mla_absorbed_decode(q_nope: jax.Array, q_rope: jax.Array,

@@ -520,3 +520,181 @@ def prefill_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = x_last.astype(F32) @ head.astype(F32)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Suffix prefill (prefix-cache hit: prefix KV comes from the pool)
+# ---------------------------------------------------------------------------
+
+def write_suffix_kv(pool, kv_seq, block_table, start, *, block_tokens: int):
+    """Scatter a suffix prefill's KV at token offset ``start`` (traced).
+
+    kv_seq: [B, S, ...] — the KV of tokens [start, start+S); rows whose
+    target position lands in an unmapped block (table -1) or past the
+    table are dropped, like the other pool scatters."""
+    B, S = kv_seq.shape[:2]
+    bt = block_tokens
+    MB = block_table.shape[1]
+    pos = start + jnp.arange(S)                     # [S] absolute positions
+    blk = pos // bt
+    off = pos % bt
+    raw = jnp.take_along_axis(
+        block_table, jnp.broadcast_to(jnp.where(blk < MB, blk, 0)[None],
+                                      (B, S)), axis=1)
+    ok = (blk < MB)[None, :] & (raw >= 0)
+    safe = jnp.where(ok, raw, pool.shape[0]).reshape(-1)
+    flat = kv_seq.reshape((B * S,) + kv_seq.shape[2:])
+    return pool.at[safe, jnp.tile(off, B)].set(flat.astype(pool.dtype),
+                                               mode="drop")
+
+
+def _gather_full_kv(pool, suffix, block_table, start, key_blocks: int,
+                    block_tokens: int):
+    """Assemble the FULL-length per-layer KV stream of one sequence:
+    positions [0, start) gathered from the paged pool (the cached prefix),
+    [start, start+S) from the freshly computed ``suffix``, the rest zero.
+
+    ``key_blocks`` is static (the prompt's padded block count), so the
+    result has the exact shape — and the exact flash-attention chunking —
+    of the k/v stream the ordinary full prefill would have built; the
+    zero/garbage tail past the valid tokens is causally masked for every
+    valid query row, which is what makes the suffix path's attention
+    outputs equal the full path's suffix rows."""
+    B, S = suffix.shape[:2]
+    bt = block_tokens
+    KB = key_blocks * bt
+    tbl = block_table[:, :key_blocks]                     # [B, nb]
+    gathered = pool[jnp.maximum(tbl, 0)]                  # [B, nb, bt, ...]
+    full = gathered.reshape((B, KB) + pool.shape[2:])
+    posk = jnp.arange(KB)
+    valid = (posk[None, :] < start) & (jnp.repeat(tbl, bt, axis=1) >= 0)
+    full = jnp.where(valid.reshape(valid.shape + (1,) * (full.ndim - 2)),
+                     full, 0).astype(suffix.dtype)
+    idx = start + jnp.arange(S)
+    return full.at[:, idx].set(suffix.astype(full.dtype), mode="drop")
+
+
+def prefill_suffix_step(params: Pytree, cfg: ModelConfig, cache: Pytree,
+                        tokens: jax.Array, block_table: jax.Array,
+                        layout: PagedLayout, *, prefix_len: jax.Array,
+                        key_blocks: int, compute_dtype=BF16,
+                        chunk: int = 1024,
+                        last_index: jax.Array | None = None):
+    """Prefill ONLY the uncached suffix of a prompt whose first
+    ``prefix_len`` tokens' KV already sits in the paged pool (a prefix-cache
+    hit: shared blocks mapped read-only, the partial tail already
+    copy-on-write-broken).
+
+    tokens: [B, S] the SUFFIX tokens (block-padded); prefix_len: [B]-free
+    traced scalar — absolute position of tokens[:, 0]; key_blocks: STATIC
+    padded block count of the whole prompt (compile key, with S).  Each
+    attention layer projects q/k/v for the suffix rows only, attends
+    against pool-gathered prefix + computed suffix keys via
+    ``flash_attention(q_offset=prefix_len)``, and scatters the suffix KV at
+    its token offset.  Layer kinds with sequential state (mamba, cross-
+    attn, enc-dec) cannot skip prefix compute and are rejected.
+    Returns (last-token logits [B, V_pad], new cache).
+    """
+    B, S = tokens.shape
+    bt = layout.block_tokens
+    if cfg.enc_dec or cfg.vlm_patches or cfg.attn.mrope_sections is not None:
+        raise ValueError("suffix prefill supports plain decoder LMs only")
+    x = params["embed"].astype(compute_dtype)[tokens]
+    positions = (prefix_len + jnp.arange(S))[None, :].astype(F32)
+    segs = build_segments(build_layer_plans(cfg, decoder=True))
+    new_cache: dict = {}
+
+    def suffix_layer(plan, p, layer_cache, x):
+        if plan.kind not in ("a", "attn") or plan.xattn:
+            raise ValueError(
+                f"suffix prefill cannot skip prefix compute for layer kind "
+                f"{plan.kind!r} (sequential state)")
+        h = _apply_norm(cfg, p["ln1"], x)
+        nc = dict(layer_cache)
+        if cfg.mla is not None:
+            ap = p["attn"]
+            m = cfg.mla
+            H = cfg.n_heads
+            q = (h @ ap["wq"].astype(h.dtype)).reshape(B, S, H,
+                                                       m.qk_nope + m.qk_rope)
+            q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+            dkv = h @ ap["w_dkv"].astype(h.dtype)
+            c_kv = rms_norm(dkv[..., :m.kv_lora], ap["kv_norm"])
+            k_rope = dkv[..., m.kv_lora:]
+            q_rope = apply_rope(q_rope, positions, theta=cfg.attn.rope_theta)
+            k_rope_r = apply_rope(k_rope[:, :, None, :], positions,
+                                  theta=cfg.attn.rope_theta)[:, :, 0, :]
+            lat = jnp.concatenate([c_kv, k_rope_r], axis=-1)
+            lat_full = _gather_full_kv(layer_cache["pool_ckv"], lat,
+                                       block_table, prefix_len, key_blocks, bt)
+            from .attention import mla_expand_attention
+            o = mla_expand_attention(q_nope, q_rope,
+                                     lat_full[..., :m.kv_lora],
+                                     lat_full[..., m.kv_lora:],
+                                     ap["w_uk"].astype(h.dtype),
+                                     ap["w_uv"].astype(h.dtype),
+                                     causal=True, chunk=chunk,
+                                     q_offset=prefix_len)
+            x = x + o.reshape(B, S, -1) @ ap["wo"].astype(h.dtype)
+            nc["pool_ckv"] = write_suffix_kv(
+                layer_cache["pool_ckv"], lat, block_table, prefix_len,
+                block_tokens=bt)
+        else:
+            ap = p["attn"]
+            q, k, v = _project_qkv(cfg, ap, h)
+            if cfg.attn.use_rope:
+                q = apply_rope(q, positions, theta=cfg.attn.rope_theta)
+                k = apply_rope(k, positions, theta=cfg.attn.rope_theta)
+            window = cfg.attn.window if plan.local else None
+            k_full = _gather_full_kv(layer_cache["pool_k"], k, block_table,
+                                     prefix_len, key_blocks, bt)
+            v_full = _gather_full_kv(layer_cache["pool_v"], v, block_table,
+                                     prefix_len, key_blocks, bt)
+            o = flash_attention(q, k_full, v_full, causal=plan.causal,
+                                window=window, chunk=chunk,
+                                soft_cap=cfg.attn.logit_soft_cap,
+                                q_offset=prefix_len)
+            x = x + o.reshape(B, S, -1) @ ap["wo"].astype(h.dtype)
+            nc["pool_k"] = write_suffix_kv(layer_cache["pool_k"], k,
+                                           block_table, prefix_len,
+                                           block_tokens=bt)
+            nc["pool_v"] = write_suffix_kv(layer_cache["pool_v"], v,
+                                           block_table, prefix_len,
+                                           block_tokens=bt)
+        if plan.ffn:
+            h2 = _apply_norm(cfg, p["ln2"], x)
+            if plan.moe:
+                y, _ = moe_apply(p["moe"], h2.reshape(B * S, -1), cfg.moe,
+                                 cfg.mlp)
+                x = x + y.reshape(B, S, -1)
+            else:
+                x = x + _mlp_forward(cfg, p["mlp"], h2)
+        return x, nc
+
+    for si, seg in enumerate(segs):
+        key = f"p{si}" if seg[0] == "plain" else f"s{si}"
+        if seg[0] == "plain":
+            x, nc = suffix_layer(seg[1], params["blocks"][key], cache[key], x)
+            new_cache[key] = nc
+        else:
+            _, cycle, reps = seg
+
+            def body(x, xs):
+                layer_params, layer_cache = xs
+                nlc = {}
+                for j, pl in enumerate(cycle):
+                    x, nlc[f"m{j}"] = suffix_layer(pl, layer_params[f"m{j}"],
+                                                   layer_cache[f"m{j}"], x)
+                return x, nlc
+
+            x, nc = jax.lax.scan(body, x, (params["blocks"][key], cache[key]))
+            new_cache[key] = nc
+    if last_index is None:
+        x_last = x[:, -1]
+    else:
+        x_last = jnp.take_along_axis(
+            x, last_index[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    x_last = _apply_norm(cfg, params["final_norm"], x_last)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x_last.astype(F32) @ head.astype(F32)
+    return logits, new_cache

@@ -39,6 +39,10 @@ EV_QUARANTINE = 11    # a0=edge, a1=backoff window ns, a2=backoff level
 EV_RETRY = 12         # a0=edge, a1=attempt, a2=backoff charged (modeled ns)
 EV_READMIT = 13       # a0=edge, a1=errors so far, a2=successes so far
 
+# Prefix-cache tracepoints (modeled-clock timestamps):
+EV_CACHE_HIT = 14     # a0=pid, a1=blocks reused, a2=tokens skipped
+EV_EVICT = 15         # a0=entry id, a1=blocks, a2=target tier | dropped<<8
+
 # Program-emitted tags: HELPER_TRACE lands on EV_PROG_TRACE (a0 = r1);
 # bpf_ringbuf_output carries an arbitrary program tag in r1 — programs
 # should use tags >= EV_PROG_BASE to stay clear of the framework range.
@@ -51,7 +55,8 @@ _TAG_NAMES = {
     EV_COMPILE: "compile", EV_CACHE: "cache", EV_COMPACT: "compact",
     EV_COLLAPSE: "collapse", EV_DETACH: "detach",
     EV_QUARANTINE: "quarantine", EV_RETRY: "migrate_retry",
-    EV_READMIT: "readmit", EV_PROG_TRACE: "prog_trace",
+    EV_READMIT: "readmit", EV_CACHE_HIT: "cache_hit", EV_EVICT: "evict",
+    EV_PROG_TRACE: "prog_trace",
 }
 
 

@@ -7,6 +7,10 @@ Two process tracks:
   * pid 2 ``modeled`` — the event ring as instant ("i") events.  Program
     and mm events carry the modeled ktime clock, host-side events a wall
     timestamp; both are offset-normalized so the track starts near 0.
+    Migration-hop events additionally render as complete ("X") spans on a
+    dedicated ``mm migration`` thread row — each hop carries its modeled
+    transfer duration (``a2`` ns), so a multi-hop demotion reads as a
+    chain of adjacent spans instead of dimensionless ticks.
 
 Timestamps are microseconds (the trace-event format's unit); sub-``us``
 durations survive as fractions.
@@ -16,7 +20,7 @@ from __future__ import annotations
 
 import json
 
-from .ringbuf import tag_name
+from .ringbuf import EV_MIGRATE_HOP, tag_name
 
 
 def chrome_trace(tel) -> dict:
@@ -40,11 +44,24 @@ def chrome_trace(tel) -> dict:
                        "dur": dur / 1000.0})
     ring = tel.ring.peek()
     base = int(ring[:, 0].min()) if len(ring) else 0
+    have_hops = False
     for row in ring:
         ts, tag, a0, a1, a2 = (int(x) for x in row)
         events.append({"ph": "i", "name": tag_name(tag), "cat": "ring",
                        "pid": 2, "tid": 1, "ts": (ts - base) / 1000.0,
                        "s": "t", "args": {"a0": a0, "a1": a1, "a2": a2}})
+        if tag == EV_MIGRATE_HOP:
+            # span view of the same hop: a0 packs (src_tier<<8)|dst_tier,
+            # a2 is the modeled transfer time of this edge
+            if not have_hops:
+                have_hops = True
+                events.append({"ph": "M", "name": "thread_name", "pid": 2,
+                               "tid": 2, "args": {"name": "mm migration"}})
+            events.append({"ph": "X", "cat": "migration",
+                           "name": f"hop t{a0 >> 8}->t{a0 & 0xff}",
+                           "pid": 2, "tid": 2, "ts": (ts - base) / 1000.0,
+                           "dur": a2 / 1000.0,
+                           "args": {"bytes": a1, "ns": a2}})
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 
 

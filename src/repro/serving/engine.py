@@ -60,10 +60,14 @@ from ..core import (MAX_PROFILE_REGIONS, FaultKind, HWSpec, Khugepaged,
                     tier_edge_admission_program, tier_heat_band_program,
                     tier_lru_program, tier_never_program)
 from ..core.buddy import order_blocks
-from ..core.hooks import HOOK_FAULT, HOOK_TIER
+from ..core.hooks import HOOK_EVICT, HOOK_FAULT, HOOK_TIER
+from ..core.programs import (evict_ghost_program, evict_lfu_program,
+                             evict_lru_program)
 from ..resilience import FailureInjector
-from ..models.decode import PagedLayout, cache_init, decode_step, prefill_step
+from ..models.decode import (PagedLayout, cache_init, decode_step,
+                             prefill_step, prefill_suffix_step)
 from ..models.transformer import build_layer_plans
+from .prefix_cache import PrefixCache
 from .sampler import Sampler
 from .tables import DeviceBlockTables
 
@@ -87,12 +91,14 @@ class SeqState:
     slot: int
     generated: list = field(default_factory=list)
     length: int = 0           # tokens currently in KV (prompt + generated)
+    prefix: Any = None        # pinned PrefixMatch when admitted via the cache
 
 
 @dataclass
 class EngineStats:
     steps: int = 0
     prefills: int = 0
+    prefill_tokens: int = 0        # tokens actually run through the kernel
     decode_tokens: int = 0
     preemptions: int = 0
     tier_reliefs: int = 0          # OOMs resolved by demotion, not preemption
@@ -118,6 +124,14 @@ class ServingEngine:
     # they strand tiers 2.. and reclaim degrades back to preemption while
     # deep capacity sits free — reject the pairing instead of livelocking.
     TWO_TIER_POLICIES = frozenset({"ebpf-tier", "lru-tier"})
+    # evict_policy name -> mm_evict program factory (None = kernel default:
+    # the cache's built-in conservative LRU fallback, no program attached)
+    EVICT_PROGRAMS = {
+        "lru-evict": evict_lru_program,
+        "lfu-evict": evict_lfu_program,
+        "ghost-evict": evict_ghost_program,
+        "default": None,
+    }
 
     def __init__(self, cfg: ModelConfig, params: Pytree, layout: PagedLayout,
                  *, max_batch: int = 4, policy: str = "ebpf",
@@ -126,6 +140,8 @@ class ServingEngine:
                  cache_dtype=jnp.bfloat16,
                  host_blocks: int = 0, tier_blocks=None,
                  tier_policy: str = "ebpf-tier",
+                 prefix_cache: "bool | int" = False,
+                 evict_policy: str = "lru-evict",
                  batch_faults: bool = True,
                  telemetry: "Telemetry | bool | None" = None,
                  trace: bool = False,
@@ -245,6 +261,38 @@ class ServingEngine:
             self.mm.hooks.warm(HOOK_FAULT, max_batch=max_batch)
             self.mm.hooks.warm(HOOK_TIER, max_batch=max_batch)
 
+        # Cross-request KV prefix cache: content-addressed shared prefix
+        # blocks, admission via read-only borrows + CoW, HOOK_EVICT-driven
+        # eviction into the tier chain.  prefix_cache=True sizes the budget
+        # at a quarter of HBM; an int is an explicit cap in blocks.
+        self.prefix_cache: PrefixCache | None = None
+        if prefix_cache:
+            bad = [k for k in cfg.layer_kinds() if k != "a"]
+            if bad or cfg.enc_dec or cfg.vlm_patches \
+                    or cfg.attn.mrope_sections is not None:
+                raise ValueError(
+                    "prefix_cache requires a plain all-attention decoder "
+                    "(sequential state — mamba/enc-dec/vlm — cannot skip "
+                    "prefix compute)")
+            cap = (int(prefix_cache) if not isinstance(prefix_cache, bool)
+                   else max(1, layout.num_blocks // 4))
+            self.prefix_cache = PrefixCache(
+                self.mm, layout.block_tokens, cap_blocks=cap,
+                telemetry=self.telemetry)
+            if evict_policy not in self.EVICT_PROGRAMS:
+                raise ValueError(f"unknown evict_policy {evict_policy!r}")
+            eprog = self.EVICT_PROGRAMS[evict_policy]
+            if eprog is not None:
+                self.mm.attach_evict_program(eprog())
+                # a scan's ctx batch is ONE ROW PER ENTRY, and the entry
+                # count can transiently reach ~2x the budget between scans
+                # — warm every pow2 bucket up to that, or the first
+                # over-budget scan compiles mid-serve
+                warm_to = 1 << max(4, (2 * cap - 1).bit_length())
+                self.mm.hooks.warm(HOOK_EVICT,
+                                   max_batch=min(512, warm_to))
+        self.evict_policy = evict_policy if self.prefix_cache else None
+
         self.khugepaged = (Khugepaged(self.mm, KhugepagedConfig())
                            if (khugepaged and policy == "ebpf") else None)
         pool_layout = layout if not tiered else PagedLayout(
@@ -271,29 +319,63 @@ class ServingEngine:
         self._tables = DeviceBlockTables(max_batch, MB)
         self._table_buf = jnp.full((max_batch, MB), -1, jnp.int32)
 
-        def _install_rows(buf, didx, drows):
+        def _install_rows(buf, didx, drows, tri):
             # dirty rows are bucket-padded with idx -1: route pads out of
-            # bounds and drop, same convention as the KV scatter
+            # bounds and drop, same convention as the KV scatter.  Delta
+            # triples (row, col, value) follow the same -1-row pad route.
             safe = jnp.where(didx >= 0, didx, buf.shape[0])
-            return buf.at[safe].set(drows, mode="drop")
+            buf = buf.at[safe].set(drows, mode="drop")
+            trow = jnp.where(tri[:, 0] >= 0, tri[:, 0], buf.shape[0])
+            return buf.at[trow, tri[:, 1]].set(tri[:, 2], mode="drop")
 
-        def _decode_entry(p, c, buf, didx, drows, t, l, act, pos3d):
-            buf = _install_rows(buf, didx, drows)
+        def _decode_entry(p, c, buf, didx, drows, tri, t, l, act, pos3d):
+            buf = _install_rows(buf, didx, drows, tri)
             logits, new_cache, heat = decode_step(
                 p, cfg, c, t, l, buf, layout, active=act, pos3d=pos3d,
                 attn_impl="gather")
             return logits, new_cache, heat, buf
 
-        def _prefill_entry(p, c, buf, didx, drows, t, slot, last, **kw):
-            buf = _install_rows(buf, didx, drows)
+        def _prefill_entry(p, c, buf, didx, drows, tri, t, slot, last, **kw):
+            buf = _install_rows(buf, didx, drows, tri)
             table = jax.lax.dynamic_slice_in_dim(buf, slot, 1, 0)
             logits, new_cache = prefill_step(
                 p, cfg, c, t, table, layout, chunk=256, last_index=last,
                 **kw)
             return logits, new_cache, buf
 
+        def _prefill_sfx_entry(p, c, buf, didx, drows, tri, t, slot, plen,
+                               last, *, key_blocks):
+            # cache-hit admission: prefill ONLY the uncached suffix; the
+            # prefix KV is already in the pool behind the shared mappings
+            buf = _install_rows(buf, didx, drows, tri)
+            table = jax.lax.dynamic_slice_in_dim(buf, slot, 1, 0)
+            logits, new_cache = prefill_suffix_step(
+                p, cfg, c, t, table, layout, prefix_len=plen,
+                key_blocks=key_blocks, chunk=256, last_index=last)
+            return logits, new_cache, buf
+
+        pool_blocks = self._pool_blocks
+
+        def _moves_entry(cache, src, dst):
+            # one fused KV block-copy over every paged pool leaf; pad
+            # entries carry dst=-1 -> routed out of bounds and dropped
+            def move(path, leaf):
+                key = path[-1].key if hasattr(path[-1], "key") \
+                    else str(path[-1])
+                if key not in self._POOL_KEYS:
+                    return leaf
+                if leaf.ndim >= 2 and leaf.shape[0] != pool_blocks:
+                    d = jnp.where(dst >= 0, dst, leaf.shape[1])
+                    return leaf.at[:, d].set(leaf[:, src], mode="drop")
+                d = jnp.where(dst >= 0, dst, leaf.shape[0])
+                return leaf.at[d].set(leaf[src], mode="drop")
+            return jax.tree_util.tree_map_with_path(move, cache)
+
         self._decode = jax.jit(_decode_entry)
         self._prefill = jax.jit(_prefill_entry)
+        self._prefill_sfx = jax.jit(_prefill_sfx_entry,
+                                    static_argnames=("key_blocks",))
+        self._moves = jax.jit(_moves_entry)
 
     # ----------------------------------------------------------------- admin
     def _span(self, name: str, tid: str = "engine"):
@@ -325,26 +407,50 @@ class ServingEngine:
                              self.layout.max_blocks)
             self.mm.create_process(pid, app=req.app, vma_blocks=vma_blocks)
             nblocks = self._blocks_needed(len(req.prompt))
+            # prefix-cache admission: borrow the longest cached prefix
+            # read-only (page-table surgery, no kernel work), fault only the
+            # uncached suffix blocks, CoW-break a partially shared tail
+            match = (self.prefix_cache.acquire(pid, req.prompt)
+                     if self.prefix_cache is not None else None)
+            n_shared = 0
+            if match is not None:
+                self.mm.map_shared(pid, 0, match.blocks)
+                n_shared = len(match.blocks)
             if self.batch_faults:
                 # the whole prefill span resolves through ONE policy
                 # invocation (bulk FaultKind.PREFILL placement hints)
-                fault_fn = lambda p=pid, n=nblocks: self.mm.fault_range(p, 0, n)  # noqa: E731
+                fault_fn = lambda p=pid, s=n_shared, n=nblocks: \
+                    self.mm.fault_range(p, s, n)  # noqa: E731
             else:
-                fault_fn = lambda p=pid, n=nblocks: self.mm.ensure_range(p, 0, n)  # noqa: E731
-            ok = self._ensure_with_reclaim(fault_fn, pid, nblocks,
+                fault_fn = lambda p=pid, s=n_shared, n=nblocks: \
+                    self.mm.ensure_range(p, s, n)  # noqa: E731
+            ok = self._ensure_with_reclaim(fault_fn, pid, nblocks - n_shared,
                                            allow_preempt=False)
+            if ok and match is not None and match.cow_logical is not None:
+                # the suffix prefill writes INSIDE the last borrowed block —
+                # break the share first (private copy rides the move list)
+                ok = self._ensure_with_reclaim(
+                    lambda p=pid, a=match.cow_logical: self.mm.cow_break(p, a),
+                    pid, 1, allow_preempt=False)
             if not ok:
+                if match is not None:
+                    self.prefix_cache.release(match)
                 self.mm.free_process(pid)
                 self.waiting.insert(0, req)
                 break
-            # land any demotion/compaction copies before prefill writes the
-            # pool (same pre-kernel ordering as the decode path)
+            # land any demotion/compaction/CoW copies before prefill writes
+            # the pool (same pre-kernel ordering as the decode path)
             self._apply_pending_moves()
             seq = SeqState(req=req, pid=pid, slot=slot,
-                           length=len(req.prompt))
+                           length=len(req.prompt), prefix=match)
             self.active[slot] = seq
             with self._span(f"prefill rid={req.rid}"):
                 self._run_prefill(seq)
+            if self.prefix_cache is not None:
+                # cache every whole block of the freshly prefilled prompt
+                # (existing chain entries are skipped; copies ride the next
+                # move-list drain, before any kernel can touch the donor)
+                self.prefix_cache.insert(pid, req.prompt)
             self.stats.prefills += 1
 
     def _slot_pids(self) -> list:
@@ -357,11 +463,12 @@ class ServingEngine:
     def _sync_tables(self, slot_pids) -> tuple:
         """Dirty-row sync of the device-resident block tables.
 
-        Returns ``(didx, drows, active)`` with the dirty set bucket-padded
-        to a power of two (pad idx = -1, dropped by the install scatter) so
-        the fused entries compile once per bucket, not once per dirty
+        Returns ``(didx, drows, active, triples)`` with both the full-row
+        dirty set and the delta-triple set bucket-padded to a power of two
+        (pad idx / pad row = -1, dropped by the install scatter) so the
+        fused entries compile once per bucket pair, not once per dirty
         count."""
-        idx, rows, active = self._tables.sync(self.mm, slot_pids)
+        idx, rows, active, tri = self._tables.sync(self.mm, slot_pids)
         K = len(idx)
         bucket = 1 << (K - 1).bit_length() if K else 0
         if bucket > K:
@@ -370,28 +477,71 @@ class ServingEngine:
             rows = np.concatenate(
                 [rows, np.zeros((bucket - K, self.layout.max_blocks),
                                 np.int32)])
-        return jnp.asarray(idx), jnp.asarray(rows), active
+        T = len(tri)
+        tbucket = 1 << (T - 1).bit_length() if T else 0
+        if tbucket > T:
+            pad = np.zeros((tbucket - T, 3), np.int32)
+            pad[:, 0] = -1          # row -1 routes the pad out of bounds
+            tri = np.concatenate([tri, pad])
+        return jnp.asarray(idx), jnp.asarray(rows), active, jnp.asarray(tri)
 
     def _run_prefill(self, seq: SeqState) -> None:
         bt = self.layout.block_tokens
         prompt = np.asarray(seq.req.prompt, np.int32)
+        match = seq.prefix
+        if match is not None and match.tokens > 0:
+            self._run_prefill_suffix(seq, match)
+            return
         S_pad = self._blocks_needed(len(prompt)) * bt
         toks = np.zeros((1, S_pad), np.int32)
         toks[0, :len(prompt)] = prompt
         # the new pid's row arrives as a dirty-row upload; the prefill jit
         # installs it and slices the slot's row from the persistent buffer
-        didx, drows, _active = self._sync_tables(self._slot_pids())
+        didx, drows, _active, tri = self._sync_tables(self._slot_pids())
         kw = self._modality_kwargs(1, S_pad)
         sub_cache = jax.tree.map(lambda c: c, self.cache)  # pools are shared
         logits, new_cache, self._table_buf = self._prefill(
             self.params, self._slot_cache_view(seq.slot), self._table_buf,
-            didx, drows, jnp.asarray(toks),
+            didx, drows, tri, jnp.asarray(toks),
             jnp.asarray(seq.slot, jnp.int32),
             jnp.asarray([len(prompt) - 1], jnp.int32),
             **kw)
         self._merge_slot_cache(seq.slot, new_cache)
         self.mm.record_access(seq.pid,
                               np.ones(self._blocks_needed(len(prompt))))
+        self.stats.prefill_tokens += len(prompt)
+        tok = self.sampler.sample(np.asarray(logits)[0],
+                                  self.cfg.vocab, seq.req.temperature)
+        seq.generated.append(int(tok))
+
+    def _run_prefill_suffix(self, seq: SeqState, match) -> None:
+        """Cache-hit prefill: the first ``match.tokens`` tokens' KV is
+        already in the pool (shared mappings + a CoW-broken tail), so only
+        the suffix runs through the kernel.  The suffix jit assembles the
+        full-length key stream — pool-gathered prefix + computed suffix —
+        with the SAME padded length and chunking as the full prefill, which
+        is what keeps its outputs bit-identical to the full path's suffix
+        rows (the garbage tail past the valid tokens is causally masked to
+        an exact-zero contribution)."""
+        bt = self.layout.block_tokens
+        prompt = np.asarray(seq.req.prompt, np.int32)
+        L = len(prompt)
+        S0 = match.tokens
+        KB = self._blocks_needed(L)         # static: whole prompt's blocks
+        SB = self._blocks_needed(L - S0) * bt
+        toks = np.zeros((1, SB), np.int32)
+        toks[0, :L - S0] = prompt[S0:]
+        didx, drows, _active, tri = self._sync_tables(self._slot_pids())
+        logits, new_cache, self._table_buf = self._prefill_sfx(
+            self.params, self._slot_cache_view(seq.slot), self._table_buf,
+            didx, drows, tri, jnp.asarray(toks),
+            jnp.asarray(seq.slot, jnp.int32),
+            jnp.asarray(S0, jnp.int32),
+            jnp.asarray([L - S0 - 1], jnp.int32),
+            key_blocks=KB)
+        self._merge_slot_cache(seq.slot, new_cache)
+        self.mm.record_access(seq.pid, np.ones(KB))
+        self.stats.prefill_tokens += L - S0
         tok = self.sampler.sample(np.asarray(logits)[0],
                                   self.cfg.vocab, seq.req.temperature)
         seq.generated.append(int(tok))
@@ -487,6 +637,12 @@ class ServingEngine:
                 fault_fn()
                 return True
             except MMOutOfMemory as oom:
+                # cheapest relief first: evict/demote UNPINNED prefix-cache
+                # entries (cache blocks are speculative capacity — a live
+                # sequence always outranks them)
+                if self.prefix_cache is not None and \
+                        self.prefix_cache.scan(max(1, need_blocks)) > 0:
+                    continue
                 if isinstance(self.mm, TieredMemoryManager) and \
                         self.mm.demote_cold_global(
                             need_blocks, prefer_pid=oom.victim_pid) > 0:
@@ -505,6 +661,8 @@ class ServingEngine:
         tel = self.telemetry
         for slot, seq in list(self.active.items()):
             if seq.pid == victim_pid:
+                if seq.prefix is not None:
+                    self.prefix_cache.release(seq.prefix)
                 self.mm.evict_process(victim_pid)
                 del self.active[slot]
                 self.waiting.insert(0, seq.req)   # recompute-from-scratch
@@ -533,6 +691,9 @@ class ServingEngine:
                     # background promotion: bring re-heated host-tier pages
                     # back to HBM
                     self.mm.promotion_scan()
+                if self.prefix_cache is not None:
+                    # periodic eviction cadence (batched HOOK_EVICT scan)
+                    self.prefix_cache.tick()
                 self._apply_pending_moves()
                 self.mm.tick()
         self.stats.steps += 1
@@ -565,6 +726,9 @@ class ServingEngine:
                                      for _, p, a in pending])
                 break
             except MMOutOfMemory as oom:
+                if self.prefix_cache is not None and \
+                        self.prefix_cache.scan(1) > 0:
+                    continue
                 if tiered and self.mm.demote_cold_global(
                         1, prefer_pid=oom.victim_pid) > 0:
                     self.stats.tier_reliefs += 1
@@ -643,13 +807,13 @@ class ServingEngine:
         # dirty-row upload: only rows whose table_version moved since the
         # last sync cross to the device; skipped slots sync as vacant so
         # their persistent rows cannot alias live pool blocks
-        didx, drows, active = self._sync_tables(slot_pids)
+        didx, drows, active, tri = self._sync_tables(slot_pids)
         pos3d = None
         if self.cfg.vlm_patches:
             pos3d = jnp.asarray(
                 np.tile(lengths.astype(np.float32)[None, :, None], (3, 1, 1)))
         logits, self.cache, heat, self._table_buf = self._decode(
-            self.params, self.cache, self._table_buf, didx, drows,
+            self.params, self.cache, self._table_buf, didx, drows, tri,
             jnp.asarray(tokens), jnp.asarray(lengths),
             jnp.asarray(active), pos3d)
         logits_np = np.asarray(logits)
@@ -661,6 +825,11 @@ class ServingEngine:
                 continue
             nb = self._blocks_needed(seq.length + 1)
             self.mm.record_access(seq.pid, heat_np[slot, :nb])
+            if seq.prefix is not None:
+                # fold the borrower's attention mass over the shared span
+                # into the matched entries' heat EMAs (the DAMON signal the
+                # eviction programs read as PAGE_HEAT)
+                self.prefix_cache.note_heat(seq.prefix, heat_np[slot, :nb])
             app = seq.req.app or "_default"
             if app not in self.heat_histograms:
                 self.heat_histograms[app] = np.zeros(self.layout.max_blocks,
@@ -676,6 +845,8 @@ class ServingEngine:
                 limit = min(limit, seq.req.stop_after)
             if len(seq.generated) >= limit:
                 self.finished[seq.req.rid] = list(seq.generated)
+                if seq.prefix is not None:
+                    self.prefix_cache.release(seq.prefix)
                 self.mm.free_process(seq.pid)
                 del self.active[slot]
                 self.stats.completed += 1
@@ -708,16 +879,16 @@ class ServingEngine:
                               for s, _, o in moves]).astype(np.int32)
         dst = np.concatenate([np.arange(d, d + order_blocks(o))
                               for _, d, o in moves]).astype(np.int32)
-        src_j, dst_j = jnp.asarray(src), jnp.asarray(dst)
-
-        def move(path, leaf):
-            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-            if key not in self._POOL_KEYS:
-                return leaf
-            if leaf.ndim >= 2 and leaf.shape[0] != self._pool_blocks:
-                return leaf.at[:, dst_j].set(leaf[:, src_j])   # stacked [reps,NB,..]
-            return leaf.at[dst_j].set(leaf[src_j])
-        self.cache = jax.tree_util.tree_map_with_path(move, self.cache)
+        # pow2 bucket so the fused tree-wide copy compiles once per bucket
+        # (pad dst = -1 routes out of bounds and is dropped); one dispatch
+        # replaces an eager scatter per pool leaf — prefix-cache insert
+        # copies and steady migration traffic both ride this path
+        P = 1 << (len(src) - 1).bit_length()
+        if P > len(src):
+            src = np.concatenate([src, np.zeros(P - len(src), np.int32)])
+            dst = np.concatenate([dst, np.full(P - len(dst), -1, np.int32)])
+        self.cache = self._moves(self.cache, jnp.asarray(src),
+                                 jnp.asarray(dst))
 
     # ------------------------------------------------------------------ run
     def run(self, max_steps: int = 10_000) -> dict:
@@ -730,9 +901,14 @@ class ServingEngine:
                "huge_fraction": self.mm.hugepage_block_fraction(),
                "tables": {"syncs": self._tables.syncs,
                           "synced_rows": self._tables.synced_rows,
-                          "blank_rows": self._tables.blank_rows}}
+                          "blank_rows": self._tables.blank_rows,
+                          "full_rows": self._tables.full_rows,
+                          "delta_rows": self._tables.delta_rows,
+                          "delta_cells": self._tables.delta_cells}}
         if isinstance(self.mm, TieredMemoryManager):
             out["tier"] = self.mm.tier_snapshot()
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.snapshot()
         if self.khugepaged is not None:
             out["khugepaged"] = {"collapsed": self.khugepaged.collapsed,
                                  "considered": self.khugepaged.considered}
@@ -769,6 +945,8 @@ class ServingEngine:
         if isinstance(self.mm, TieredMemoryManager):
             sections["tier"] = self.mm.tier_snapshot()
             res["health"] = self.mm.health.snapshot()
+        if self.prefix_cache is not None:
+            sections["prefix_cache"] = self.prefix_cache.snapshot()
         sections["resilience"] = res
         if self.telemetry is not None and self.telemetry.enabled:
             sections["telemetry"] = self.telemetry.snapshot()

@@ -327,8 +327,9 @@ class Replica:
         slot_pids: list = [None] * self._tbl_slots
         for pid, slot in self.slots.items():
             slot_pids[slot] = pid
-        didx, drows, active = self.dtables.sync(self.mm, slot_pids)
+        didx, drows, active, tri = self.dtables.sync(self.mm, slot_pids)
         self.table_buf[didx] = drows          # the engine's in-jit scatter
+        self.table_buf[tri[:, 0], tri[:, 1]] = tri[:, 2]   # delta triples
         for pid, slot in self.slots.items():
             assert active[slot], f"{ctx}: live pid {pid} not active"
             np.testing.assert_array_equal(
@@ -557,6 +558,112 @@ def test_chaos_scalar_vs_batched(topology, seed):
         if (pid, lg) in clean.expected:
             assert val == clean.expected[(pid, lg)]
     clean.check_invariants(f"chaos seed={seed} {topology} clean")
+
+
+# ------------------------------------------------------ prefix-cache lane
+def _make_requests(seed: int, vocab: int, n_req: int = 6):
+    """Seeded shared-prefix traffic: a few 'system prompts' reused across
+    requests plus unique tails — the workload shape the prefix cache
+    exists for, state-independent so both lanes replay it identically."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(1, vocab, 16).tolist() for _ in range(2)]
+    reqs = []
+    for r in range(n_req):
+        if rng.random() < 0.7:
+            prompt = list(prefixes[int(rng.integers(0, 2))]) + \
+                rng.integers(1, vocab, int(rng.integers(4, 9))).tolist()
+        else:
+            prompt = rng.integers(1, vocab, int(rng.integers(8, 21))).tolist()
+        reqs.append((r, prompt, int(rng.integers(4, 9))))
+    return reqs
+
+
+def _active_kv(eng):
+    """Per-rid valid-region KV, gathered THROUGH each sequence's block
+    table — placement-independent, so shared cache blocks and private
+    blocks compare purely by content."""
+    import jax
+    bt = eng.layout.block_tokens
+    MB = eng.layout.max_blocks
+    out = {}
+    pools = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(eng.cache)[0]:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "pool_" in name:        # pool_k / pool_v / pool_ckv, per segment
+            pools[name] = np.asarray(leaf)
+    assert pools, "no paged KV pools in the cache pytree"
+    for slot, seq in eng.active.items():
+        tbl = eng.mm.block_table(seq.pid, MB)
+        nb = (seq.length + bt - 1) // bt
+        assert (tbl[:nb] >= 0).all(), f"rid {seq.req.rid}: unmapped valid block"
+        kv = {}
+        for k, pool in pools.items():
+            # plain segments: [NB, bt, ...]; cycled: [reps, NB, bt, ...]
+            if pool.ndim == 5:
+                toks = pool[:, tbl[:nb]].reshape(
+                    pool.shape[0], nb * bt, *pool.shape[3:])[:, :seq.length]
+            else:
+                toks = pool[tbl[:nb]].reshape(
+                    nb * bt, *pool.shape[2:])[:seq.length]
+            kv[k] = toks
+        out[seq.req.rid] = (seq.length, list(seq.generated), kv)
+    return out
+
+
+@pytest.mark.differential
+@pytest.mark.parametrize("seed", SEEDS)
+def test_prefix_cached_vs_uncached(seed):
+    """The prefix-cache acceptance lane: the same seeded shared-prefix
+    request stream through a cache-on and a cache-off engine, stepped in
+    LOCKSTEP.  Sharing may only change where prefix KV lives and how much
+    prefill runs — after every step each live sequence's valid KV region
+    (gathered through its block table) must be bit-identical across lanes,
+    and the finished token streams must match exactly at the end."""
+    import jax
+    from repro.configs.base import get_smoke_config
+    from repro.models import PagedLayout, materialize, model_spec
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_smoke_config("deepseek_7b")
+    params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
+    layout = PagedLayout(num_blocks=256, block_tokens=4, max_blocks=32)
+    engines = {
+        on: ServingEngine(cfg, params, layout, max_batch=2, policy="never",
+                          prefix_cache=on)
+        for on in (False, True)
+    }
+    # admit on first sight: the lane's job is maximal coverage of the
+    # cached path (borrow, CoW, suffix prefill), not admission policy
+    engines[True].prefix_cache.doorkeeper = False
+    for rid, prompt, mnt in _make_requests(seed, cfg.vocab):
+        for eng in engines.values():
+            eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=mnt,
+                               app="chat"))
+    for i in range(400):
+        more = [eng.step() for eng in engines.values()]
+        kv_off, kv_on = (_active_kv(engines[on]) for on in (False, True))
+        tag = f"seed={seed} step={i}"
+        assert kv_on.keys() == kv_off.keys(), \
+            f"{tag}: lanes schedule different sequences"
+        for rid in kv_on:
+            ln_on, gen_on, pools_on = kv_on[rid]
+            ln_off, gen_off, pools_off = kv_off[rid]
+            assert ln_on == ln_off and gen_on == gen_off, \
+                f"{tag}: rid {rid} token streams diverged"
+            for k in pools_on:
+                np.testing.assert_array_equal(
+                    pools_on[k], pools_off[k],
+                    err_msg=f"{tag}: rid {rid} {k} KV bytes diverged "
+                            f"(shared prefix is not bit-identical)")
+        if not any(more):
+            break
+    on, off = engines[True], engines[False]
+    assert not on.active and not off.active, "lockstep run did not drain"
+    assert on.finished == off.finished, \
+        f"seed={seed}: cached and uncached end states diverged"
+    snap = on.prefix_cache.snapshot()
+    assert snap["hits"] > 0 and snap["tokens_skipped"] > 0, \
+        f"seed={seed}: workload never exercised the cache"
 
 
 @pytest.mark.chaos

@@ -42,24 +42,38 @@ def mk_mm(blocks=64, *, tiered=False, host=64):
 
 
 # --------------------------------------------------------------- dirty rows
+def _apply(buf, didx, drows, tri):
+    """The engine's in-jit install, host-side: full rows then triples."""
+    buf[didx] = drows
+    buf[tri[:, 0], tri[:, 1]] = tri[:, 2]
+    return buf
+
+
 class TestDeviceBlockTables:
     def test_dirty_row_protocol(self):
         mm = mk_mm()
         mm.create_process(1, app="app", vma_blocks=8)
         mm.fault_range(1, 0, 4)
         dbt = DeviceBlockTables(2, 8)
-        didx, drows, active = dbt.sync(mm, [1, None])
-        assert list(didx) == [0]
-        np.testing.assert_array_equal(drows[0], mm.block_table(1, 8))
+        buf = np.full((2, 8), -1, np.int32)
+        didx, drows, active, tri = dbt.sync(mm, [1, None])
+        # a fresh pid's row is APPEND-ONLY over the blank mirror: it ships
+        # as delta triples, not a full-width row
+        assert len(didx) == 0 and len(tri) == 4
+        _apply(buf, didx, drows, tri)
+        np.testing.assert_array_equal(buf[0], mm.block_table(1, 8))
         assert list(active) == [True, False]
-        # steady state: no table mutation -> no upload
-        didx, _, _ = dbt.sync(mm, [1, None])
-        assert len(didx) == 0
-        # a new fault bumps table_version -> exactly that row re-uploads
+        assert dbt.delta_rows == 1 and dbt.delta_cells == 4
+        # steady state: no table mutation -> no upload of either kind
+        didx, _, _, tri = dbt.sync(mm, [1, None])
+        assert len(didx) == 0 and len(tri) == 0
+        # a new fault appends cells -> only those cells ship, as triples
         mm.fault_range(1, 4, 6)
-        didx, drows, _ = dbt.sync(mm, [1, None])
-        assert list(didx) == [0]
-        np.testing.assert_array_equal(drows[0], mm.block_table(1, 8))
+        didx, drows, _, tri = dbt.sync(mm, [1, None])
+        assert len(didx) == 0 and len(tri) >= 2
+        assert (tri[:, 1] >= 4).all(), "pre-existing cells must not re-ship"
+        _apply(buf, didx, drows, tri)
+        np.testing.assert_array_equal(buf[0], mm.block_table(1, 8))
 
     def test_vacated_slot_blanks_and_deactivates(self):
         mm = mk_mm()
@@ -68,27 +82,33 @@ class TestDeviceBlockTables:
         dbt = DeviceBlockTables(2, 8)
         dbt.sync(mm, [1, None])
         mm.free_process(1)
-        didx, drows, active = dbt.sync(mm, [None, None])
+        didx, drows, active, tri = dbt.sync(mm, [None, None])
         assert list(didx) == [0], "vacated slot must re-upload a blank row"
         assert (drows[0] == -1).all()
+        assert len(tri) == 0, "blanking must take the full-row path"
         assert not active.any()
-        assert dbt.blank_rows == 1
+        assert dbt.blank_rows == 1 and dbt.full_rows == 1
 
     def test_migration_invalidates_row_same_step(self):
         """The satellite-b hazard at unit level: demotion moves blocks AFTER
         the last sync; the version bump must force the row back up before
-        the next dispatch, bit-identical to a fresh host recapture."""
+        the next dispatch, bit-identical to a fresh host recapture.
+        Migration rewrites LIVE cells, so it must ship full-width (the
+        delta path is append-only by construction)."""
         mm = mk_mm(blocks=8, tiered=True, host=64)
         mm.create_process(1, app="app", vma_blocks=8)
         mm.fault_range(1, 0, 8)
         dbt = DeviceBlockTables(1, 8)
-        _, drows, _ = dbt.sync(mm, [1])
-        stale = drows[0].copy()
+        buf = np.full((1, 8), -1, np.int32)
+        didx, drows, _, tri = dbt.sync(mm, [1])
+        _apply(buf, didx, drows, tri)
+        stale = buf[0].copy()
         assert mm.demote_cold_global(4) > 0, "demotion did not move blocks"
         assert mm.drain_moves(), "no KV moves drained for the demotion"
-        didx, drows, active = dbt.sync(mm, [1])
+        didx, drows, active, tri = dbt.sync(mm, [1])
         assert list(didx) == [0], \
             "migration did not dirty the device row (stale table published)"
+        assert len(tri) == 0, "live-cell rewrite must not ship as triples"
         fresh = mm.block_table(1, 8)
         np.testing.assert_array_equal(drows[0], fresh)
         assert not np.array_equal(stale, fresh), \
