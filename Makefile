@@ -41,6 +41,7 @@ bench:
 bench-json:
 	$(PY) -m benchmarks.hotpath_bench --json BENCH_hotpath.json
 	$(PY) -m benchmarks.prefix_bench --json BENCH_prefix.json
+	$(PY) -m benchmarks.profile_bench --json BENCH_profile.json
 
 # CI perf gates: zero-cost claims (telemetry off / resilience disarmed
 # within 2% of baseline) + the one-dispatch hot path (batched ebpf@b16
@@ -50,15 +51,20 @@ perf-gate:
 	$(PY) -m benchmarks.telemetry_gate
 	$(PY) -m benchmarks.hotpath_gate
 	$(PY) -m benchmarks.prefix_gate
+	$(PY) -m benchmarks.profile_gate
 
-# telemetry demo: serve a tiered smoke workload with tracing on and write
-# out/trace_demo.json (load in ui.perfetto.dev) + a Prometheus-style
-# metrics snapshot — the artifacts CI uploads per run
+# telemetry demo: serve a tiered smoke workload with ONLINE profiling and
+# tracing on; writes out/trace_demo.json (load in ui.perfetto.dev — the
+# "mm profiler" track carries per-process WSS counters and profile-reload
+# instants), a Prometheus-style metrics snapshot, and the profiler's
+# WSS-curve dump — the artifacts CI uploads per run
 trace-demo:
 	mkdir -p out
 	$(PY) examples/serve_paged.py --requests 4 --hbm-blocks 64 \
-		--host-blocks 128 --trace out/trace_demo.json \
-		--metrics out/metrics_demo.txt
+		--host-blocks 128 --profile auto \
+		--trace out/trace_demo.json \
+		--metrics out/metrics_demo.txt \
+		--wss-curve out/wss_demo.json
 
 # drop the cross-session compiler-artifact cache (pickled lowering/unroll
 # artifacts + persisted XLA executables under .cache/); everything rebuilds

@@ -1,0 +1,213 @@
+"""Online-profiling benchmark: auto-synthesized vs offline vs no profile.
+
+The paper builds its region/benefit profiles OFFLINE (a DAMON profiling
+run before serving).  The online profiling plane replaces that step: a
+verified profiler program samples the live DAMON regions (HOOK_PROFILE)
+and the ProfileSynthesizer hot-reloads synthesized profiles mid-run.  This
+bench drives the REAL engine through identical seeded request streams
+(one hot shared "system prompt" + unique tails — traffic a profile can
+actually exploit) across three lanes:
+
+  * ``offline`` — policy="ebpf" with a hand-built hot-prefix profile
+    loaded before the run (the paper's workflow; the quality target);
+  * ``auto``    — policy="ebpf", profile="auto": starts with NO profile
+    and must converge online (the tentpole under test);
+  * ``none``    — the no-profile baseline (base pages, no userspace
+    guidance — the kernel-conservative placement a run without any
+    profile gets).
+
+Per cell it reports wall steps/s over the steady window (pass 0 warms
+every jit bucket AND the auto lane's profile convergence outside the
+clock), plus the jitter-free placement metrics the gate leans on: modeled
+``access_ns`` (the TLB-reach analogue — deterministic for a seeded
+stream), hinted/fallback fault counts, hugepage block fraction, and the
+profiler's scan/reload counters.
+
+The summary derives the acceptance numbers the CI gate
+(``benchmarks.profile_gate``) holds: auto within 10% of offline steps/s,
+auto strictly beating the no-profile lane on modeled access time, and the
+profiler demonstrably synthesizing (reloads >= 1, hinted faults > 0).
+
+Run:  PYTHONPATH=src python -m benchmarks.profile_bench [--json FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+LANES = ("offline", "auto", "none")
+N_REQ = 12
+PREFIX_TOKENS = 56           # the hot shared "system prompt"
+TAIL_TOKENS = 8              # unique per-request tail
+MAX_NEW = 8
+PREFIX_SEED = 7              # the system prompt is FIXED across passes
+PASSES = 3                   # timed passes per cell; best-of wins (jitter)
+AUTO_PERIOD = 2              # profiler cadence for the auto lane
+
+
+def make_traffic(seed: int, vocab: int, n_req: int = N_REQ,
+                 rid_base: int = 0):
+    """Seeded stream: every request opens with one fixed hot prefix (the
+    shared span a profile pays off on) followed by a seed-varying tail."""
+    from repro.serving import Request
+    prefix = np.random.default_rng(PREFIX_SEED).integers(
+        1, vocab, PREFIX_TOKENS).tolist()
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid_base + r,
+                    prompt=prefix + rng.integers(1, vocab,
+                                                 TAIL_TOKENS).tolist(),
+                    max_new_tokens=MAX_NEW, app="chat")
+            for r in range(n_req)]
+
+
+def _setup():
+    from repro.configs.base import get_smoke_config
+    from repro.models import PagedLayout, materialize, model_spec
+    cfg = get_smoke_config("deepseek_7b")
+    params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
+    layout = PagedLayout(num_blocks=512, block_tokens=4, max_blocks=40)
+    return cfg, params, layout
+
+
+def offline_profile(layout):
+    """The hand-built profile an offline DAMON run of this traffic would
+    produce: the shared prefix span is hot (large-page benefit), the tail
+    cold."""
+    from repro.core import Profile, ProfileRegion
+    hot = -(-PREFIX_TOKENS // layout.block_tokens)
+    return Profile("chat", [
+        ProfileRegion(0, hot, (0, 150_000, 600_000, 2_500_000)),
+        ProfileRegion(hot, layout.max_blocks, (0, 0, 0, 0)),
+    ])
+
+
+def build_engine(setup, lane: str):
+    from repro.serving import ServingEngine
+    cfg, params, layout = setup
+    if lane == "offline":
+        return ServingEngine(cfg, params, layout, max_batch=4,
+                             policy="ebpf", profile=offline_profile(layout))
+    if lane == "auto":
+        return ServingEngine(cfg, params, layout, max_batch=4,
+                             policy="ebpf", profile="auto",
+                             profile_period=AUTO_PERIOD)
+    if lane == "none":
+        return ServingEngine(cfg, params, layout, max_batch=4,
+                             policy="never")
+    raise ValueError(f"unknown lane {lane!r}")
+
+
+def run_pass(eng, *, seed: int, rid_base: int) -> dict:
+    """One measured pass of the stream through an existing engine.  The
+    caller decides whether it counts (pass 0 of a cell is the warmer)."""
+    cfg = eng.cfg
+    s0 = eng.stats.snapshot()
+    m0 = eng.mm.stats.snapshot()
+    for req in make_traffic(seed, cfg.vocab, rid_base=rid_base):
+        eng.submit(req)
+    t0 = time.perf_counter()
+    out = eng.run(max_steps=5000)
+    wall = time.perf_counter() - t0
+    s1, m1 = out["engine"], out["mm"]
+    assert s1["completed"] - s0["completed"] == N_REQ, "stream did not drain"
+    steps = s1["steps"] - s0["steps"]
+    res = {
+        "requests": N_REQ,
+        "steps": steps,
+        "steps_per_s": steps / wall,
+        "wall_s": wall,
+        "access_ns": m1["access_ns"] - m0["access_ns"],
+        "descriptors_touched": (m1["descriptors_touched"]
+                                - m0["descriptors_touched"]),
+        "hinted_faults": m1["hinted_faults"] - m0["hinted_faults"],
+        "fallback_faults": m1["fallback_faults"] - m0["fallback_faults"],
+        "huge_fraction": out["huge_fraction"],
+    }
+    if eng.profiler is not None:
+        res["profiler_scans"] = out["profiler"]["scans"]
+        res["profiler_reloads"] = out["profiler"]["reloads"]
+    return res
+
+
+def run_cell(setup, *, lane: str, seed: int = 0,
+             passes: int = PASSES) -> dict:
+    eng = build_engine(setup, lane)
+    run_pass(eng, seed=seed, rid_base=10_000)     # warm + converge, untimed
+    cell = None
+    for p in range(passes):
+        r = run_pass(eng, seed=seed + 1 + p, rid_base=(p + 1) * 1000)
+        if cell is None or r["steps_per_s"] > cell["steps_per_s"]:
+            cell = r                    # best-of: wall jitter, not work,
+    cell["lane"] = lane                 # varies between passes
+    return cell
+
+
+def summarize(cells: list[dict]) -> dict:
+    by = {c["lane"]: c for c in cells}
+    auto, offline, none = by["auto"], by["offline"], by["none"]
+    return {
+        "auto_vs_offline_steps_ratio":
+            auto["steps_per_s"] / offline["steps_per_s"],
+        "auto_vs_none_steps_ratio":
+            auto["steps_per_s"] / none["steps_per_s"],
+        "auto_vs_none_access_ratio":
+            auto["access_ns"] / max(1, none["access_ns"]),
+        "auto_hinted_faults": auto["hinted_faults"],
+        "auto_huge_fraction": auto["huge_fraction"],
+        "offline_huge_fraction": offline["huge_fraction"],
+        "profiler_reloads": auto.get("profiler_reloads", 0),
+        "profiler_scans": auto.get("profiler_scans", 0),
+    }
+
+
+def run_all(lanes=LANES, seed: int = 0) -> dict:
+    setup = _setup()
+    cells = [run_cell(setup, lane=lane, seed=seed) for lane in lanes]
+    return {"bench": "profile", "cells": cells, "summary": summarize(cells)}
+
+
+def main():
+    doc = run_all()
+    lines = []
+    for c in doc["cells"]:
+        lines.append(
+            f"profile_{c['lane']},"
+            f"{1e6 / c['steps_per_s']:.1f},"
+            f"steps_per_s={c['steps_per_s']:.2f};"
+            f"access_ns={c['access_ns']};"
+            f"hinted={c['hinted_faults']};"
+            f"huge_frac={c['huge_fraction']:.3f}")
+    s = doc["summary"]
+    lines.append(f"profile_summary,0,"
+                 f"auto_vs_offline={s['auto_vs_offline_steps_ratio']:.3f};"
+                 f"auto_vs_none_access="
+                 f"{s['auto_vs_none_access_ratio']:.3f};"
+                 f"reloads={s['profiler_reloads']}")
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the full result document to FILE")
+    args = ap.parse_args()
+    if args.json:
+        doc = run_all()
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {args.json}")
+        s = doc["summary"]
+        print(f"  auto/offline steps/s ratio "
+              f"{s['auto_vs_offline_steps_ratio']:.3f}, "
+              f"auto/none modeled access "
+              f"{s['auto_vs_none_access_ratio']:.3f}, "
+              f"reloads {s['profiler_reloads']}, "
+              f"hinted faults {s['auto_hinted_faults']}")
+    else:
+        for line in main():
+            print(line)

@@ -17,6 +17,12 @@ Run:  PYTHONPATH=src python examples/serve_paged.py [--arch gemma3_27b]
       PYTHONPATH=src python examples/serve_paged.py \
           --hbm-blocks 48 --host-blocks 256 --chaos 7   # chaos: seeded
           # deterministic fault injection + live ring-event consumption
+      PYTHONPATH=src python examples/serve_paged.py \
+          --profile auto --trace out/trace.json \
+          --wss-curve out/wss.json   # online profiling: no profile loaded,
+          # a verified profiler program samples the live DAMON regions and
+          # synthesized profiles hot-reload mid-run (WSS curve + reloads
+          # appear on the trace's "mm profiler" track)
 """
 
 import argparse
@@ -34,6 +40,17 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="gemma3_27b")
 ap.add_argument("--policy", default="ebpf",
                 choices=["ebpf", "thp", "never"])
+ap.add_argument("--profile", default="demo", metavar="auto|FILE|none",
+                help="profile source for --policy ebpf: 'auto' = online "
+                     "synthesis (a verified profiler program samples the "
+                     "live DAMON regions and synthesized profiles hot-"
+                     "reload mid-run), FILE = a profile JSON "
+                     "(Profile.to_json), 'none' = no profile (non-ebpf "
+                     "policies only), default = the built-in hot-prefix "
+                     "demo profile")
+ap.add_argument("--wss-curve", default="", metavar="FILE",
+                help="with --profile auto: dump the online profiler's "
+                     "per-process WSS curve JSON to FILE at exit")
 ap.add_argument("--requests", type=int, default=8)
 ap.add_argument("--hbm-blocks", type=int, default=512,
                 help="modeled HBM pool size in blocks")
@@ -91,10 +108,22 @@ params = materialize(jax.random.PRNGKey(0), model_spec(cfg))
 layout = PagedLayout(num_blocks=args.hbm_blocks, block_tokens=4,
                      max_blocks=32)
 
-profile = Profile("chat", [
-    ProfileRegion(0, 8, (0, 150_000, 600_000, 2_500_000)),   # hot prefix
-    ProfileRegion(8, 32, (0, 0, 0, 0)),                      # cold tail
-]) if args.policy == "ebpf" else None
+if args.policy != "ebpf" or args.profile == "none":
+    if args.policy == "ebpf":
+        ap.error("--profile none requires a non-ebpf --policy "
+                 "(the eBPF policy needs a profile source; try "
+                 "--profile auto)")
+    profile = None
+elif args.profile == "auto":
+    profile = "auto"
+elif args.profile == "demo":
+    profile = Profile("chat", [
+        ProfileRegion(0, 8, (0, 150_000, 600_000, 2_500_000)),  # hot prefix
+        ProfileRegion(8, 32, (0, 0, 0, 0)),                     # cold tail
+    ])
+else:
+    with open(args.profile) as f:
+        profile = Profile.from_json(f.read())
 
 telemetry = True if (args.trace or args.metrics or
                      args.chaos is not None) else None
@@ -156,6 +185,13 @@ if args.chaos is not None:
 for rid in sorted(engine.finished)[:3]:
     print(f"request {rid}: generated {engine.finished[rid][:10]}...")
 
+if engine.profiler is not None:
+    p = engine.profiler.snapshot()
+    print(f"online profiler: {p['scans']} scans, {p['reloads']} reloads, "
+          f"apps={json.dumps(p['apps'])}")
+    if args.wss_curve:
+        engine.write_wss_curve(args.wss_curve)
+        print(f"wrote WSS curve to {args.wss_curve}")
 if args.trace:
     engine.write_trace(args.trace)
     print(f"wrote Chrome trace to {args.trace} (open in ui.perfetto.dev)")

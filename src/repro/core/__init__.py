@@ -20,6 +20,9 @@ The paper's contribution as a composable library:
   * :mod:`tiering` — N-pool tiered placement behind ``HOOK_TIER`` (per-tier
     buddy pools for peer-HBM / host DRAM / NVMe, per-edge-costed multi-hop
     migration engine, demote/promote scans, prefill-time placement).
+  * :mod:`wss` — online profile synthesis: the host consumer of the sampled
+    ``HOOK_PROFILE`` surface (verified WSS/heat profiler programs over the
+    live DAMON stream), hot-reloading synthesized profiles mid-run.
 """
 
 from .buddy import BuddyAllocator, BuddyError, BuddyStats, order_blocks
@@ -30,8 +33,8 @@ from .context import (CTX, CTX_LEN, EVICT_DROP, FIXED_POINT, MAX_TIERS,
 from .cost import (CostModel, HWSpec, TierSpec, default_tier_chain,
                    host_dram_tier, make_cost_model, nvme_tier, peer_hbm_tier)
 from .damon import Damon, Region
-from .hooks import (HOOK_EVICT, HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER,
-                    HookRegistry)
+from .hooks import (HOOK_EVICT, HOOK_FAULT, HOOK_PROFILE, HOOK_RECLAIM,
+                    HOOK_TIER, HookRegistry)
 from .isa import Asm, Insn, Op, Program
 from .jit import JitPolicy, compile_program
 from .khugepaged import Khugepaged, KhugepagedConfig
@@ -45,11 +48,13 @@ from .profiles import (MAX_PROFILE_REGIONS, REGION_STRIDE, Profile,
                        ProfileRegion, profile_from_heat)
 from .programs import (ebpf_mm_program, evict_ghost_program,
                        evict_lfu_program, evict_lru_program, never_program,
-                       reclaim_lru_program, thp_always_program,
-                       tier_damon_program, tier_edge_admission_program,
-                       tier_heat_band_program, tier_lru_program,
-                       tier_never_program)
+                       profile_benefit_program, profile_heat_histogram_program,
+                       profile_wss_program, reclaim_lru_program,
+                       thp_always_program, tier_damon_program,
+                       tier_edge_admission_program, tier_heat_band_program,
+                       tier_lru_program, tier_never_program)
 from .tiering import (TIER_HBM, TIER_HOST, TierConfig, TieredMemoryManager)
+from .wss import ProfileSynthesizer
 from .verifier import VerifierError, verify
 from .vm import (HELPER_IDS, HELPER_KTIME, HELPER_MIGRATE_COST,
                  HELPER_PROMOTION_COST, HELPER_RINGBUF_OUTPUT, HELPER_TRACE,

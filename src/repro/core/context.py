@@ -112,7 +112,16 @@ class CTX(enum.IntEnum):
     CACHE_ENTRIES = 60       # live entries in the cache index
     CACHE_CAP_BLOCKS = 61    # configured HBM budget for cached prefixes
     CACHE_USED_BLOCKS = 62   # HBM blocks currently held by cached prefixes
-    CTX_LEN = 63             # number of fields; keep last
+    # Online-profiler candidate state (mm_profile hook only).  One batch row
+    # per live DAMON region of the sampled pid; PID / KTIME_NS / the buddy +
+    # tier columns carry the usual system snapshot.
+    PROF_REGION_START = 63   # region start, logical blocks
+    PROF_REGION_END = 64     # region end (exclusive), logical blocks
+    PROF_REGION_HEAT = 65    # region nr_accesses EMA, FIXED_POINT-scaled
+    PROF_REGION_AGE = 66     # aggregation windows since the region changed
+    PROF_MAPPED_BLOCKS = 67  # blocks currently mapped for the sampled pid
+    PROF_WINDOW = 68         # DAMON aggregation window counter (version)
+    CTX_LEN = 69             # number of fields; keep last
 
 
 CTX_LEN = int(CTX.CTX_LEN)
@@ -169,6 +178,12 @@ class FaultContext:
     cache_entries: int = 0
     cache_cap_blocks: int = 0
     cache_used_blocks: int = 0
+    prof_region_start: int = 0
+    prof_region_end: int = 0
+    prof_region_heat: int = 0
+    prof_region_age: int = 0
+    prof_mapped_blocks: int = 0
+    prof_window: int = 0
 
     def vector(self) -> np.ndarray:
         v = np.zeros(CTX_LEN, dtype=np.int64)
@@ -215,6 +230,12 @@ class FaultContext:
         v[CTX.CACHE_ENTRIES] = self.cache_entries
         v[CTX.CACHE_CAP_BLOCKS] = self.cache_cap_blocks
         v[CTX.CACHE_USED_BLOCKS] = self.cache_used_blocks
+        v[CTX.PROF_REGION_START] = self.prof_region_start
+        v[CTX.PROF_REGION_END] = self.prof_region_end
+        v[CTX.PROF_REGION_HEAT] = self.prof_region_heat
+        v[CTX.PROF_REGION_AGE] = self.prof_region_age
+        v[CTX.PROF_MAPPED_BLOCKS] = self.prof_mapped_blocks
+        v[CTX.PROF_WINDOW] = self.prof_window
         return v
 
 
@@ -312,3 +333,10 @@ TIER_DEMOTE = 1
 # the natural "past the end of the chain" encoding and is always a VALID
 # program return (the supervisor only strikes sub-FALLBACK sentinels).
 EVICT_DROP = MAX_TIERS
+
+# Return-value convention for profiler (mm_profile) programs: the return
+# value is the region's HOT SCORE (>= 0, FIXED_POINT-scaled) — 0 marks the
+# region cold; the ProfileSynthesizer folds positive scores (plus whatever
+# the program emitted through bpf_ringbuf_output) into the online profile.
+# FALLBACK defers the region to host-side synthesis from raw DAMON heat.
+PROFILE_COLD = 0

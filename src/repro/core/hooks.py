@@ -43,8 +43,9 @@ HOOK_FAULT = "mm_fault"            # page-size decision on fault (the paper's ho
 HOOK_RECLAIM = "mm_reclaim"        # victim selection under memory pressure
 HOOK_TIER = "mm_tier"              # page placement for tiering (future work in paper)
 HOOK_EVICT = "mm_evict"            # prefix-cache eviction (Cache-is-King mold)
+HOOK_PROFILE = "mm_profile"        # sampled profiler on the DAMON aggregation tick
 
-KNOWN_HOOKS = (HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HOOK_EVICT)
+KNOWN_HOOKS = (HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER, HOOK_EVICT, HOOK_PROFILE)
 HOOK_INDEX = {h: i for i, h in enumerate(KNOWN_HOOKS)}
 
 

@@ -22,13 +22,13 @@ import numpy as np
 from ..obs.ringbuf import (EV_COLLAPSE, EV_COMPACT, EV_FAULT, EV_RECLAIM)
 from ..resilience.supervisor import PolicySupervisor
 from .buddy import RADIX, BuddyAllocator, BuddyError, order_blocks
-from .context import (CTX, CTX_LEN, MAX_TIERS, NUM_ORDERS, POLICY_DETACHED,
-                      POLICY_FALLBACK, FaultContext, FaultKind, ctx_batch,
-                      fill_system_columns)
+from .context import (CTX, CTX_LEN, FIXED_POINT, MAX_TIERS, NUM_ORDERS,
+                      POLICY_DETACHED, POLICY_FALLBACK, FaultContext,
+                      FaultKind, ctx_batch, fill_system_columns)
 from .cost import CostModel
 from .damon import Damon
-from .hooks import (HOOK_EVICT, HOOK_FAULT, HOOK_RECLAIM, HOOK_TIER,
-                    HookRegistry)
+from .hooks import (HOOK_EVICT, HOOK_FAULT, HOOK_PROFILE, HOOK_RECLAIM,
+                    HOOK_TIER, HookRegistry)
 from .maps import ArrayMap, MapRegistry
 from .profiles import MAX_PROFILE_REGIONS, Profile
 
@@ -220,6 +220,53 @@ class MemoryManager:
 
     def attach_evict_program(self, program) -> None:
         self.hooks.attach(HOOK_EVICT, program, self.maps)
+
+    def attach_profile_program(self, program) -> None:
+        self.hooks.attach(HOOK_PROFILE, program, self.maps)
+
+    # ------------------------------------------------------- online profiling
+    def profile_scan(self, pid: int) -> list[tuple] | None:
+        """One batched ``HOOK_PROFILE`` invocation over ``pid``'s live DAMON
+        regions — the sampled profiler surface on the aggregation tick.
+
+        Each ctx row is one region (PROF_* columns: bounds, FIXED_POINT
+        access EMA, age, the pid's mapped-block count and the DAMON window
+        counter) over the usual shared system snapshot, mirroring the
+        tier/evict scan builders.  Returns rows aligned with the region
+        snapshot, ``(start, end, heat_milli, age, score)`` where ``score``
+        is the program's return value (POLICY_FALLBACK rows defer to
+        host-side synthesis from raw heat; POLICY_DETACHED rows follow a
+        mid-scan supervisor detach).  Returns None when no profiler program
+        is attached — the scan builds no ctx at all, the zero-overhead
+        property every hook keeps."""
+        if not self.hooks.attached(HOOK_PROFILE):
+            return None
+        st = self.procs[pid]
+        regions = st.damon.regions
+        n = len(regions)
+        if n == 0:
+            return []
+        mat = ctx_batch(n)
+        fill_system_columns(mat, **self.system_ctx_columns())
+        mat[:, CTX.PID] = st.pid
+        mat[:, CTX.VMA_END] = st.vma_end
+        mat[:, CTX.SEQ_LEN] = st.vma_end
+        mat[:, CTX.PROF_MAPPED_BLOCKS] = len(st.mapped)
+        mat[:, CTX.PROF_WINDOW] = st.damon.version
+        mat[:, CTX.PROF_REGION_START] = \
+            np.fromiter((r.start for r in regions), np.int64, n)
+        mat[:, CTX.PROF_REGION_END] = \
+            np.fromiter((r.end for r in regions), np.int64, n)
+        mat[:, CTX.PROF_REGION_HEAT] = np.fromiter(
+            (int(r.nr_accesses * FIXED_POINT) for r in regions), np.int64, n)
+        mat[:, CTX.PROF_REGION_AGE] = \
+            np.fromiter((r.age for r in regions), np.int64, n)
+        decisions = self.hooks.run_batch(HOOK_PROFILE, mat)
+        return [(int(mat[i, CTX.PROF_REGION_START]),
+                 int(mat[i, CTX.PROF_REGION_END]),
+                 int(mat[i, CTX.PROF_REGION_HEAT]),
+                 int(mat[i, CTX.PROF_REGION_AGE]),
+                 int(decisions[i])) for i in range(n)]
 
     # ------------------------------------------------------------- processes
     def create_process(self, pid: int, *, app: str | None = None,

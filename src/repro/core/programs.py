@@ -34,7 +34,8 @@ from .isa import Asm, Program
 from .profiles import MAX_PROFILE_REGIONS, REGION_STRIDE
 from .vm import (HELPER_MIGRATE_COST, HELPER_PROMOTION_COST,
                  HELPER_RINGBUF_OUTPUT)
-from ..obs.ringbuf import EV_PROG_BASE
+from ..obs.ringbuf import (EV_PROG_BASE, PROF_TAG_BENEFIT, PROF_TAG_HEAT,
+                           PROF_TAG_WSS)
 
 
 def ebpf_mm_program(profile_map_id: int | None = None,
@@ -518,6 +519,120 @@ def evict_ghost_program(retain_milli: int = 150,
     a.ldctx("r0", CTX.PAGE_TIER)
     a.exit()
     return a.build("evict_ghost")
+
+
+def profile_wss_program(idle_milli: int = 50) -> Program:
+    """Per-region WSS / idle-page estimator for the mm_profile hook.
+
+    Profile ctx rows are live DAMON regions (PROF_* columns); the program
+    classifies each region against an idle threshold the way the WSS paper's
+    in-kernel estimator classifies idle pages: a region whose access EMA is
+    below ``idle_milli`` (FIXED_POINT-scaled accesses/window) contributes 0
+    blocks to the working set, anything else contributes its full span.  The
+    per-region contribution is emitted through bpf_ringbuf_output
+    (PROF_TAG_WSS) so the host synthesizer can fold the samples into a WSS
+    curve; the return value is the region's hot score (its heat, or
+    PROFILE_COLD for idle regions).
+    """
+    a = Asm()
+    a.ldctx("r6", CTX.PROF_REGION_END)
+    a.ldctx("r7", CTX.PROF_REGION_START)
+    a.sub("r6", "r7")                        # region span, blocks
+    a.ldctx("r8", CTX.PROF_REGION_HEAT)
+    a.movi("r5", 0)                          # WSS contribution
+    a.movi("r9", 0)                          # hot score (PROFILE_COLD)
+    a.jlti("r8", idle_milli, "emit")         # idle: contributes nothing
+    a.mov("r5", "r6")
+    a.mov("r9", "r8")
+    a.label("emit")
+    a.movi("r1", PROF_TAG_WSS)
+    a.ldctx("r2", CTX.PID)
+    a.mov("r3", "r5")
+    a.mov("r4", "r6")
+    a.call(HELPER_RINGBUF_OUTPUT)
+    a.mov("r0", "r9")
+    a.exit()
+    return a.build("profile_wss")
+
+
+def profile_heat_histogram_program() -> Program:
+    """Log2 heat-histogram accumulator for the mm_profile hook.
+
+    Buckets each DAMON region by ``floor(log2(heat))`` with a verified
+    bounded loop (the shift-count idiom an in-kernel histogram program
+    uses), and emits (pid, bucket, region blocks) through
+    bpf_ringbuf_output (PROF_TAG_HEAT) — one histogram sample per region
+    per aggregation window.  Returns the bucket index.
+    """
+    a = Asm()
+    a.ldctx("r2", CTX.PROF_REGION_HEAT)
+    a.ldctx("r6", CTX.PROF_REGION_END)
+    a.ldctx("r7", CTX.PROF_REGION_START)
+    a.sub("r6", "r7")                        # region span, blocks
+    a.movi("r5", 0)                          # bucket = floor(log2(heat))
+    a.movi("r3", 31)                         # verifier loop bound
+    a.label("log2")
+    a.jlei("r2", 1, "emit")
+    a.divi("r2", 2)
+    a.addi("r5", 1)
+    a.jnzdec("r3", "log2")
+    a.label("emit")
+    a.movi("r1", PROF_TAG_HEAT)
+    a.ldctx("r2", CTX.PID)
+    a.mov("r3", "r5")
+    a.mov("r4", "r6")
+    a.call(HELPER_RINGBUF_OUTPUT)
+    a.mov("r0", "r5")
+    a.exit()
+    return a.build("profile_heat_hist")
+
+
+def profile_benefit_program(heat_weight_milli: int = 1000) -> Program:
+    """Promotion-benefit scorer for the mm_profile hook (CBMM mold).
+
+    For each DAMON region, estimates what a profile entry is worth: the
+    per-window TLB/descriptor saving of mapping the region at order k
+    (heat x descriptor_ns x (4^k - 1), heat FIXED_POINT-divided back out)
+    minus the live promotion cost from real-time buddy state
+    (bpf_mm_promotion_cost) — the same cost/benefit arithmetic the Fig-1
+    fault program applies at fault time, run SPECULATIVELY over the region
+    stream so the synthesizer can write the winning benefit into the
+    region's profile entry before any fault touches it.  Emits
+    (region start, best order, net benefit) via bpf_ringbuf_output
+    (PROF_TAG_BENEFIT); returns the best net benefit (0 = not worth it).
+    """
+    a = Asm()
+    a.ldctx("r8", CTX.PROF_REGION_HEAT)
+    a.movi("r10", 0)                         # best net benefit
+    a.movi("r7", 0)                          # best order
+    for k in (1, 2, 3):
+        skip = f"skip_{k}"
+        a.ldctx("r6", CTX.PROF_REGION_END)
+        a.ldctx("r5", CTX.PROF_REGION_START)
+        a.sub("r6", "r5")
+        a.jlti("r6", 4 ** k, skip)           # order must fit in the region
+        a.mov("r9", "r8")
+        a.muli("r9", heat_weight_milli)
+        a.divi("r9", 1000)
+        a.ldctx("r4", CTX.DESCRIPTOR_NS)
+        a.mul("r9", "r4")
+        a.muli("r9", (4 ** k) - 1)
+        a.divi("r9", 1000)                   # heat is FIXED_POINT-scaled
+        a.movi("r1", k)
+        a.call(HELPER_PROMOTION_COST)        # r0 = cost ns
+        a.sub("r9", "r0")
+        a.jle("r9", "r10", skip)
+        a.mov("r10", "r9")
+        a.movi("r7", k)
+        a.label(skip)
+    a.movi("r1", PROF_TAG_BENEFIT)
+    a.ldctx("r2", CTX.PROF_REGION_START)
+    a.mov("r3", "r7")
+    a.mov("r4", "r10")
+    a.call(HELPER_RINGBUF_OUTPUT)
+    a.mov("r0", "r10")
+    a.exit()
+    return a.build("profile_benefit")
 
 
 def reclaim_lru_program() -> Program:

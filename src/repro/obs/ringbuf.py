@@ -43,11 +43,23 @@ EV_READMIT = 13       # a0=edge, a1=errors so far, a2=successes so far
 EV_CACHE_HIT = 14     # a0=pid, a1=blocks reused, a2=tokens skipped
 EV_EVICT = 15         # a0=entry id, a1=blocks, a2=target tier | dropped<<8
 
+# Online-profiling tracepoints (modeled-clock timestamps):
+EV_PROFILE = 17       # a0=pid, a1=regions in synthesized profile, a2=version
+EV_WSS = 18           # a0=pid, a1=WSS estimate (blocks), a2=mapped blocks
+
 # Program-emitted tags: HELPER_TRACE lands on EV_PROG_TRACE (a0 = r1);
 # bpf_ringbuf_output carries an arbitrary program tag in r1 — programs
 # should use tags >= EV_PROG_BASE to stay clear of the framework range.
 EV_PROG_TRACE = 16
 EV_PROG_BASE = 32
+
+# Well-known profiler program tags (mm_profile programs emit these through
+# bpf_ringbuf_output; >= EV_PROG_BASE like every program tag).  Defined here
+# rather than next to the programs so the exporters can key on them without
+# importing the core package:
+PROF_TAG_WSS = EV_PROG_BASE + 1       # a0=pid, a1=WSS contribution, a2=blocks
+PROF_TAG_HEAT = EV_PROG_BASE + 2      # a0=pid, a1=log2 heat bucket, a2=blocks
+PROF_TAG_BENEFIT = EV_PROG_BASE + 3   # a0=region start, a1=best order, a2=net ns
 
 _TAG_NAMES = {
     EV_FAULT: "mm_fault", EV_MIGRATE_HOP: "migrate_hop",
@@ -56,7 +68,9 @@ _TAG_NAMES = {
     EV_COLLAPSE: "collapse", EV_DETACH: "detach",
     EV_QUARANTINE: "quarantine", EV_RETRY: "migrate_retry",
     EV_READMIT: "readmit", EV_CACHE_HIT: "cache_hit", EV_EVICT: "evict",
-    EV_PROG_TRACE: "prog_trace",
+    EV_PROG_TRACE: "prog_trace", EV_PROFILE: "profile_reload",
+    EV_WSS: "wss_sample", PROF_TAG_WSS: "prof_wss",
+    PROF_TAG_HEAT: "prof_heat", PROF_TAG_BENEFIT: "prof_benefit",
 }
 
 

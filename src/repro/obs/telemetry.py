@@ -33,6 +33,10 @@ class Telemetry:
         self.hook_batch_size: dict[str, Log2Hist] = {}
         self.migrate_path_ns = Log2Hist()   # modeled cost per migration hop
         self.mgmt_step_ns = Log2Hist()      # wall per management step (bench)
+        # Per-request serving latency: wall ns from submit to the first
+        # sampled token, and wall ns per generated decode token.
+        self.request_ttft_ns = Log2Hist()
+        self.decode_token_ns = Log2Hist()
         self.counters: dict[str, int] = {}
         # drops at the PROGRAM layer: per-lane event slots exhausted inside
         # one invocation (distinct from ring overflow, which is host-side)
@@ -76,6 +80,19 @@ class Telemetry:
     def observe_migrate(self, ns: int) -> None:
         if self.enabled:
             self.migrate_path_ns.observe(ns)
+
+    def observe_ttft(self, wall_ns: int) -> None:
+        if self.enabled:
+            self.request_ttft_ns.observe(wall_ns)
+
+    def observe_decode_token(self, wall_ns: int, tokens: int = 1) -> None:
+        """Per-token decode latency: a decode step that produced ``tokens``
+        tokens in ``wall_ns`` contributes one observation per token at the
+        per-token share."""
+        if self.enabled and tokens > 0:
+            per = wall_ns // tokens
+            for _ in range(tokens):
+                self.decode_token_ns.observe(per)
 
     def observe_residency(self, tiers, orders, sizes) -> None:
         """Accumulate per-(tier, order) resident block-ticks — callers pass
@@ -141,6 +158,8 @@ class Telemetry:
             "hooks": hooks,
             "migrate_path_ns": self.migrate_path_ns.snapshot(),
             "mgmt_step_ns": self.mgmt_step_ns.snapshot(),
+            "request_ttft_ns": self.request_ttft_ns.snapshot(),
+            "decode_token_ns": self.decode_token_ns.snapshot(),
             "counters": dict(self.counters),
             "residency_block_ticks": {
                 f"t{t}_o{o}": int(v)

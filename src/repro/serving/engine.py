@@ -54,13 +54,14 @@ from ..obs.ringbuf import EV_PREEMPT
 from ..configs.base import ModelConfig
 from ..core import (MAX_PROFILE_REGIONS, FaultKind, HWSpec, Khugepaged,
                     KhugepagedConfig, MemoryManager, MMOutOfMemory, Profile,
-                    TieredMemoryManager, default_tier_chain, ebpf_mm_program,
-                    make_cost_model, never_program, reclaim_lru_program,
+                    ProfileSynthesizer, TieredMemoryManager,
+                    default_tier_chain, ebpf_mm_program, make_cost_model,
+                    never_program, profile_wss_program, reclaim_lru_program,
                     thp_always_program, tier_damon_program,
                     tier_edge_admission_program, tier_heat_band_program,
                     tier_lru_program, tier_never_program)
 from ..core.buddy import order_blocks
-from ..core.hooks import HOOK_EVICT, HOOK_FAULT, HOOK_TIER
+from ..core.hooks import HOOK_EVICT, HOOK_FAULT, HOOK_PROFILE, HOOK_TIER
 from ..core.programs import (evict_ghost_program, evict_lfu_program,
                              evict_lru_program)
 from ..resilience import FailureInjector
@@ -135,7 +136,8 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params: Pytree, layout: PagedLayout,
                  *, max_batch: int = 4, policy: str = "ebpf",
-                 profile: Profile | None = None, hw: HWSpec | None = None,
+                 profile: "Profile | list | str | None" = None,
+                 profile_period: int = 4, hw: HWSpec | None = None,
                  khugepaged: bool = True, seed: int = 0,
                  cache_dtype=jnp.bfloat16,
                  host_blocks: int = 0, tier_blocks=None,
@@ -229,22 +231,48 @@ class ServingEngine:
                                     containment=self.containment)
         self._pool_blocks = layout.num_blocks + sum(self.tier_blocks)
         self.mm.attach_reclaim_program(reclaim_lru_program())
+        self.profiler: ProfileSynthesizer | None = None
         if policy == "ebpf":
             if profile is None:
-                raise ValueError("policy='ebpf' needs a profile (or list)")
-            profiles = profile if isinstance(profile, (list, tuple)) \
-                else [profile]
-            for prof in profiles:
-                self.mm.load_profile(prof)
-            # One program serves every app via the indirect profile-map load.
-            # The verified search loop is right-sized to the profiles
-            # actually loaded (rounded up to a power of two): it keeps the
-            # predicated batch executor's one-time compile fast without
-            # changing any decision.
-            nreg = max((len(p.regions) for p in profiles), default=0)
-            bound = min(max(8, 1 << max(0, nreg - 1).bit_length()),
-                        MAX_PROFILE_REGIONS)
-            self.mm.attach_fault_program(ebpf_mm_program(max_regions=bound))
+                raise ValueError(
+                    "policy='ebpf' needs a profile (or list, or 'auto')")
+            if isinstance(profile, str):
+                if profile != "auto":
+                    raise ValueError(f"unknown profile mode {profile!r}")
+                # Online profiling plane: start with NO profile loaded.  A
+                # verified profiler program samples the live DAMON regions
+                # on the mm tick (HOOK_PROFILE) and the ProfileSynthesizer
+                # hot-reloads synthesized profiles mid-run, so placement
+                # converges to what an offline profiling run would load.
+                # max_regions=8 keeps the fault program's verified search
+                # loop the same shape as a small offline profile's.
+                bound = 8
+                # an EMPTY profile registers the map slot the verifier's
+                # indirect-load check needs; the synthesizer's reloads are
+                # map WRITEs into slots registered the same way
+                self.mm.load_profile(Profile("_default", []))
+                self.mm.attach_fault_program(
+                    ebpf_mm_program(max_regions=bound))
+                self.mm.attach_profile_program(profile_wss_program())
+                self.profiler = ProfileSynthesizer(
+                    self.mm, cost, period=profile_period,
+                    max_regions=bound, telemetry=self.telemetry)
+                self.mm.hooks.warm(HOOK_PROFILE, max_batch=16)
+            else:
+                profiles = profile if isinstance(profile, (list, tuple)) \
+                    else [profile]
+                for prof in profiles:
+                    self.mm.load_profile(prof)
+                # One program serves every app via the indirect profile-map
+                # load.  The verified search loop is right-sized to the
+                # profiles actually loaded (rounded up to a power of two):
+                # it keeps the predicated batch executor's one-time compile
+                # fast without changing any decision.
+                nreg = max((len(p.regions) for p in profiles), default=0)
+                bound = min(max(8, 1 << max(0, nreg - 1).bit_length()),
+                            MAX_PROFILE_REGIONS)
+                self.mm.attach_fault_program(
+                    ebpf_mm_program(max_regions=bound))
         elif policy == "thp-prog":
             self.mm.attach_fault_program(thp_always_program())
         elif policy == "never-prog":
@@ -306,6 +334,9 @@ class ServingEngine:
         self.active: dict[int, SeqState] = {}    # slot -> seq
         self._next_pid = 1
         self.finished: dict[int, list[int]] = {}
+        # rid -> [trace-clock t0, wall t0 or None once TTFT was observed]:
+        # per-request serving-latency bookkeeping (telemetry only)
+        self._req_t0: dict[int, list] = {}
         # per-app aggregate per-logical-block heat — the DAMON trace used by
         # offline profiling (profile_from_heat)
         self.heat_histograms: dict[str, np.ndarray] = {}
@@ -385,6 +416,9 @@ class ServingEngine:
         return tel.span(name, cat="engine", tid=tid)
 
     def submit(self, req: Request) -> None:
+        tel = self.telemetry
+        if tel is not None and tel.enabled and req.rid not in self._req_t0:
+            self._req_t0[req.rid] = [tel.now(), time.perf_counter_ns()]
         self.waiting.append(req)
 
     def _free_slots(self) -> list[int]:
@@ -405,7 +439,13 @@ class ServingEngine:
             total = len(req.prompt) + req.max_new_tokens
             vma_blocks = min(self._blocks_needed(total) + 1,
                              self.layout.max_blocks)
-            self.mm.create_process(pid, app=req.app, vma_blocks=vma_blocks)
+            app = req.app
+            if app is None and self.profiler is not None:
+                # auto-profiling keys synthesized profiles by app — give
+                # unlabeled requests the shared default bucket so the
+                # profile map lookup has something to hit
+                app = "_default"
+            self.mm.create_process(pid, app=app, vma_blocks=vma_blocks)
             nblocks = self._blocks_needed(len(req.prompt))
             # prefix-cache admission: borrow the longest cached prefix
             # read-only (page-table surgery, no kernel work), fault only the
@@ -446,6 +486,12 @@ class ServingEngine:
             self.active[slot] = seq
             with self._span(f"prefill rid={req.rid}"):
                 self._run_prefill(seq)
+            tel = self.telemetry
+            rec = self._req_t0.get(req.rid)
+            if tel is not None and rec is not None and rec[1] is not None:
+                # the prefill above sampled the request's first token
+                tel.observe_ttft(time.perf_counter_ns() - rec[1])
+                rec[1] = None
             if self.prefix_cache is not None:
                 # cache every whole block of the freshly prefilled prompt
                 # (existing chain entries are skipped; copies ride the next
@@ -682,8 +728,14 @@ class ServingEngine:
             if not self.active and not self.waiting:
                 return False
             if self.active:
+                tok0 = self.stats.decode_tokens
+                d0 = time.perf_counter_ns()
                 with self._span("decode"):
                     self._decode_once()
+                if tel is not None and tel.enabled:
+                    tel.observe_decode_token(
+                        time.perf_counter_ns() - d0,
+                        self.stats.decode_tokens - tok0)
             with self._span("mm-tick", tid="mm"):
                 if self.khugepaged is not None:
                     self.khugepaged.tick()
@@ -696,6 +748,12 @@ class ServingEngine:
                     self.prefix_cache.tick()
                 self._apply_pending_moves()
                 self.mm.tick()
+                if self.profiler is not None and self.active:
+                    # sampled HOOK_PROFILE scan + profile synthesis/reload
+                    self.profiler.tick(
+                        [(seq.pid, self.mm.procs[seq.pid].app)
+                         for seq in self.active.values()
+                         if seq.pid in self.mm.procs])
         self.stats.steps += 1
         dt = time.monotonic() - t0
         self.stats.wall_host_s += dt
@@ -850,6 +908,14 @@ class ServingEngine:
                 self.mm.free_process(seq.pid)
                 del self.active[slot]
                 self.stats.completed += 1
+                tel = self.telemetry
+                rec = self._req_t0.pop(seq.req.rid, None)
+                if rec is not None and tel is not None and tel.trace_enabled:
+                    # whole-request span (submit -> last token) on its own
+                    # trace row
+                    tel.spans.append((f"req {seq.req.rid}", "request",
+                                      "requests", rec[0],
+                                      tel.now() - rec[0]))
 
     def _apply_pending_moves(self) -> None:
         moves = self.mm.drain_moves()
@@ -912,6 +978,8 @@ class ServingEngine:
         if self.khugepaged is not None:
             out["khugepaged"] = {"collapsed": self.khugepaged.collapsed,
                                  "considered": self.khugepaged.considered}
+        if self.profiler is not None:
+            out["profiler"] = self.profiler.snapshot()
         if self.telemetry is not None and self.telemetry.enabled:
             out["telemetry"] = self.telemetry.snapshot()
         return out
@@ -925,6 +993,14 @@ class ServingEngine:
             raise ValueError("engine was built without telemetry "
                              "(pass trace=True or telemetry=...)")
         write_chrome_trace(self.telemetry, path)
+
+    def write_wss_curve(self, path) -> None:
+        """Dump the online profiler's per-process WSS curve as JSON
+        (samples of modeled time / WSS blocks / mapped blocks)."""
+        if self.profiler is None:
+            raise ValueError("engine has no online profiler "
+                             "(pass profile='auto')")
+        self.profiler.write_wss_curve(path)
 
     def metrics(self) -> dict:
         """Flat ``{metric_name: number}`` snapshot across every subsystem:
@@ -947,6 +1023,8 @@ class ServingEngine:
             res["health"] = self.mm.health.snapshot()
         if self.prefix_cache is not None:
             sections["prefix_cache"] = self.prefix_cache.snapshot()
+        if self.profiler is not None:
+            sections["profiler"] = self.profiler.snapshot()
         sections["resilience"] = res
         if self.telemetry is not None and self.telemetry.enabled:
             sections["telemetry"] = self.telemetry.snapshot()

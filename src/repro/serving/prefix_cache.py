@@ -147,6 +147,11 @@ class PrefixCache:
         mm.compaction_listeners.append(self._on_compaction)
 
     # ------------------------------------------------------------- accounting
+    def _inc(self, name: str, v: int = 1) -> None:
+        tel = self.telemetry
+        if tel is not None and tel.enabled:
+            tel.inc(name, v)
+
     def used_blocks(self, tier: int = 0) -> int:
         return sum(1 for e in self.entries.values() if e.blk.tier == tier)
 
@@ -191,10 +196,12 @@ class PrefixCache:
             if L >= 2:
                 self._ghost_probe(toks)
             self.misses += 1
+            self._inc("prefix_cache_misses")
             return None
         chain, missing = self._walk(toks)
         if missing is not None and missing in self.ghost:
             self.ghost_hits += 1
+            self._inc("prefix_cache_ghost_hits")
             self.ghost.move_to_end(missing)
         whole = min(len(chain), (L - 1) // self.bt)
         shared = whole * self.bt
@@ -214,6 +221,7 @@ class PrefixCache:
                 cow = whole
         if shared == 0:
             self.misses += 1
+            self._inc("prefix_cache_misses")
             return None
         now = self.mm.ktime_ns
         for e in entries:
@@ -236,6 +244,7 @@ class PrefixCache:
         keys = chunk_keys(toks, self.bt)
         if keys and keys[0] in self.ghost:
             self.ghost_hits += 1
+            self._inc("prefix_cache_ghost_hits")
             self.ghost.move_to_end(keys[0])
 
     def release(self, match: PrefixMatch) -> None:
@@ -288,6 +297,7 @@ class PrefixCache:
                             and key not in self.ghost):
                 self._door_mark(key)
                 self.door_rejects += 1
+                self._inc("prefix_cache_door_rejects")
                 rejected = True
                 continue
             if int(table[i]) < 0:       # unmapped (shouldn't happen post-
@@ -311,6 +321,8 @@ class PrefixCache:
             parent = key
             inserted += 1
         self.inserted_blocks += inserted
+        if inserted:
+            self._inc("prefix_cache_inserts", inserted)
         if self.used_blocks(0) > self.cap_blocks:
             self.scan()
         return inserted
@@ -378,11 +390,13 @@ class PrefixCache:
         if not self.entries:
             return 0
         self.scans += 1
+        self._inc("prefix_cache_scans")
         cands = sorted(self.entries.values(), key=lambda e: e.eid)
         decisions = None
         if self.mm.hooks.attached(HOOK_EVICT):
             mat = self._build_evict_ctx(cands)
             decisions = self.mm.hooks.run_batch(HOOK_EVICT, mat)
+            self._tally_decisions(cands, decisions)
         freed = 0
         if decisions is not None:
             dropped: set[bytes] = set()
@@ -414,6 +428,21 @@ class PrefixCache:
             else:
                 freed += self._demote(e, d)
         return freed
+
+    def _tally_decisions(self, cands: list[CacheEntry], decisions) -> None:
+        """Telemetry tally of the raw HOOK_EVICT verdicts of one scan —
+        keep / demote / drop / fallback counters for the Prometheus export
+        (tallied before pinning filters what actually gets applied)."""
+        tel = self.telemetry
+        if tel is None or not tel.enabled:
+            return
+        d = np.asarray(decisions)
+        tiers = np.fromiter((e.blk.tier for e in cands), np.int64, len(cands))
+        acted = (d >= 0) & (d < EVICT_DROP)
+        tel.inc("evict_decision_fallback", int(np.sum(d < 0)))
+        tel.inc("evict_decision_drop", int(np.sum(d >= EVICT_DROP)))
+        tel.inc("evict_decision_keep", int(np.sum(acted & (d == tiers))))
+        tel.inc("evict_decision_demote", int(np.sum(acted & (d != tiers))))
 
     def _default_decision(self, e: CacheEntry, still_needed: int) -> int:
         """The no-program policy for one entry: demote one tier when the

@@ -305,7 +305,8 @@ class TestTelemetrySchema:
     def test_snapshot_schema_stable(self):
         snap = _populated_telemetry().snapshot()
         assert set(snap) == {"enabled", "ring", "hooks", "migrate_path_ns",
-                             "mgmt_step_ns", "counters",
+                             "mgmt_step_ns", "request_ttft_ns",
+                             "decode_token_ns", "counters",
                              "residency_block_ticks"}
         assert set(snap["ring"]) == {"capacity", "pending", "emitted",
                                      "dropped", "prog_lane_drops"}
